@@ -1,0 +1,120 @@
+"""Shared harness for the paper-experiment benchmarks.
+
+Each ``fig*/table*`` module reproduces one paper table/figure on the
+synthetic stand-in datasets (offline container; see DESIGN.md §2 change 3)
+with the same partition protocol, algorithms and schedule as the paper.
+``--quick`` (the default under ``python -m benchmarks.run``) shrinks the
+topology/rounds so the whole suite finishes on a 1-core CPU; ``--full``
+uses the paper's 100-client/10-group setting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HFLConfig, global_model, hfl_init, make_global_round
+from repro.data.partition import partition, sample_round_batches
+from repro.data.synthetic import make_classification, train_test_split
+from repro.models.small import accuracy, make_loss, mlp
+
+RESULTS = Path(__file__).parent / "results"
+
+
+@dataclasses.dataclass
+class BenchSetup:
+    num_groups: int = 4
+    clients_per_group: int = 5
+    group_rounds: int = 4      # E
+    local_steps: int = 5       # H
+    rounds: int = 30           # T
+    lr: float = 0.1
+    batch: int = 32
+    dim: int = 32
+    num_classes: int = 10
+    samples: int = 6000
+    alpha: float = 0.1
+    mode: str = "both_noniid"
+    seed: int = 0
+    hidden: int = 64
+
+    @classmethod
+    def paper(cls):
+        """Sec. 5.1 scale: 100 clients over 10 groups, batch 50, lr 0.1."""
+        return cls(num_groups=10, clients_per_group=10, group_rounds=10,
+                   local_steps=20, rounds=100, batch=50, dim=64,
+                   samples=20000, hidden=200)
+
+
+def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
+                  mode: str | None = None, alpha: float | None = None,
+                  E: int | None = None, H: int | None = None,
+                  G: int | None = None, K: int | None = None,
+                  seed: int | None = None, rounds: int | None = None):
+    """Train one algorithm; returns dict(acc=[...], loss=[...], rounds=[...])."""
+    G = G or setup.num_groups
+    K = K or setup.clients_per_group
+    E = E or setup.group_rounds
+    H = H or setup.local_steps
+    seed = setup.seed if seed is None else seed
+    rounds = rounds or setup.rounds
+    rng = np.random.default_rng(seed)
+
+    ds = make_classification(rng, num_samples=setup.samples,
+                             num_classes=setup.num_classes, dim=setup.dim,
+                             noise=1.0)
+    train, test = train_test_split(ds, rng)
+    idx = partition(train.y, G, K, mode=mode or setup.mode,
+                    alpha=alpha if alpha is not None else setup.alpha,
+                    seed=seed)
+
+    init, apply = mlp(setup.num_classes, setup.dim, hidden=setup.hidden)
+    loss_fn = make_loss(apply)
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=setup.lr, algorithm=algorithm,
+                    prox_mu=0.01, feddyn_alpha=0.1)
+    state = hfl_init(init(jax.random.PRNGKey(seed)), cfg)
+    round_fn = jax.jit(make_global_round(loss_fn, cfg))
+
+    hist = {"round": [], "acc": [], "loss": []}
+    for t in range(rounds):
+        batches = sample_round_batches(train.x, train.y, idx, rng, E, H,
+                                       setup.batch)
+        state, metrics = round_fn(state, jax.tree.map(jnp.asarray, batches))
+        if (t + 1) % eval_every == 0 or t == rounds - 1:
+            acc = accuracy(apply, global_model(state),
+                           jnp.asarray(test.x), test.y)
+            hist["round"].append(t + 1)
+            hist["acc"].append(float(acc))
+            hist["loss"].append(float(np.mean(metrics.loss)))
+    return hist
+
+
+def rounds_to_accuracy(hist: dict, target: float) -> float:
+    for r, a in zip(hist["round"], hist["acc"]):
+        if a >= target:
+            return r
+    return float("inf")
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.csv"
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for row in rows:
+            f.write(",".join(str(x) for x in row) + "\n")
+    return path
+
+
+def report(name: str, rows: list[list], header: list[str]):
+    path = write_csv(name, header, rows)
+    print(f"[{name}] -> {path}")
+    print(",".join(header))
+    for row in rows:
+        print(",".join(f"{x:.4g}" if isinstance(x, float) else str(x)
+                       for x in row))

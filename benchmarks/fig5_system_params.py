@@ -1,0 +1,29 @@
+"""Paper Fig. 5 (App. B): effect of the number of groups / clients-per-group
+on each correction level."""
+from __future__ import annotations
+
+from benchmarks.common import BenchSetup, report, run_algorithm
+
+ALGOS = ("local_corr", "group_corr", "mtgc")
+
+
+def main(quick: bool = True) -> None:
+    setup = BenchSetup(rounds=25) if quick else BenchSetup.paper()
+    topos = [(2, 8), (4, 4), (8, 2)] if quick else [(5, 20), (10, 10), (20, 5)]
+    rows = []
+    for (G, K) in topos:
+        for algo in ALGOS:
+            hist = run_algorithm(setup, algo, G=G, K=K, eval_every=5)
+            rows.append([G, K, algo, hist["acc"][-1]])
+    report("fig5_system_params", rows,
+           ["groups", "clients_per_group", "algorithm", "final_acc"])
+    by = {(g, k, a): acc for g, k, a, acc in rows}
+    wide = by[(topos[0][0], topos[0][1], "local_corr")] - by[(topos[0][0], topos[0][1], "group_corr")]
+    many = by[(topos[-1][0], topos[-1][1], "group_corr")] - by[(topos[-1][0], topos[-1][1], "local_corr")]
+    print(f"[fig5] many-clients favours local corr (delta {wide:+.4f}); "
+          f"many-groups favours group corr (delta {many:+.4f})")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--full" not in sys.argv)

@@ -1,0 +1,45 @@
+"""Paper Fig. 7a: testing accuracy versus client-side communication cost.
+
+MTGC's per-global-round client traffic is (E+1)/E model transmissions per
+group round pair (the extra one initializes z and broadcasts y, App. B);
+HFedAvg pays E. We charge each algorithm its own bill and compare accuracy
+at equal bytes."""
+from __future__ import annotations
+
+from benchmarks.common import BenchSetup, report, run_algorithm
+
+# uplink+downlink model-multiples per global round, per client
+COST_PER_ROUND = {
+    "hfedavg": lambda E: 2.0 * E,          # E group-agg up/down pairs
+    "local_corr": lambda E: 2.0 * E + 1.0, # + z init broadcastback
+    "group_corr": lambda E: 2.0 * E + 1.0, # + y broadcast
+    "mtgc": lambda E: 2.0 * E + 2.0,       # + both (App. B: (E+1)/E factor)
+}
+
+
+def main(quick: bool = True) -> None:
+    setup = BenchSetup() if quick else BenchSetup.paper()
+    E = setup.group_rounds
+    rows = []
+    at_budget = {}
+    budget = COST_PER_ROUND["mtgc"](E) * setup.rounds * 0.8
+    for algo, cost in COST_PER_ROUND.items():
+        hist = run_algorithm(setup, algo, eval_every=2)
+        best = 0.0
+        for r, a in zip(hist["round"], hist["acc"]):
+            c = cost(E) * r
+            rows.append([algo, r, c, a])
+            if c <= budget:
+                best = max(best, a)
+        at_budget[algo] = best
+    report("fig7_comm_cost", rows,
+           ["algorithm", "round", "model_transmissions", "test_acc"])
+    best = max(at_budget, key=at_budget.get)
+    print(f"[fig7] accuracy at equal comm budget: "
+          f"{ {k: round(v, 4) for k, v in at_budget.items()} } "
+          f"best={best} {'OK' if best == 'mtgc' else 'VIOLATED'}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--full" not in sys.argv)

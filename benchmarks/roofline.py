@@ -1,0 +1,73 @@
+"""Deliverable (g): assemble the roofline table from the dry-run JSONs.
+
+Reads ``benchmarks/results/dryrun/<arch>__<shape>__<mesh>__<tag>.json``
+(produced by ``python -m repro.launch.dryrun``) and emits the §Roofline
+table: the three terms in seconds, the dominant term, MODEL_FLOPS/HLO_FLOPs
+(useful-compute ratio), and per-device memory -- one row per
+(arch x shape x mesh).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results"
+DRYRUN = RESULTS / "dryrun"
+
+
+def load(tag: str = "baseline") -> list[dict]:
+    recs = []
+    for f in sorted(DRYRUN.glob(f"*__{tag}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def row(r: dict) -> list:
+    if r["status"] != "ok":
+        return [r["arch"], r["shape"], r["mesh"], r["status"],
+                r.get("reason", r.get("error", ""))[:60], "", "", "", "", ""]
+    t = r["terms"]
+    mem = r.get("memory", {})
+    hbm = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+           - mem.get("alias_size_in_bytes", 0))
+    return [
+        r["arch"], r["shape"], r["mesh"], "ok",
+        f"{t['compute_s']:.4g}", f"{t['memory_s']:.4g}",
+        f"{t['collective_s']:.4g}", r["dominant"].replace("_s", ""),
+        f"{r['useful_flops_ratio']:.3f}", f"{hbm / 1e9:.2f}",
+    ]
+
+
+HEADER = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+          "collective_s", "dominant", "useful_ratio", "hbm_GB_per_dev"]
+
+
+def main(tag: str = "baseline") -> None:
+    recs = load(tag)
+    if not recs:
+        print(f"[roofline] no dry-run records with tag {tag!r}; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    rows = [row(r) for r in recs]
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / f"roofline_{tag}.csv"
+    with open(out, "w") as f:
+        f.write(",".join(HEADER) + "\n")
+        for rr in rows:
+            f.write(",".join(str(x) for x in rr) + "\n")
+    print(f"[roofline] {len(rows)} rows -> {out}")
+    w = [22, 12, 9, 6, 10, 10, 12, 10, 12, 14]
+    print(" ".join(h.ljust(x) for h, x in zip(HEADER, w)))
+    for rr in rows:
+        print(" ".join(str(x).ljust(y) for x, y in zip(rr, w)))
+    ok = [r for r in recs if r["status"] == "ok"]
+    dom = {}
+    for r in ok:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    print(f"[roofline] ok={len(ok)} skip={sum(r['status'] == 'skip' for r in recs)} "
+          f"error={sum(r['status'] == 'error' for r in recs)} dominant histogram={dom}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "baseline")

@@ -1,0 +1,48 @@
+"""Benchmark orchestrator: one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run             # quick (CPU) profile
+    PYTHONPATH=src python -m benchmarks.run --full      # paper-scale
+    PYTHONPATH=src python -m benchmarks.run --only fig3_fl_baselines
+
+The dry-run-derived roofline table is assembled from
+benchmarks/results/dryrun (see ``python -m repro.launch.dryrun --all``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale settings")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (ablation_beyond, fig3_fl_baselines,
+                            fig4_corrections, fig5_system_params,
+                            fig7_comm_cost, fig11_three_level, roofline,
+                            table51_speedup)
+
+    suites = {
+        "fig3_fl_baselines": lambda: fig3_fl_baselines.main(quick=not args.full),
+        "fig4_corrections": lambda: fig4_corrections.main(quick=not args.full),
+        "table51_speedup": lambda: table51_speedup.main(quick=not args.full),
+        "fig5_system_params": lambda: fig5_system_params.main(quick=not args.full),
+        "fig7_comm_cost": lambda: fig7_comm_cost.main(quick=not args.full),
+        "fig11_three_level": lambda: fig11_three_level.main(quick=not args.full),
+        "ablation_beyond": lambda: ablation_beyond.main(quick=not args.full),
+        "roofline": lambda: (roofline.main("baseline"),
+                             roofline.main("optimized")),
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+    for name, fn in suites.items():
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        fn()
+        print(f"===== {name} done in {time.time() - t0:.1f}s =====")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""60-second MTGC quickstart: hierarchical FL on synthetic non-i.i.d. data.
+
+Builds a 4-group x 5-client hierarchy with Dirichlet(0.1) label skew at
+both levels, then trains the paper's MLP with MTGC and with hierarchical
+FedAvg on the identical batch stream -- watch the drift corrections win.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HFLConfig, global_model, hfl_init, make_global_round
+from repro.data.partition import partition, sample_round_batches
+from repro.data.synthetic import make_classification, train_test_split
+from repro.models.small import accuracy, make_loss, mlp
+
+
+def main():
+    G, K, E, H, rounds = 4, 5, 4, 5, 15
+    rng = np.random.default_rng(0)
+    ds = make_classification(rng, num_samples=6000, num_classes=10, dim=32)
+    train, test = train_test_split(ds, rng)
+    idx = partition(train.y, G, K, mode="both_noniid", alpha=0.1, seed=0)
+
+    init, apply = mlp(10, 32, hidden=64)
+    loss_fn = make_loss(apply)
+
+    for algo in ("mtgc", "hfedavg"):
+        cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                        group_rounds=E, lr=0.1, algorithm=algo)
+        state = hfl_init(init(jax.random.PRNGKey(0)), cfg)
+        step = jax.jit(make_global_round(loss_fn, cfg))
+        data_rng = np.random.default_rng(1)  # same stream for both algos
+        print(f"\n== {algo} ==")
+        for t in range(rounds):
+            batches = sample_round_batches(train.x, train.y, idx, data_rng,
+                                           E, H, batch_size=32)
+            state, m = step(state, jax.tree.map(jnp.asarray, batches))
+            if (t + 1) % 5 == 0:
+                acc = accuracy(apply, global_model(state),
+                               jnp.asarray(test.x), test.y)
+                print(f"round {t+1:3d}  loss {float(np.mean(m.loss)):.4f}  "
+                      f"test acc {acc:.4f}  ||z||^2 {float(m.z_norm):.3e}  "
+                      f"||y||^2 {float(m.y_norm):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched serving demo: prefill a batch of prompts, then greedy-decode.
+
+Runs three architecture families (dense GQA, attention-free RWKV6, hybrid
+Hymba) through the same prefill/decode_step API the dry-run lowers at
+32k/524k context on the production mesh.
+
+    PYTHONPATH=src python examples/serve_decode.py --gen 24
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.transformer import build_model
+
+
+def serve(arch: str, B: int, T: int, gen: int):
+    cfg = get_arch(arch).reduced()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    cache = bundle.init_cache(B, T + gen)
+    prefill = jax.jit(bundle.prefill)
+    decode = jax.jit(bundle.decode_step)
+
+    t0 = time.time()
+    lg, cache = prefill(params, {"tokens": toks}, cache)
+    tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(gen - 1):
+        lg, cache = decode(params, {"token": tok,
+                                    "index": jnp.asarray(T + i, jnp.int32)}, cache)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    seq = np.asarray(jnp.concatenate(out, 1))
+    print(f"{arch:14s} batch={B} prompt={T} generated={gen} "
+          f"in {dt:.2f}s ({B*gen/dt:.0f} tok/s)  sample: {seq[0][:10]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    for arch in ("qwen3-14b", "rwkv6-1.6b", "hymba-1.5b"):
+        serve(arch, args.batch, args.prompt, args.gen)
+
+
+if __name__ == "__main__":
+    main()

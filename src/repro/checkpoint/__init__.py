@@ -1,0 +1,4 @@
+"""repro.checkpoint -- dependency-free pytree checkpointing."""
+from repro.checkpoint.checkpoint import latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step"]

@@ -1,0 +1,65 @@
+"""Step-tagged pytree checkpoints as .npz (flattened key paths) + metadata.
+
+Good enough for CPU-scale runs and round-trips arbitrary nested
+dict/tuple/NamedTuple pytrees of arrays. Sharded production checkpoints
+would swap in tensorstore under the same API.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "||"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, step: int, tree: PyTree, metadata: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    flat = _flatten(tree)
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    meta = dict(metadata or {})
+    meta["step"] = step
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (values replaced, dtypes kept)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for keypath, leaf in paths:
+        key = _SEP.join(str(p) for p in keypath)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,41 @@
+"""repro.core -- the paper's contribution: MTGC and its HFL baselines.
+
+Public API:
+  HFLConfig, HFLState, hfl_init, make_global_round, global_model
+  ScaffoldState, scaffold_init, make_scaffold_round
+  MultiLevelState, multilevel_init, make_multilevel_round
+"""
+from repro.core.config import HFLConfig
+from repro.core.engine import (
+    HFLState,
+    RoundMetrics,
+    global_model,
+    hfl_init,
+    make_global_round,
+)
+from repro.core.multilevel import (
+    MultiLevelState,
+    make_multilevel_round,
+    multilevel_global_model,
+    multilevel_init,
+)
+from repro.core.scaffold import ScaffoldState, make_scaffold_round, scaffold_init
+
+ALGORITHMS = ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox", "feddyn")
+
+__all__ = [
+    "ALGORITHMS",
+    "HFLConfig",
+    "HFLState",
+    "RoundMetrics",
+    "global_model",
+    "hfl_init",
+    "make_global_round",
+    "MultiLevelState",
+    "make_multilevel_round",
+    "multilevel_global_model",
+    "multilevel_init",
+    "ScaffoldState",
+    "make_scaffold_round",
+    "scaffold_init",
+]

@@ -1,0 +1,237 @@
+"""The hierarchical-FL round engine (paper Algorithm 1, generalized).
+
+One *global round* ``t`` is a single jittable program:
+
+    for e in range(E):                 # lax.scan over group rounds
+        for h in range(H):             # lax.scan over local steps
+            g_i   = grad F_i(x_i, xi)                  # vmapped over [G, K]
+            x_i  -= lr * (g_i + z_i + y_j [+ prox/dyn terms])
+        group aggregation + z update (Alg. 1, lines 8-9)
+    global aggregation + y update     (Alg. 1, lines 10-11)
+
+All per-client state is stacked with leading axes ``[G, K, ...]`` so the same
+engine runs (a) as a CPU simulator for the paper's experiments and (b) under
+GSPMD with the leading axes sharded over the (group, client) mesh axes, where
+the group/global aggregations lower to hierarchical all-reduces.
+
+Baselines are the same engine with corrections toggled off (HFedAvg), one
+correction only (local / group correction, Fig. 4), or with FedProx / FedDyn
+gradient modifiers (Fig. 3).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as tu
+from repro.core.config import HFLConfig
+
+PyTree = Any
+
+
+class HFLState(NamedTuple):
+    """State carried between global rounds.
+
+    params: [G, K, ...]  per-client models (all equal right after a round).
+    z:      [G, K, ...]  client->group correction (zeros when unused).
+    y:      [G, ...]     group->global correction (zeros when unused).
+    dyn:    [G, K, ...]  FedDyn gradient memory (zeros when unused).
+    rng:    PRNG key for stochastic batching.
+    round:  global round counter t.
+    """
+
+    params: PyTree
+    z: PyTree
+    y: PyTree
+    dyn: PyTree
+    rng: jax.Array
+    round: jax.Array
+
+
+class RoundMetrics(NamedTuple):
+    loss: jax.Array          # [E, H] mean training loss per local step
+    client_drift: jax.Array  # [E] mean ||x_i - xbar_j||^2 at group agg
+    group_drift: jax.Array   # scalar mean ||xbar_j - xbar||^2 at global agg
+    z_norm: jax.Array        # scalar mean ||z||^2 after the round
+    y_norm: jax.Array        # scalar mean ||y||^2 after the round
+
+
+def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None) -> HFLState:
+    """Broadcast a single model to every client and zero the corrections."""
+    G, K = cfg.num_groups, cfg.clients_per_group
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0
+    )
+    y0 = jax.tree.map(lambda x: jnp.zeros((G,) + x.shape, x.dtype), params0)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    return HFLState(
+        params=stacked,
+        z=tu.tree_zeros_like(stacked),
+        y=y0,
+        dyn=tu.tree_zeros_like(stacked),
+        rng=rng,
+        round=jnp.zeros((), jnp.int32),
+    )
+
+
+def _client_grads(loss_fn: Callable, params: PyTree, batch: PyTree):
+    """(loss, grad) of the local loss, vmapped over the [G, K] leading axes."""
+    vg = jax.value_and_grad(loss_fn)
+    return jax.vmap(jax.vmap(vg))(params, batch)
+
+
+def make_global_round(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    cfg: HFLConfig,
+) -> Callable[[HFLState, PyTree], tuple[HFLState, RoundMetrics]]:
+    """Build the jittable global-round function for ``cfg.algorithm``.
+
+    ``loss_fn(params, batch) -> scalar`` is a single-client loss; the engine
+    vmaps it over the [G, K] axes. ``batches`` passed to the returned function
+    must have leaves shaped ``[E, H, G, K, ...]`` (one batch per local step
+    per client).
+    """
+    cfg.validate()
+    algo = cfg.algorithm
+    use_z = algo in ("mtgc", "local_corr")
+    use_y = algo in ("mtgc", "group_corr")
+    use_prox = algo == "fedprox"
+    use_dyn = algo == "feddyn"
+    if algo not in ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox", "feddyn"):
+        raise ValueError(f"unknown algorithm {algo!r}")
+
+    G, K, H, E = cfg.num_groups, cfg.clients_per_group, cfg.local_steps, cfg.group_rounds
+    lr = cfg.lr
+
+    def local_phase(x, z, y, dyn, anchor, batches_eh):
+        """H local SGD steps (Alg. 1, lines 6-7). batches_eh: [H, G, K, ...]."""
+        y_b = tu.tree_broadcast_to_axis(y, 1, K)  # [G, K, ...]
+
+        def step(carry, batch):
+            x = carry
+            loss, g = _client_grads(loss_fn, x, batch)
+            # Corrected direction: g + z + y (MTGC); baselines toggle terms.
+            d = g
+            if use_z:
+                d = tu.tree_add(d, z)
+            if use_y:
+                d = tu.tree_add(d, y_b)
+            if use_prox:
+                d = jax.tree.map(lambda di, xi, ai: di + cfg.prox_mu * (xi - ai), d, x, anchor)
+            if use_dyn:
+                d = jax.tree.map(
+                    lambda di, mi, xi, ai: di - mi + cfg.feddyn_alpha * (xi - ai),
+                    d, dyn, x, anchor,
+                )
+            x = jax.tree.map(lambda xi, di: xi - lr * di, x, d)
+            return x, jnp.mean(loss)
+
+        x, losses = jax.lax.scan(step, x, batches_eh)
+        return x, losses
+
+    def group_round(carry, batches_eh):
+        """One group round e: local phase + group aggregation (lines 5-9)."""
+        x, z, y, dyn, anchor = carry
+        x_end, losses = local_phase(x, z, y, dyn, anchor, batches_eh)
+
+        # Group aggregation (line 8): xbar_j = mean over clients.
+        xbar = tu.tree_mean(x_end, axis=1)                     # [G, ...]
+        xbar_b = tu.tree_broadcast_to_axis(xbar, 1, K)          # [G, K, ...]
+
+        drift = tu.tree_sq_norm(tu.tree_sub(x_end, xbar_b)) / (G * K)
+
+        # Client-group correction update (line 9):
+        #   z_i += (x_{i,H} - xbar_j) / (H * lr)
+        if use_z:
+            z = jax.tree.map(
+                lambda zi, xe, xb: zi + (xe - xb) / (H * lr), z, x_end, xbar_b
+            )
+        # Model dissemination: every client restarts from the group model.
+        x = xbar_b
+        return (x, z, y, dyn, anchor), (losses, drift)
+
+    def global_round(state: HFLState, batches: PyTree) -> tuple[HFLState, RoundMetrics]:
+        x, z, y, dyn = state.params, state.z, state.y, state.dyn
+
+        # --- Round initialization (lines 2-4) ---------------------------
+        # Group model init is implicit: params enter equal across clients.
+        if use_z:
+            if cfg.correction_init == "zero":
+                # Footnote 2: experiments initialize z = 0 each round.
+                z = tu.tree_zeros_like(z)
+            else:
+                # Theoretical init (line 3): z_i = -g_i + mean_group g_i,
+                # evaluated with the first local batch xi_{i,0}^{t,0}.
+                b00 = jax.tree.map(lambda b: b[0, 0], batches)
+                _, g0 = _client_grads(loss_fn, x, b00)
+                g0m = tu.tree_broadcast_to_axis(tu.tree_mean(g0, axis=1), 1, K)
+                z = tu.tree_sub(g0m, g0)
+        if use_y and cfg.correction_init == "gradient":
+            is_first = state.round == 0
+
+            def grad_init_y(y):
+                b00 = jax.tree.map(lambda b: b[0, 0], batches)
+                _, g0 = _client_grads(loss_fn, x, b00)
+                gj = tu.tree_mean(g0, axis=1)                      # [G, ...]
+                gg = tu.tree_mean(gj, axis=0)                      # [...]
+                return jax.tree.map(lambda gjj, ggg: ggg - gjj, gj, gg)
+
+            y = jax.tree.map(
+                lambda yg, yo: jnp.where(is_first, yg, yo), grad_init_y(y), y
+            )
+
+        anchor = x  # group-round-start model (FedProx / FedDyn reference)
+
+        # --- E group rounds (lines 5-9) ---------------------------------
+        (x, z, y, dyn, _), (losses, drifts) = jax.lax.scan(
+            group_round, (x, z, y, dyn, anchor), batches
+        )
+
+        # --- Global aggregation (line 10) --------------------------------
+        xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)          # [G, ...] (clients equal)
+        xbar = tu.tree_mean(xbar_j, axis=0)                     # [...]
+        gdrift = tu.tree_sq_norm(
+            tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G))
+        ) / G
+
+        # Group-global correction update (line 11):
+        #   y_j += (xbar_j^{t,E} - xbar^{t+1}) / (H * E * lr)
+        if use_y:
+            y = jax.tree.map(
+                lambda yj, xj, xg: yj + (xj - xg) / (H * E * lr), y, xbar_j, xbar
+            )
+
+        # FedDyn gradient-memory update (per client, after its local work).
+        if use_dyn:
+            dyn = jax.tree.map(
+                lambda mi, xi, ai: mi - cfg.feddyn_alpha * (xi - ai), dyn, x, anchor
+            )
+
+        # Dissemination: everyone restarts from the (server-lr) global model.
+        if cfg.server_lr != 1.0:
+            prev = jax.tree.map(lambda xi: xi[0, 0], state.params)
+            xbar = jax.tree.map(lambda p, xb: p + cfg.server_lr * (xb - p), prev, xbar)
+        x = jax.tree.map(
+            lambda xg: jnp.broadcast_to(xg, (G, K) + xg.shape), xbar
+        )
+
+        metrics = RoundMetrics(
+            loss=losses,
+            client_drift=drifts,
+            group_drift=gdrift,
+            z_norm=tu.tree_sq_norm(z) / (G * K),
+            y_norm=tu.tree_sq_norm(y) / G,
+        )
+        new_state = HFLState(
+            params=x, z=z, y=y, dyn=dyn, rng=state.rng, round=state.round + 1
+        )
+        return new_state, metrics
+
+    return global_round
+
+
+def global_model(state: HFLState) -> PyTree:
+    """The current global model xbar (all clients are equal between rounds)."""
+    return jax.tree.map(lambda x: x[0, 0], state.params)

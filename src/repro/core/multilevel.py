@@ -1,0 +1,152 @@
+"""MTGC for an arbitrary number of levels (paper Appendix E, Algorithm 2).
+
+The M-level tree is described by ``dims = (N_1, ..., N_M)``: the global
+server (level-1 aggregator) has N_1 children, each of those N_2 children,
+..., and the leaves (clients) are indexed by (k_1, ..., k_M). Client models
+are stacked with leading shape ``dims``; the level-m correction nu_m (one per
+edge between a level-m aggregator and its child) has leading shape
+``dims[:m]``.
+
+Periods ``P_1 > P_2 > ... > P_M`` with ``P_{m+1} | P_m``: the level-m
+aggregation fires every P_m local iterations. We implement the nested form
+(deepest aggregation first), which is Algorithm 1 verbatim for M=2 and is
+equivalent to Algorithm 2's break-semantics up to correction values that are
+immediately re-initialized. Corrections are zero-initialized (the paper's
+experimental setting, footnote 2).
+
+Local update (Alg. 2 line 5):  x <- x - lr * (g + sum_m nu_{k_1..k_m}).
+Level-m update (line 9):       nu_n += (subtree_mean(n) - parent_mean) / (lr * P_m).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as tu
+
+PyTree = Any
+
+
+class MultiLevelState(NamedTuple):
+    params: PyTree           # [*dims, ...]
+    nus: tuple               # nus[m-1] has leading shape dims[:m], m = 1..M
+
+
+def multilevel_init(params0: PyTree, dims: Sequence[int]) -> MultiLevelState:
+    dims = tuple(dims)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, dims + x.shape), params0
+    )
+    nus = tuple(
+        jax.tree.map(lambda x: jnp.zeros(dims[: m + 1] + x.shape, x.dtype), params0)
+        for m in range(len(dims))
+    )
+    return MultiLevelState(params=stacked, nus=nus)
+
+
+def _subtree_mean(x: PyTree, level: int, M: int) -> PyTree:
+    """Mean over all axes below ``level`` (axes level..M-1). level=0 => global."""
+    axes = tuple(range(level, M))
+    return tu.tree_mean(x, axis=axes) if axes else x
+
+
+def _broadcast_back(a: PyTree, dims: tuple, level: int) -> PyTree:
+    """Broadcast a [dims[:level], ...] tree back to full [*dims, ...]."""
+    M = len(dims)
+
+    def _b(x):
+        x = jnp.expand_dims(x, tuple(range(level, M)))
+        return jnp.broadcast_to(x, dims + x.shape[M:])
+
+    return jax.tree.map(_b, a)
+
+
+def make_multilevel_round(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    dims: Sequence[int],
+    periods: Sequence[int],
+    lr: float,
+) -> Callable[[MultiLevelState, PyTree], tuple[MultiLevelState, jax.Array]]:
+    """Build one *global round* (= P_1 local iterations) as a jittable fn.
+
+    batches leaves: [P_1, *dims, ...] -- one batch per local step per client.
+    Returns (state, losses[P_1]).
+    """
+    dims = tuple(dims)
+    periods = tuple(periods)
+    M = len(dims)
+    assert len(periods) == M, "one period per level"
+    for a, b in zip(periods, periods[1:]):
+        assert a > b and a % b == 0, f"periods must nest: {periods}"
+
+    # Block ratios: level-m block = ratios[m-1] repetitions of level-(m+1)
+    # block; the innermost block is P_M local steps.
+    ratios = [periods[m] // periods[m + 1] for m in range(M - 1)] + [periods[M - 1]]
+
+    # vmap the per-client grad over every topology axis.
+    vg = jax.value_and_grad(loss_fn)
+    for _ in range(M):
+        vg = jax.vmap(vg)
+
+    def local_step(carry, batch):
+        x, nus = carry
+        loss, g = vg(x, batch)
+        d = g
+        for m in range(M):
+            d = tu.tree_add(d, _broadcast_back(nus[m], dims, m + 1))
+        x = jax.tree.map(lambda xi, di: xi - lr * di, x, d)
+        return (x, nus), jnp.mean(loss)
+
+    def make_block(level: int):
+        """Block of P_level steps followed by the level-``level`` aggregation."""
+        if level == M:
+            inner = local_step
+        else:
+            inner = make_block(level + 1)
+
+        def block(carry, batches_block):
+            carry, losses = jax.lax.scan(inner, carry, batches_block)
+            x, nus = carry
+            # Aggregation at this level (over axes level-1 .. M-1):
+            s = _subtree_mean(x, level, M)          # child subtree means
+            a = _subtree_mean(x, level - 1, M)      # parent means
+            a_to_s = _broadcast_back(a, dims[:level], level - 1) if level >= 1 else a
+            nus = list(nus)
+            nus[level - 1] = jax.tree.map(
+                lambda nu, si, ai: nu + (si - ai) / (lr * periods[level - 1]),
+                nus[level - 1], s, a_to_s,
+            )
+            # Re-initialize deeper corrections (Alg. 2 line 11).
+            for m in range(level, M):
+                nus[m] = tu.tree_zeros_like(nus[m])
+            # Dissemination: every client under a parent restarts from it.
+            x = _broadcast_back(a, dims, level - 1)
+            return (x, tuple(nus)), losses
+
+        return block
+
+    top = make_block(1)
+
+    def round_fn(state: MultiLevelState, batches: PyTree):
+        # Reshape flat [P_1, ...] leading axis into the nested block shape.
+        lead = tuple(ratios)
+
+        def _reshape(b):
+            return b.reshape(lead + b.shape[1:])
+
+        nested = jax.tree.map(_reshape, batches)
+        # The top block's scan consumes axis 0 (ratio r_1); feed it whole.
+        (carry, losses) = top((state.params, state.nus), nested)
+        x, nus = carry
+        return MultiLevelState(params=x, nus=nus), losses.reshape(-1)
+
+    return round_fn
+
+
+def multilevel_global_model(state: MultiLevelState) -> PyTree:
+    # All clients are equal between rounds; index the first leaf client.
+    ndim_lead = len(state.nus)
+    return jax.tree.map(lambda a: a[(0,) * ndim_lead], state.params)

@@ -1,0 +1,85 @@
+"""Flat (star-topology) SCAFFOLD [Karimireddy et al., 2020].
+
+Used for the paper's Sec. 3.3 claim: MTGC with N=1 groups and E=1 group
+rounds *is* SCAFFOLD. We implement both control-variate options:
+
+* option I  (fresh gradient): c_i = grad F_i(x^t, xi) at round start --
+  this is what MTGC's theoretical correction init (Alg. 1 line 3) reduces to,
+  so the reduction test uses option='I'.
+* option II (model difference): c_i <- c_i - c + (x^t - x_{i,H}) / (H lr).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as tu
+
+PyTree = Any
+
+
+class ScaffoldState(NamedTuple):
+    params: PyTree  # [K, ...] per-client models
+    c_i: PyTree     # [K, ...] client control variates
+    c: PyTree       # [...]    server control variate
+
+
+def scaffold_init(params0: PyTree, num_clients: int) -> ScaffoldState:
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), params0
+    )
+    return ScaffoldState(
+        params=stacked,
+        c_i=tu.tree_zeros_like(stacked),
+        c=tu.tree_zeros_like(params0),
+    )
+
+
+def make_scaffold_round(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    num_clients: int,
+    local_steps: int,
+    lr: float,
+    option: str = "I",
+) -> Callable[[ScaffoldState, PyTree], tuple[ScaffoldState, jax.Array]]:
+    """batches leaves: [H, K, ...]."""
+    K, H = num_clients, local_steps
+    vg = jax.vmap(jax.value_and_grad(loss_fn))
+
+    def round_fn(state: ScaffoldState, batches: PyTree):
+        x0 = state.params
+        if option == "I":
+            # Fresh-gradient control variates, evaluated at the round-start
+            # model with the first local batch (matches MTGC Alg. 1 line 3).
+            b0 = jax.tree.map(lambda b: b[0], batches)
+            _, c_i = vg(x0, b0)
+            c_cur = tu.tree_mean(c_i, axis=0)
+        else:
+            c_i = state.c_i
+            c_cur = state.c
+        c_b = tu.tree_broadcast_to_axis(c_cur, 0, K)
+
+        def step(x, batch):
+            loss, g = vg(x, batch)
+            x = jax.tree.map(
+                lambda xi, gi, cii, ci: xi - lr * (gi - cii + ci), x, g, c_i, c_b
+            )
+            return x, jnp.mean(loss)
+
+        x_end, losses = jax.lax.scan(step, x0, batches)
+
+        if option == "II":
+            c_i = jax.tree.map(
+                lambda cii, ci, x0i, xe: cii - ci + (x0i - xe) / (H * lr),
+                c_i, c_b, x0, x_end,
+            )
+        xbar = tu.tree_mean(x_end, axis=0)
+        c = tu.tree_mean(c_i, axis=0)
+        params = jax.tree.map(
+            lambda xg: jnp.broadcast_to(xg, (K,) + xg.shape), xbar
+        )
+        return ScaffoldState(params=params, c_i=c_i, c=c), losses
+
+    return round_fn

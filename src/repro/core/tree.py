@@ -1,0 +1,71 @@
+"""Pytree algebra used by every HFL algorithm.
+
+All hierarchical-FL state in this framework is *stacked*: each leaf carries
+leading "topology" axes (e.g. ``[G, K, ...]`` = groups x clients-per-group).
+These helpers implement the handful of algebraic primitives Algorithm 1
+needs -- axpy-style updates, means over leading axes, and broadcasts -- so
+the algorithm files read like the paper's pseudocode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PyTree = object
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_mean(a: PyTree, axis) -> PyTree:
+    """Mean over one or more leading axes (group/client aggregation)."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=axis), a)
+
+
+def tree_broadcast_to_axis(a: PyTree, axis: int, size: int) -> PyTree:
+    """Insert a broadcasted leading axis (dissemination after aggregation)."""
+
+    def _b(x):
+        x = jnp.expand_dims(x, axis)
+        reps = [1] * x.ndim
+        reps[axis] = size
+        return jnp.tile(x, reps)
+
+    return jax.tree.map(_b, a)
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    """Global inner product <a, b> (used by FedDyn's regularizer tests)."""
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def tree_sq_norm(a: PyTree):
+    return tree_dot(a, a)
+
+
+def tree_allclose(a: PyTree, b: PyTree, rtol=1e-5, atol=1e-6) -> bool:
+    oks = jax.tree.map(lambda x, y: jnp.allclose(x, y, rtol=rtol, atol=atol), a, b)
+    return bool(jax.tree.reduce(jnp.logical_and, oks))
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)

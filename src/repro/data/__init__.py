@@ -1,0 +1,23 @@
+"""repro.data -- synthetic datasets + the paper's Dirichlet partitioner."""
+from repro.data.partition import partition, partition_stats, sample_round_batches
+from repro.data.synthetic import (
+    Dataset,
+    make_classification,
+    make_feature_shift,
+    make_language,
+    train_test_split,
+)
+from repro.data.lm import make_lm_tokens, lm_batches
+
+__all__ = [
+    "Dataset",
+    "make_classification",
+    "make_feature_shift",
+    "make_language",
+    "train_test_split",
+    "partition",
+    "partition_stats",
+    "sample_round_batches",
+    "make_lm_tokens",
+    "lm_batches",
+]

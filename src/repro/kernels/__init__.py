@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three artifacts: ``<name>.py`` (pl.pallas_call with
+explicit BlockSpec VMEM tiling), a pure-jnp oracle in ``ref.py``, and a
+dispatching wrapper in ``ops.py`` (Pallas on TPU, interpret/ref on CPU).
+"""
+from repro.kernels.ops import flash_attention, mtgc_update, rwkv6_scan
+
+__all__ = ["flash_attention", "mtgc_update", "rwkv6_scan"]

@@ -1,0 +1,52 @@
+"""Dispatching wrappers: Pallas on TPU, interpret-mode or jnp ref elsewhere.
+
+The model code calls these; ``mode`` resolves per backend:
+    "auto"      -> compiled Pallas on TPU, pure-jnp reference on CPU/GPU
+    "pallas"    -> compiled Pallas (TPU only)
+    "interpret" -> Pallas kernel body interpreted op-by-op (CPU validation)
+    "ref"       -> pure-jnp oracle
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import mtgc_update as mu
+from repro.kernels import ref
+from repro.kernels import rwkv6_scan as rs
+
+
+def _resolve(mode: str) -> str:
+    if mode != "auto":
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def mtgc_update(x, g, z, y, *, lr, mode: str = "auto", **kw):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.mtgc_update_ref(x, g, z, y, lr)
+    return mu.mtgc_update(x, g, z, y, lr=lr, interpret=(m == "interpret"), **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, mode: str = "auto", **kw):
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=(m == "interpret"), **kw)
+
+
+def rwkv6_scan(r, k, v, logw, u, state, *, mode: str = "auto", **kw):
+    """ref-style shapes: r/k/v/logw [B,H,T,Dh]; u [H,Dh]; state [B,H,Dh,Dh]."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.rwkv6_scan_ref(r, k, v, logw, u, state)
+    import jax.numpy as jnp
+    B, H, T, Dh = r.shape
+    flat = lambda a: a.reshape(B * H, T, Dh)
+    u_b = jnp.broadcast_to(u[None], (B, H, Dh)).reshape(B * H, Dh)
+    o, s = rs.rwkv6_scan(flat(r), flat(k), flat(v), flat(logw), u_b,
+                         state.reshape(B * H, Dh, Dh),
+                         interpret=(m == "interpret"), **kw)
+    return o.reshape(B, H, T, Dh), s.reshape(B, H, Dh, Dh)

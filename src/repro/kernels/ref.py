@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are validated against over shape/dtype sweeps, and the path the models use
+on non-TPU backends)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mtgc_update_ref(x, g, z, y, lr):
+    """x <- x - lr * (g + z + y), accumulating the correction sum in f32."""
+    d = g.astype(jnp.float32) + z.astype(jnp.float32) + y.astype(jnp.float32)
+    return (x.astype(jnp.float32) - lr * d).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Naive attention with GQA expansion. q: [B,T,H,Dh]; k/v: [B,S,Kv,Dh]."""
+    B, T, H, Dh = q.shape
+    Kv = k.shape[2]
+    if Kv != H:
+        k = jnp.repeat(k, H // Kv, axis=2)
+        v = jnp.repeat(v, H // Kv, axis=2)
+    S = k.shape[1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (Dh ** -0.5)
+    qpos = jnp.arange(T) + q_offset
+    kpos = jnp.arange(S)
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, state):
+    """Sequential RWKV-6 recurrence (per-head).
+
+    r/k/v/logw: [B, H, T, Dh] (f32); u: [H, Dh]; state: [B, H, Dh, Dh].
+    Returns (o [B,H,T,Dh], final state).
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(S, inp):
+        rt, kt, vt, lwt = inp                                 # [B,H,Dh]
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        o = jnp.einsum("bhd,bhde->bhe", rt, S + u[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, o
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (r, k, v, logw))  # [T,B,H,Dh]
+    state, o = jax.lax.scan(step, state, xs)
+    return o.transpose(1, 2, 0, 3), state

@@ -1,0 +1,115 @@
+"""Chunked RWKV-6 (Finch) linear recurrence for TPU.
+
+The CUDA kernels released with the paper stream tokens sequentially per
+thread-block; that shape is wrong for the MXU. The TPU-native re-blocking
+is the *chunked parallel form*: inside a chunk of C tokens all work is
+dense [C, Dh] x [Dh, Dh] / [C, C] matmuls (MXU), and only the [Dh, Dh]
+state crosses chunks (sequentially, via the Pallas grid which executes the
+last axis in order).
+
+Per (batch*head, chunk) grid cell, in VMEM:
+    r, k, v, logw blocks    [C, Dh]
+    pairwise decay tensor   [C, C, Dh] (f32)  -- C=64, Dh=64 -> 1 MB
+    state scratch           [Dh, Dh]   (f32)
+
+Recurrence (per head, state S in R^{Dh x Dv}):
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(logw_t)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(C, Dh, r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+            o_ref, sout_ref, s_ref):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = s0_ref[0]
+
+    r = r_ref[0].astype(jnp.float32)          # [C, Dh]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # [1, Dh] broadcast row
+    S = s_ref[...]
+
+    cum = jnp.cumsum(lw, axis=0)              # inclusive [C, Dh]
+    cum_ex = cum - lw                         # exclusive
+
+    # carried-state contribution: (r * exp(cum_ex)) @ S
+    a = r * jnp.exp(cum_ex)
+    o_state = jax.lax.dot_general(a, S, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # intra-chunk pairwise decays exp(cum_ex[t] - cum[i]) for i < t
+    dmat = cum_ex[:, None, :] - cum[None, :, :]          # [C, C, Dh]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    w_pair = jnp.where(tri[..., None], jnp.exp(dmat), 0.0)
+    att = jnp.einsum("cd,id,cid->ci", r, k, w_pair,
+                     preferred_element_type=jnp.float32)
+    o_intra = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # diagonal bonus: (r_t . (u * k_t)) v_t
+    bonus = jnp.sum(r * u * k, axis=1, keepdims=True)    # [C, 1]
+    o_ref[0] = (o_state + o_intra + bonus * v).astype(o_ref.dtype)
+
+    # state update: S' = diag(prod w) S + sum_i exp(cum[-1] - cum[i]) k_i v_i^T
+    wtot = jnp.exp(cum[-1, :])                            # [Dh]
+    kdec = k * jnp.exp(cum[-1:, :] - cum)                 # [C, Dh]
+    s_new = wtot[:, None] * S + jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+    @pl.when(ic == pl.num_programs(1) - 1)
+    def _finish():
+        sout_ref[0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, logw, u, state, *, chunk: int = 64,
+               interpret: bool = False):
+    """r/k/v/logw: [BH, T, Dh] (any float dtype); u: [BH, Dh] (the per-head
+    bonus, pre-broadcast over batch); state: [BH, Dh, Dh] f32.
+    Returns (o [BH, T, Dh] f32, final_state [BH, Dh, Dh] f32).
+    T % chunk == 0 (callers pad with k=0, logw=0 -- state-preserving).
+    """
+    BH, T, Dh = r.shape
+    C = min(chunk, T)
+    assert T % C == 0, (T, C)
+    nc = T // C
+    grid = (BH, nc)
+    kernel = functools.partial(_kernel, C, Dh)
+    u2 = u[:, None, :]  # [BH, 1, Dh]
+    o, s_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, Dh, Dh), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Dh, Dh), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Dh, Dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dh, Dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u2, state)
+    return o, s_out

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any other import (jax locks the device
+# count at first backend init). 512 placeholder host devices let
+# ``jax.make_mesh`` build the pinned production meshes on this CPU container.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+For each case this driver
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod) and
+     the architecture's logical train mesh,
+  2. lowers ``train_step`` (train_4k) or ``prefill``/``decode_step`` with
+     explicit in/out shardings over ShapeDtypeStruct stand-ins (zero
+     allocation),
+  3. compiles, prints ``memory_analysis()`` (proves it fits) and
+     ``cost_analysis()`` (FLOPs / bytes for the roofline),
+  4. parses collective bytes (all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute) out of the partitioned HLO,
+  5. derives the three roofline terms (v5e: 197 TF/s bf16, 819 GB/s HBM,
+     ~50 GB/s/link ICI) and writes a JSON record for EXPERIMENTS.md.
+
+cost/memory analyses are of the *partitioned per-device module*, so terms
+divide by per-chip peaks (equivalent to the global-FLOPs / (chips x peak)
+formulation).
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out benchmarks/results
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+# v5e hardware constants (TARGET hardware; container runs CPU).
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DT_BYTES.get(tok_dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes of every collective op in the partitioned module.
+
+    HLO lines look like ``%x = bf16[8,128] all-reduce(bf16[8,128] %y), ...``;
+    we take the operand shapes (right of the opcode). ``*-start`` variants
+    (async collectives) are counted; ``*-done`` are not (same transfer).
+    """
+    out = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for c in COLLECTIVES:
+            m = re.search(rf" {c}(?:-start)?\(", line)
+            if not m:
+                continue
+            operands = line[m.end():]
+            b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(operands))
+            if b == 0:  # operand shapes elided: fall back to result shape
+                b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(line[: m.start()]))
+            out[c] += b
+            break
+    return out
+
+
+def _active_params(params_shape, num_experts: int, top_k: int):
+    """(total, active) param counts; MoE experts scale by top_k/num_experts."""
+    import jax
+
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        names = [str(getattr(e, "key", e)) for e in path]
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if num_experts and "moe" in names and len(leaf.shape) == 4:
+            active += n * top_k // num_experts
+        else:
+            active += n
+    return total, active
+
+
+# ------------------------------------------------------------------ cases
+
+
+def build_case(arch_id: str, shape_id: str, *, multi_pod: bool, overrides=None):
+    """Returns (jitted_fn, example_args (SDS), mesh, meta)."""
+    import jax
+
+    from repro.configs import get_arch, get_plan
+    from repro.configs.shapes import SHAPES, serve_specs, train_specs
+    from repro.launch import mesh as meshlib
+    from repro.launch.serve import make_serve_step
+    from repro.launch.train import make_sharded_round
+    from repro.models.transformer import build_model
+    from repro.sharding import specs as sp
+
+    cfg = get_arch(arch_id)
+    plan = get_plan(arch_id)
+    if overrides:
+        import dataclasses
+        cfg_over = {k: v for k, v in overrides.items() if hasattr(cfg, k)}
+        plan_over = {k: v for k, v in overrides.items() if hasattr(plan, k)}
+        if cfg_over:
+            cfg = dataclasses.replace(cfg, **cfg_over)
+        if plan_over:
+            plan = dataclasses.replace(plan, **plan_over)
+    bundle = build_model(cfg)
+    kind = SHAPES[shape_id]["kind"]
+    params_sds = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    n_total, n_active = _active_params(params_sds, cfg.num_experts, cfg.top_k)
+
+    if kind == "train":
+        mesh = meshlib.make_train_mesh(plan, multi_pod=multi_pod)
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        G, K = axis_sizes["group"], axis_sizes["client"]
+        batch_sds = train_specs(cfg, plan, multi_pod=multi_pod)
+        state_sds = {
+            "params": sp._with_lead(params_sds, (G, K)),
+            "z": sp._with_lead(params_sds, (G, K)),
+            "y": sp._with_lead(params_sds, (G,)),
+        }
+        st_specs = sp.train_state_specs(params_sds, axis_sizes, cfg)
+        from repro.launch.train import ShardedHFLState
+        state_sh = ShardedHFLState(
+            params=sp.to_shardings(mesh, st_specs["params"]),
+            z=sp.to_shardings(mesh, st_specs["z"]),
+            y=sp.to_shardings(mesh, st_specs["y"]),
+        )
+        batch_sh = sp.to_shardings(mesh, sp.train_batch_spec(batch_sds))
+        E, H = plan.dryrun_E, plan.dryrun_H
+        step = make_sharded_round(bundle.loss, E=E, H=H, lr=0.01)
+        jitted = jax.jit(
+            step,
+            in_shardings=(ShardedHFLState(*state_sh), batch_sh),
+            out_shardings=(ShardedHFLState(*state_sh), None),
+            donate_argnums=0,
+        )
+        state = ShardedHFLState(
+            params=state_sds["params"], z=state_sds["z"], y=state_sds["y"]
+        )
+        lead = batch_sds["tokens"].shape  # [E,H,A,G,K,chunk,T_text]
+        tokens = 1
+        for s in lead[:-1]:
+            tokens *= s
+        tokens *= SHAPES[shape_id]["seq_len"]  # total positions incl. stubs
+        meta = dict(kind=kind, tokens=int(tokens), flops_mult=6,
+                    n_params=n_total, n_active=n_active,
+                    logical_mesh=dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape))))
+        return jitted, (state, batch_sds), mesh, meta
+
+    # ----- serve shapes -----
+    # kv-split mesh is a DECODE optimization (head-aligned cache writes);
+    # prefill is q-compute-bound and prefers full 16-way head sharding.
+    kv_split = 1
+    if kind == "decode":
+        kv_split = meshlib.serve_kv_split(cfg.num_heads, cfg.num_kv_heads)
+        if cfg.arch_type == "ssm":
+            kv_split = meshlib.serve_kv_split(cfg.num_heads, cfg.num_heads)
+    mesh = meshlib.make_serve_mesh(multi_pod=multi_pod, kv=kv_split)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    io = serve_specs(cfg, shape_id)
+    param_specs_tree = sp.serve_param_specs(cfg, params_sds, axis_sizes)
+    param_sh = sp.to_shardings(mesh, param_specs_tree)
+    cache_sh = sp.to_shardings(mesh, sp.serve_cache_specs(cfg, io["cache"], shape_id, mesh))
+    batch_sh = sp.to_shardings(mesh, sp.serve_batch_specs(io["batch"], mesh))
+    step = make_serve_step(bundle, kind)
+    jitted = jax.jit(
+        step,
+        in_shardings=(param_sh, batch_sh, cache_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=2,
+    )
+    B = SHAPES[shape_id]["global_batch"]
+    tokens = B * (SHAPES[shape_id]["seq_len"] if kind == "prefill" else 1)
+    meta = dict(kind=kind, tokens=int(tokens), flops_mult=2,
+                n_params=n_total, n_active=n_active,
+                logical_mesh=dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape))))
+    return jitted, (params_sds, io["batch"], io["cache"]), mesh, meta
+
+
+def run_case(arch_id: str, shape_id: str, mesh_kind: str, overrides=None,
+             verbose: bool = True) -> dict:
+    from repro.configs.shapes import SkipShape
+
+    multi_pod = mesh_kind == "multipod"
+    rec: dict = dict(arch=arch_id, shape=shape_id, mesh=mesh_kind,
+                     overrides=overrides or {})
+    t0 = time.time()
+    try:
+        jitted, args, mesh, meta = build_case(
+            arch_id, shape_id, multi_pod=multi_pod, overrides=overrides)
+        rec.update(meta)
+        with mesh:
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        chips = mesh.devices.size
+        cost = compiled.cost_analysis() or {}
+        mema = compiled.memory_analysis()
+        # Trip-count-aware accounting (XLA's cost_analysis counts every
+        # while body once -- useless for scan-heavy programs; see
+        # launch/hlo_analysis.py). Raw XLA numbers kept as cross-checks.
+        from repro.launch import hlo_analysis as H
+        hc = H.analyze(compiled.as_text())
+        flops = hc.flops
+        bytes_acc = hc.bytes
+        coll = {k: float(v) for k, v in hc.per_collective.items()}
+        coll_total = float(hc.collective_bytes)
+        mem = {}
+        if mema is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                v = getattr(mema, k, None)
+                if v is not None:
+                    mem[k] = int(v)
+        terms = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll_total / LINK_BW,
+        }
+        dominant = max(terms, key=terms.get)
+        model_flops = meta["flops_mult"] * meta["n_active"] * meta["tokens"]
+        total_hlo_flops = flops * chips
+        rec.update(
+            status="ok",
+            chips=int(chips),
+            flops_per_device=flops,
+            bytes_per_device=bytes_acc,
+            collective_bytes_per_device=coll_total,
+            collectives=coll,
+            top_collectives=[[b, w] for b, w in hc.top_collectives],
+            by_scope=hc.by_scope,
+            xla_cost_analysis={"flops_body_once": float(cost.get("flops", 0.0)),
+                               "bytes_body_once": float(cost.get("bytes accessed", 0.0))},
+            memory=mem,
+            terms=terms,
+            dominant=dominant,
+            model_flops=float(model_flops),
+            total_hlo_flops=float(total_hlo_flops),
+            useful_flops_ratio=(model_flops / total_hlo_flops) if total_hlo_flops else 0.0,
+            compile_s=time.time() - t0,
+        )
+        if verbose:
+            print(f"  memory_analysis: {mem}")
+            print(f"  cost_analysis: flops/dev={flops:.3e} bytes/dev={bytes_acc:.3e}")
+            print(f"  collectives/dev: { {k: f'{v:.3e}' for k, v in coll.items() if v} }")
+            print(f"  terms(s): " + " ".join(f"{k}={v:.4f}" for k, v in terms.items())
+                  + f"  dominant={dominant}")
+            print(f"  useful-FLOPs ratio = {rec['useful_flops_ratio']:.3f}")
+    except SkipShape as e:
+        rec.update(status="skip", reason=str(e), compile_s=time.time() - t0)
+        if verbose:
+            print(f"  SKIP: {e}")
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:],
+                   compile_s=time.time() - t0)
+        if verbose:
+            print(f"  ERROR: {type(e).__name__}: {e}")
+    return rec
+
+
+def main() -> None:
+    from repro.configs import ARCH_IDS, SHAPE_IDS
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", default="pod", choices=("pod", "multipod", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg/plan override key=value (ints parsed)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else args.arch
+    shapes = list(SHAPE_IDS) if (args.all or not args.shape) else args.shape
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    n_ok = n_skip = n_err = 0
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                print(f"[dryrun:{args.tag}] {a} x {s} x {m}")
+                rec = run_case(a, s, m, overrides=overrides or None)
+                fn = outdir / f"{a}__{s}__{m}__{args.tag}.json"
+                fn.write_text(json.dumps(rec, indent=1))
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skip"
+                n_err += rec["status"] == "error"
+    print(f"[dryrun:{args.tag}] ok={n_ok} skip={n_skip} error={n_err}")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

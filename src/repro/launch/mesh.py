@@ -1,0 +1,90 @@
+"""Production meshes.
+
+Physical meshes are pinned by the deployment target (TPU v5e pods):
+
+    single-pod : (16, 16)       axes ("data", "model")   = 256 chips
+    multi-pod  : (2, 16, 16)    axes ("pod", "data", "model") = 512 chips
+
+Functions (never module-level constants) so importing this module never
+touches jax device state -- the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+
+Training *re-factors the same device array* into the logical HFL mesh
+``(group, client, fsdp, model)`` per the architecture's MeshPlan: groups x
+clients carry the paper's topology (MTGC's two all-reduce timescales), and
+fsdp x model shard each client's replica. On the multi-pod mesh the pod
+axis multiplies the group axis -- pods ARE groups, so the infrequent
+global aggregation (every E*H steps) is the only traffic on the slow
+inter-pod links, which is exactly the paper's communication design.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding.plan import MeshPlan
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_train_mesh(plan: MeshPlan, *, multi_pod: bool = False) -> Mesh:
+    """Logical (group, client, fsdp, model) mesh over the production devices.
+
+    The physical device order is preserved (pure relabeling): the last
+    logical axis runs over the last physical axis, so ``model`` stays on
+    the fastest ICI dimension and ``group`` spans pods in the 2-pod case.
+    """
+    g, k, f, m = plan.validate().train_factors
+    phys = make_production_mesh(multi_pod=multi_pod)
+    if multi_pod:
+        g *= MULTI_POD[0]
+    devices = phys.devices.reshape(g, k, f, m)
+    return Mesh(devices, ("group", "client", "fsdp", "model"))
+
+
+def make_serve_mesh(*, multi_pod: bool = False, kv: int = 1) -> Mesh:
+    """Serving mesh. ``kv`` splits the 16-way model axis into (kv, tp):
+    GQA kv-heads get their own axis so the KV cache shards by HEAD.
+
+    Why: when kv_heads doesn't divide 16, the cache would otherwise shard
+    by sequence, and the one-token cache write (dynamic-update-slice at a
+    traced index on a sharded dim) makes SPMD rewrite the entire cache
+    shard every layer -- the dominant decode HBM term (Perf iteration 2,
+    EXPERIMENTS.md §Perf). kv=1 degenerates to the plain (data, model) mesh.
+    """
+    if kv <= 1:
+        return make_production_mesh(multi_pod=multi_pod)
+    tp = 16 // kv
+    phys = make_production_mesh(multi_pod=multi_pod)
+    if multi_pod:
+        devices = phys.devices.reshape(2, 16, kv, tp)
+        return Mesh(devices, ("pod", "data", "kv", "tp"))
+    devices = phys.devices.reshape(16, kv, tp)
+    return Mesh(devices, ("data", "kv", "tp"))
+
+
+def serve_kv_split(num_heads: int, num_kv_heads: int) -> int:
+    """Largest power-of-2 divisor of 16 that divides both head counts."""
+    for kv in (16, 8, 4, 2):
+        if num_kv_heads % kv == 0 and num_heads % kv == 0:
+            return kv
+    return 1
+
+
+def describe(mesh: Mesh) -> str:
+    return f"mesh{dict(zip(mesh.axis_names, mesh.devices.shape))} ({mesh.devices.size} chips)"
+
+
+def smoke_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Tiny host mesh for CPU tests (requires >=4 forced host devices)."""
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)

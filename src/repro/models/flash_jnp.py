@@ -1,0 +1,154 @@
+"""Blocked online-softmax attention with a flash-style custom VJP.
+
+Differentiating through the naive blocked scan makes jax stack every
+per-block (m, l, acc) carry and materialize the [Tq, bk] probability
+blocks as saved residuals -- the dominant HBM term of every train_4k
+dry-run (EXPERIMENTS.md §Perf, iteration "flash-vjp"). This version:
+
+* forward: same online-softmax block scan, but only (o, m, l) survive;
+* backward: flash-attention recompute -- per kv block the probabilities
+  are rebuilt from (q, k, m, l) and consumed immediately:
+
+      D     = rowsum(do * o)
+      p     = exp(q k^T * scale - m) / l        (masked)
+      dv_b  = p^T do
+      ds    = p * (do v_b^T - D)
+      dq   += ds k_b * scale
+      dk_b  = ds^T q * scale
+
+``window`` may be a traced per-layer scalar (gemma3's 5:1 pattern inside
+lax.scan), so it is a regular (integer, non-differentiable) argument.
+This is also exactly the recompute schedule of the Pallas TPU kernel
+(kernels/flash_attention.py); on CPU the dry-run uses this jnp twin.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal, window, Tk):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    m &= kpos[None, :] < Tk
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    w = jnp.asarray(window)
+    lo = qpos[:, None] - jnp.where(w > 0, w, Tk + qpos.shape[0])
+    m &= kpos[None, :] > lo
+    return m
+
+
+def _blocks(a, block):
+    """[B, S, H, Dh] -> [nb, B, H, block, Dh] (zero-padded)."""
+    B, S, H, Dh = a.shape
+    nb = -(-S // block)
+    pad = nb * block - S
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return a.reshape(B, nb, block, H, Dh).transpose(1, 0, 3, 2, 4)
+
+
+def _fwd(q, k, v, window, causal, q_offset, block):
+    B, Tq, H, Dh = q.shape
+    Tk = k.shape[1]
+    scale = Dh ** -0.5
+    qpos = jnp.arange(Tq) + q_offset
+    qh = q.transpose(0, 2, 1, 3).astype(jnp.float32)          # [B,H,Tq,Dh]
+    kb = _blocks(k, block)
+    vb = _blocks(v, block)
+    nb = kb.shape[0]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, ib = inp
+        kpos = ib * block + jnp.arange(block)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qh, kblk.astype(jnp.float32)) * scale
+        msk = _mask(qpos, kpos, causal, window, Tk)
+        logits = jnp.where(msk[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Tq), jnp.float32)
+    a0 = jnp.zeros((B, H, Tq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    o = (acc / jnp.maximum(l[..., None], 1e-30)).transpose(0, 2, 1, 3)
+    return o.astype(q.dtype), (m, l)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_attention_vjp(q, k, v, window, q_offset, causal, block):
+    o, _ = _fwd(q, k, v, window, causal, q_offset, block)
+    return o
+
+
+def _vjp_fwd(q, k, v, window, q_offset, causal, block):
+    o, (m, l) = _fwd(q, k, v, window, causal, q_offset, block)
+    return o, (q, k, v, window, q_offset, o, m, l)
+
+
+def _vjp_bwd(causal, block, res, do):
+    q, k, v, window, q_offset, o, m, l = res
+    B, Tq, H, Dh = q.shape
+    Tk = k.shape[1]
+    scale = Dh ** -0.5
+    qpos = jnp.arange(Tq) + q_offset
+    qh = q.transpose(0, 2, 1, 3).astype(jnp.float32)
+    doh = do.transpose(0, 2, 1, 3).astype(jnp.float32)
+    oh = o.transpose(0, 2, 1, 3).astype(jnp.float32)
+    Dvec = jnp.sum(doh * oh, axis=-1)                          # [B,H,Tq]
+    linv = 1.0 / jnp.maximum(l, 1e-30)
+    kb = _blocks(k, block)
+    vb = _blocks(v, block)
+    nb = kb.shape[0]
+
+    def body(dq, inp):
+        kblk, vblk, ib = inp
+        kpos = ib * block + jnp.arange(block)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qh, kblk.astype(jnp.float32)) * scale
+        msk = _mask(qpos, kpos, causal, window, Tk)
+        logits = jnp.where(msk[None, None], logits, NEG_INF)
+        p = jnp.exp(logits - m[..., None]) * linv[..., None]    # [B,H,Tq,bk]
+        dv = jnp.einsum("bhqk,bhqd->bhkd", p, doh)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", doh, vblk.astype(jnp.float32))
+        ds = p * (dp - Dvec[..., None])
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, kblk.astype(jnp.float32)) * scale
+        dk = jnp.einsum("bhqk,bhqd->bhkd", ds, qh) * scale
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((B, H, Tq, Dh), jnp.float32)
+    dq, (dkb, dvb) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nb)))
+
+    def unblock(a):  # [nb,B,H,block,Dh] -> [B,S,H,Dh]
+        a = a.transpose(1, 0, 3, 2, 4).reshape(B, nb * block, H, Dh)
+        return a[:, :Tk]
+
+    dq = dq.transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = unblock(dkb).astype(k.dtype)
+    dv = unblock(dvb).astype(v.dtype)
+    dwin = np.zeros(jnp.shape(window), jax.dtypes.float0)
+    doff = np.zeros(jnp.shape(q_offset), jax.dtypes.float0)
+    return dq, dk, dv, dwin, doff
+
+
+flash_attention_vjp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def blocked_attention_flash(q, k, v, *, causal=True, window=0, q_offset=0,
+                            block=512):
+    """Drop-in for layers.blocked_attention with the flash custom VJP.
+    ``window``/``q_offset`` may be traced scalars (per-layer windows inside
+    lax.scan; prefill cache offsets)."""
+    win = jnp.asarray(window, jnp.int32)
+    off = jnp.asarray(q_offset, jnp.int32)
+    return flash_attention_vjp(q, k, v, win, off, causal, int(block))

@@ -1,0 +1,297 @@
+"""Shared transformer building blocks for the production architecture zoo.
+
+Pure-functional: ``init_*`` builds param pytrees, ``apply`` functions are
+shape-polymorphic. Conventions:
+
+* params are stored in ``param_dtype`` (bf16 by default for the big archs);
+  norms/softmax accumulate in f32.
+* attention supports GQA, RoPE, optional QKV bias (qwen2.5), per-head
+  qk-RMSNorm (qwen3), and sliding windows (mixtral / gemma3 local layers /
+  hymba). ``window <= 0`` means global.
+* ``blocked_attention`` is the fused-style jnp path (online softmax over KV
+  blocks) used for long sequences; ``kernels/flash_attention`` is the Pallas
+  TPU version of the same contract.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- basics
+
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms(d, dtype):
+    return jnp.zeros((d,), dtype)  # stored as (scale - 1), gemma-style
+
+
+def _norm_init(rng, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return ((1.0 / fan_in) ** 0.5 * jax.random.normal(rng, shape)).astype(dtype)
+
+
+def init_linear(rng, n_in, n_out, dtype, bias=False):
+    p = {"w": _norm_init(rng, (n_in, n_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(d_head: int, base: float):
+    return 1.0 / (base ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, base: float):
+    """x: [..., T, H, Dh]; positions: [..., T]."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, base)                       # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, Dh/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def init_attention(rng, d_model, n_heads, n_kv, d_head, dtype, qkv_bias=False, qk_norm=False):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": init_linear(ks[0], d_model, n_heads * d_head, dtype, qkv_bias),
+        "wk": init_linear(ks[1], d_model, n_kv * d_head, dtype, qkv_bias),
+        "wv": init_linear(ks[2], d_model, n_kv * d_head, dtype, qkv_bias),
+        "wo": init_linear(ks[3], n_heads * d_head, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rms(d_head, dtype)
+        p["k_norm"] = init_rms(d_head, dtype)
+    return p
+
+
+def _expand_kv(k, n_heads):
+    """[B, T, Kv, Dh] -> [B, T, H, Dh] by repeating each kv head."""
+    n_kv = k.shape[-2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=-2)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Reference attention. q: [B, Tq, H, Dh], k/v: [B, Tk, H, Dh].
+
+    ``q_offset``: absolute position of q[0] (decode: Tk-1). ``window``>0
+    masks keys older than ``window`` positions (sliding window).
+    """
+    B, Tq, H, Dh = q.shape
+    Tk = k.shape[1]
+    scale = Dh ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(Tq) + q_offset
+    kpos = jnp.arange(Tk)
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    # Sliding window (no-op when window <= 0). ``window`` may be a traced
+    # per-layer scalar (gemma3's 5:1 local:global pattern inside lax.scan).
+    window = jnp.asarray(window)
+    lo = qpos[:, None] - jnp.where(window > 0, window, Tk + Tq)
+    mask &= kpos[None, :] > lo
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, q_offset=0, block=512):
+    """Online-softmax attention: scans KV blocks, O(Tq*block) live memory.
+
+    Same contract as ``naive_attention``; used for long sequences and as the
+    jnp twin of the Pallas flash kernel.
+    """
+    B, Tq, H, Dh = q.shape
+    Tk = k.shape[1]
+    nb = -(-Tk // block)
+    pad = nb * block - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, block, H, Dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, H, Dh).transpose(1, 0, 2, 3, 4)
+    scale = Dh ** -0.5
+    qpos = jnp.arange(Tq) + q_offset
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, bidx = inp
+        kpos = bidx * block + jnp.arange(block)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kblk).astype(jnp.float32) * scale
+        msk = kpos[None, :] < Tk
+        if causal:
+            msk &= kpos[None, :] <= qpos[:, None]
+        w = jnp.asarray(window)
+        lo = qpos[:, None] - jnp.where(w > 0, w, Tk + Tq)
+        msk &= kpos[None, :] > lo
+        logits = jnp.where(msk[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Tq), jnp.float32)
+    a0 = jnp.zeros((B, H, Tq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def gqa_decode_attention(q, k, v, *, window=0, q_offset=0):
+    """One-token decode attention WITHOUT expanding GQA KV heads.
+
+    q: [B, 1, H, Dh]; k/v: [B, S, Kv, Dh]. The grouped einsum keeps the
+    cache at Kv heads (expanding to H would materialize group x the cache --
+    the dominant decode temp at 32k/500k contexts). Softmax runs over the
+    (possibly sequence-sharded) S axis; under GSPMD the partial max/sum
+    reductions lower to tiny all-reduces (flash-decode combine).
+    """
+    B, Tq, H, Dh = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    grp = H // Kv
+    qg = q.reshape(B, Tq, Kv, grp, Dh)
+    # bf16 inputs, f32 accumulate: casting k/v would materialize an f32
+    # copy of the whole cache per layer (dominant decode HBM traffic).
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * (Dh ** -0.5)
+    kpos = jnp.arange(S)
+    mask = kpos <= q_offset
+    # window may be a traced per-layer scalar (gemma3's 5:1 pattern in scan)
+    w = jnp.asarray(window)
+    mask &= kpos > jnp.where(w > 0, q_offset - w, -1)
+    logits = jnp.where(mask[None, None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Tq, H, Dh).astype(q.dtype)
+
+
+def attention_block(
+    p, x, *, n_heads, n_kv, d_head, rope_base, causal=True, window=0,
+    qk_norm=False, positions=None, kv_cache=None, cache_index=None,
+    attn_impl="blocked", block=512, kv_memory=None,
+):
+    """Full attention sub-block: proj -> rope -> (cache) -> attn -> out proj.
+
+    kv_cache: optional dict(k=[B, S, Kv, Dh], v=...) for decode; the new
+    token is written at ``cache_index`` and attention runs over the cache.
+    kv_memory: optional [B, S_mem, d_model] for cross-attention (whisper) --
+    keys/values come from memory and no cache/rope is used on them.
+    Returns (out, new_cache).
+    """
+    B, T, _ = x.shape
+    scope = jax.named_scope("attn")
+    scope.__enter__()
+    q = linear(p["wq"], x).reshape(B, T, n_heads, d_head)
+    src = kv_memory if kv_memory is not None else x
+    k = linear(p["wk"], src).reshape(B, src.shape[1], n_kv, d_head)
+    v = linear(p["wv"], src).reshape(B, src.shape[1], n_kv, d_head)
+
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+
+    if kv_memory is None:
+        if positions is None:
+            # absolute positions: prefill writes T tokens starting at
+            # cache_index (0); decode writes one token at cache_index.
+            base = 0 if cache_index is None else cache_index
+            positions = jnp.broadcast_to(jnp.arange(T)[None, :] + base, (B, T))
+        q = apply_rope(q, positions, rope_base)
+        k = apply_rope(k, positions, rope_base)
+
+    new_cache = None
+    q_offset = 0
+    if kv_cache is not None:
+        # decode: write the new K/V at cache_index, attend over full cache
+        idx = cache_index  # scalar int
+        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v, (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        q_offset = idx
+
+    # One-token decode (Tq == 1) takes the GQA-grouped one-shot path: no
+    # KV-head expansion (which would materialize group x the cache) and no
+    # KV-block scan (which would all-gather a sequence-sharded cache per
+    # block). Under GSPMD the softmax over the sharded S axis lowers to
+    # flash-decode-style partial max/sum + tiny all-reduce combines.
+    # (Perf iteration 1, EXPERIMENTS.md §Perf.)
+    if T == 1 and kv_cache is not None:
+        o = gqa_decode_attention(q, k, v, window=window, q_offset=q_offset)
+    else:
+        k = _expand_kv(k, n_heads)
+        v = _expand_kv(v, n_heads)
+        if attn_impl == "blocked":
+            # flash-style custom VJP: backward recomputes per-block
+            # probabilities instead of saving per-block softmax state
+            # (Perf iteration "flash-vjp", EXPERIMENTS.md §Perf)
+            from repro.models.flash_jnp import blocked_attention_flash
+            o = blocked_attention_flash(
+                q, k, v, causal=causal and kv_memory is None, window=window,
+                q_offset=q_offset, block=block)
+        else:
+            o = naive_attention(q, k, v, causal=causal and kv_memory is None,
+                                window=window, q_offset=q_offset)
+    out = linear(p["wo"], o.reshape(B, T, n_heads * d_head))
+    scope.__exit__(None, None, None)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def init_swiglu(rng, d_model, d_ff, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": init_linear(ks[0], d_model, d_ff, dtype),
+        "wg": init_linear(ks[1], d_model, d_ff, dtype),
+        "wo": init_linear(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu(p, x):
+    with jax.named_scope("mlp"):
+        return linear(p["wo"], jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x))
+
+
+def init_embedding(rng, vocab, d_model, dtype):
+    return {"table": (0.02 * jax.random.normal(rng, (vocab, d_model))).astype(dtype)}
+
+
+def embed(p, tokens):
+    with jax.named_scope("embed"):
+        return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    return x @ p["table"].T

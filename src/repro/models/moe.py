@@ -1,0 +1,106 @@
+"""Mixture-of-Experts block (Mixtral-style top-k routing, Granite top-8).
+
+Dispatch uses the capacity-based one-hot einsum formulation (Mesh-TF /
+GShard style): it is dense linear algebra, so it (a) runs on the MXU, (b)
+shards cleanly under GSPMD with experts on a mesh axis (the all-to-all
+emerges from the dispatch einsums), and (c) has well-defined HLO FLOPs for
+the roofline. Router load-balance aux loss follows Switch/Mixtral.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+
+def init_moe(rng, d_model, d_ff, num_experts, dtype):
+    ks = jax.random.split(rng, 4)
+
+    def ew(key, n_in, n_out):
+        return ((1.0 / n_in) ** 0.5 * jax.random.normal(key, (num_experts, n_in, n_out))).astype(dtype)
+
+    return {
+        "router": init_linear(ks[0], d_model, num_experts, dtype),
+        "wi": ew(ks[1], d_model, d_ff),
+        "wg": ew(ks[2], d_model, d_ff),
+        "wo": ew(ks[3], d_ff, d_model),
+    }
+
+
+def moe_block(p, x, *, num_experts, top_k, capacity_factor=1.25, dropless=False,
+              chunk_tokens=4096, sequential=True):
+    """x: [B, T, D] -> (out [B, T, D], aux_loss scalar).
+
+    ``dropless=True`` sets capacity = S (no token ever dropped) -- used by
+    the serve paths so prefill/decode are bit-consistent; it is only safe
+    for modest token counts (capacity buffers are [E, S, D]), so callers
+    gate it on S. Training keeps GShard-style capacity dropping.
+    """
+    B, T, D = x.shape
+    S = B * T
+    scope = jax.named_scope("moe")
+    scope.__enter__()
+    # Capacity-based dispatch is O(S * E * C) with C ~ S: quadratic in
+    # tokens. For long prefills, dispatch in chunks of <=16k tokens
+    # (capacity budgeted per chunk -- standard blocked routing), which keeps
+    # the dispatch linear in S and the [E, C, D] buffers bounded.
+    chunk = S
+    for cand in (chunk_tokens, chunk_tokens // 2, chunk_tokens // 4):
+        if S > chunk_tokens and S % cand == 0:
+            chunk = cand
+            break
+    if chunk < S:
+        # training: sequential (lax.map) so only ONE chunk's [E, C, D]
+        # dispatch buffers are live at a time (grad accumulation multiplies
+        # live copies); serving: vmap (batched dispatch, fewer reshards).
+        xc = x.reshape(S // chunk, 1, chunk, D)
+        fn = lambda xx: moe_block(p, xx, num_experts=num_experts, top_k=top_k,
+                                  capacity_factor=capacity_factor,
+                                  dropless=dropless, chunk_tokens=chunk_tokens,
+                                  sequential=sequential)
+        outs, auxes = jax.lax.map(fn, xc) if sequential else jax.vmap(fn)(xc)
+        scope.__exit__(None, None, None)
+        return outs.reshape(B, T, D), jnp.mean(auxes)
+    xf = x.reshape(S, D)
+
+    logits = linear(p["router"], xf).astype(jnp.float32)        # [S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)            # [S, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if dropless:
+        capacity = S
+    else:
+        capacity = min(S, max(int(capacity_factor * S * top_k / num_experts), 4))
+
+    # Position of each (token, choice) inside its expert's buffer.
+    onehot = jax.nn.one_hot(gate_idx, num_experts, dtype=jnp.int32)  # [S, k, E]
+    flat = onehot.reshape(S * top_k, num_experts)
+    pos = jnp.cumsum(flat, axis=0) - 1                                # [S*k, E]
+    pos = (pos * flat).sum(-1).reshape(S, top_k)                      # [S, k]
+    keep = pos < capacity
+
+    # dispatch[S, k, E, C] -> combine with gates
+    disp = (
+        jax.nn.one_hot(gate_idx, num_experts, dtype=xf.dtype)[..., None]
+        * jax.nn.one_hot(pos, capacity, dtype=xf.dtype)[..., None, :]
+        * keep[..., None, None].astype(xf.dtype)
+    )                                                                  # [S,k,E,C]
+    disp_tok = disp.sum(1)                                             # [S, E, C]
+    expert_in = jnp.einsum("sec,sd->ecd", disp_tok, xf)                # [E, C, D]
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", expert_in, p["wi"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wo"])                # [E, C, D]
+
+    combine = (disp * gate_vals[..., None, None].astype(xf.dtype)).sum(1)  # [S,E,C]
+    out = jnp.einsum("sec,ecd->sd", combine, expert_out)
+
+    # Load-balance auxiliary loss (Switch eq. 4).
+    frac_tokens = jax.nn.one_hot(gate_idx[:, 0], num_experts).mean(0)
+    frac_probs = probs.mean(0)
+    aux = num_experts * jnp.sum(frac_tokens * frac_probs)
+
+    scope.__exit__(None, None, None)
+    return out.reshape(B, T, D), aux

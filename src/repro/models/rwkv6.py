@@ -1,0 +1,143 @@
+"""RWKV-6 "Finch" time-mixing (attention-free, data-dependent decay).
+
+Recurrence per head (state S in R^{Dk x Dv}):
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T        with  w_t = exp(-exp(x_w(t)))
+
+Data dependence: w_t, and the token-shift mixing coefficients, are functions
+of the input (simplified LoRA-free projection of the token-shifted input --
+the structural property the paper's systems contribution relies on, i.e.
+per-token per-channel decay, is preserved).
+
+Two execution paths with identical semantics:
+* ``rwkv6_chunked``: chunked parallel form -- within-chunk work is batched
+  matmuls (MXU-friendly; what the Pallas kernel implements per-block),
+  cross-chunk state is a short lax.scan. Used for training/prefill.
+* ``rwkv6_step``: O(1) single-token state update. Used for decode
+  (this is why rwkv6 runs the 524k-context shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, init_rms, linear, rms_norm
+
+
+def init_rwkv6(rng, d_model, n_heads, dtype):
+    d_head = d_model // n_heads
+    ks = jax.random.split(rng, 8)
+    p = {
+        "wr": init_linear(ks[0], d_model, d_model, dtype),
+        "wk": init_linear(ks[1], d_model, d_model, dtype),
+        "wv": init_linear(ks[2], d_model, d_model, dtype),
+        "wg": init_linear(ks[3], d_model, d_model, dtype),
+        "wd": init_linear(ks[4], d_model, d_model, dtype),  # decay projection
+        "wo": init_linear(ks[5], d_model, d_model, dtype),
+        "u": (0.1 * jax.random.normal(ks[6], (n_heads, d_head))).astype(jnp.float32),
+        "decay_base": jnp.full((d_model,), -1.0, jnp.float32),
+        "mix": (0.5 * jnp.ones((4, d_model))).astype(dtype),  # token-shift mix r/k/v/d
+        "ln_out": init_rms(d_model, dtype),
+    }
+    return p
+
+
+def _proj(p, x, x_prev, n_heads):
+    """Token-shifted projections -> r, k, v, log-decay, gate."""
+    B, T, D = x.shape
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)  # shifted input
+
+    def mix(i):
+        m = p["mix"][i]
+        return x * m + xs * (1 - m)
+
+    r = linear(p["wr"], mix(0))
+    k = linear(p["wk"], mix(1))
+    v = linear(p["wv"], mix(2))
+    d = linear(p["wd"], mix(3)).astype(jnp.float32)
+    g = jax.nn.silu(linear(p["wg"], x))
+    # log w_t = -exp(base + d)  in (-inf, 0): per-token per-channel decay
+    logw = -jnp.exp(p["decay_base"] + jnp.tanh(d))            # [B,T,D] f32
+    H, Dh = n_heads, D // n_heads
+    shp = (B, T, H, Dh)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp), logw.reshape(shp), g)
+
+
+def rwkv6_chunked(p, x, x_prev, state, *, n_heads, chunk=64):
+    """x: [B,T,D]; state: [B,H,Dk,Dv] f32. Returns (out, last_x, new_state)."""
+    return _rwkv6_chunked(p, x, x_prev, state, n_heads=n_heads, chunk=chunk)
+
+
+def _rwkv6_chunked(p, x, x_prev, state, *, n_heads, chunk):
+    scope = jax.named_scope("rwkv")
+    scope.__enter__()
+    B, T, D = x.shape
+    H = n_heads
+    Dh = D // H
+    r, k, v, logw, g = _proj(p, x, x_prev, H)
+    # Pad T to a chunk multiple: pad tokens carry k=0 (no state update) and
+    # logw=0 (decay 1), so the carried-out state is exact; their outputs are
+    # sliced off below.
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v, logw = (jnp.pad(a, zp) for a in (r, k, v, logw))
+    nc = (T + pad) // chunk
+    C = chunk
+
+    def resh(a):  # [B,Tp,H,Dh] -> [nc, B, H, C, Dh]
+        return a.reshape(B, nc, C, H, Dh).transpose(1, 0, 3, 2, 4)
+
+    r_, k_, v_, lw_ = map(resh, (r, k, v, logw))
+    u = p["u"].astype(jnp.float32)                              # [H, Dh]
+
+    def chunk_fn(S, inp):
+        rc, kc, vc, lwc = inp                                   # [B,H,C,Dh]
+        rc = rc.astype(jnp.float32)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        cum = jnp.cumsum(lwc, axis=2)                           # inclusive logcum
+        cum_ex = cum - lwc                                       # exclusive
+        # Contribution of the carried-in state: A = r_t * exp(cum_ex)
+        a = rc * jnp.exp(cum_ex)
+        o_state = jnp.einsum("bhcd,bhde->bhce", a, S)
+        # Intra-chunk: pairwise decays exp(cum_ex[t] - cum[i]) for i < t,
+        # plus the diag(u) bonus on i == t.
+        dmat = cum_ex[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,H,C,C,Dh]
+        tri = jnp.tril(jnp.ones((C, C), bool), -1)[None, None, :, :, None]
+        w_pair = jnp.where(tri, jnp.exp(dmat), 0.0)
+        att = jnp.einsum("bhcd,bhid,bhcid->bhci", rc, kc, w_pair)
+        o_intra = jnp.einsum("bhci,bhie->bhce", att, vc)
+        # diagonal (bonus) term: (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bhcd,hd,bhcd->bhc", rc, u, kc)
+        o_diag = bonus[..., None] * vc
+        o = o_state + o_intra + o_diag
+        # State update: S' = diag(prod w) S + sum_i exp(cum[C-1]-cum[i]) k_i v_i^T
+        wtot = jnp.exp(cum[:, :, -1, :])                         # [B,H,Dh]
+        kdec = kc * jnp.exp(cum[:, :, -1:, :] - cum)
+        S = wtot[..., None] * S + jnp.einsum("bhid,bhie->bhde", kdec, vc)
+        return S, o
+
+    state, o = jax.lax.scan(chunk_fn, state.astype(jnp.float32), (r_, k_, v_, lw_))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, T + pad, H, Dh)[:, :T]  # [B,T,H,Dh]
+    o = rms_norm(o.reshape(B, T, D).astype(x.dtype), p["ln_out"])
+    out = linear(p["wo"], o * g)
+    scope.__exit__(None, None, None)
+    return out, x[:, -1], state
+
+
+def rwkv6_step(p, x_t, x_prev, state, *, n_heads):
+    """Single-token decode. x_t: [B, D]; state: [B,H,Dk,Dv] f32."""
+    B, D = x_t.shape
+    r, k, v, logw, g = _proj(p, x_t[:, None], x_prev, n_heads)
+    r, k, v, logw = (a[:, 0].astype(jnp.float32) for a in (r, k, v, logw))
+    g = g[:, 0]
+    u = p["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    o = jnp.einsum("bhd,bhde->bhe", r, state + u[None, :, :, None] * kv)
+    state = jnp.exp(logw)[..., None] * state + kv
+    H, Dh = n_heads, D // n_heads
+    o = rms_norm(o.reshape(B, D).astype(x_t.dtype), p["ln_out"])
+    return linear(p["wo"], o * g), x_t, state

@@ -1,0 +1,214 @@
+"""The paper's own model zoo (Sec. 5.1), in pure JAX.
+
+* MLP: 2 hidden layers x 200 units + softmax  (EMNIST-L / Fashion-MNIST)
+* CNN: the McMahan et al. CIFAR CNN            (CIFAR-10 / CINIC-10)
+* ResNet-GN: ResNet with GroupNorm in place of BatchNorm (CIFAR-100);
+  depth is configurable (the paper uses ResNet-18; smoke tests shrink it)
+* LSTM: char-level LSTM (Shakespeare)
+
+Each factory returns ``(init_fn(rng) -> params, apply_fn(params, x) -> logits)``.
+Models are plain pytrees -- no framework dependency -- so the HFL engine's
+[G, K]-stacked vmapping works untouched.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Init = Callable[[jax.Array], dict]
+Apply = Callable[[dict, jax.Array], jax.Array]
+
+
+def _dense(rng, n_in, n_out, scale=None):
+    scale = scale if scale is not None else (2.0 / n_in) ** 0.5
+    w = scale * jax.random.normal(rng, (n_in, n_out), jnp.float32)
+    return {"w": w, "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+def mlp(num_classes: int, input_dim: int, hidden: int = 200) -> Tuple[Init, Apply]:
+    def init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "l1": _dense(k1, input_dim, hidden),
+            "l2": _dense(k2, hidden, hidden),
+            "out": _dense(k3, hidden, num_classes),
+        }
+
+    def apply(p, x):
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p["l1"]["w"] + p["l1"]["b"])
+        x = jax.nn.relu(x @ p["l2"]["w"] + p["l2"]["b"])
+        return x @ p["out"]["w"] + p["out"]["b"]
+
+    return init, apply
+
+
+def _conv(rng, kh, kw, cin, cout):
+    scale = (2.0 / (kh * kw * cin)) ** 0.5
+    return {
+        "w": scale * jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _apply_conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def cnn(num_classes: int, image_shape=(8, 8, 1)) -> Tuple[Init, Apply]:
+    """McMahan-style CNN: conv5x32 - pool - conv5x64 - pool - fc512 - fc."""
+    h, w, c = image_shape
+
+    def init(rng):
+        ks = jax.random.split(rng, 4)
+        flat = (h // 4) * (w // 4) * 64
+        return {
+            "c1": _conv(ks[0], 5, 5, c, 32),
+            "c2": _conv(ks[1], 5, 5, 32, 64),
+            "f1": _dense(ks[2], flat, 512),
+            "out": _dense(ks[3], 512, num_classes),
+        }
+
+    def apply(p, x):
+        x = x.reshape(x.shape[0], h, w, c)
+        x = jax.nn.relu(_apply_conv(p["c1"], x))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = jax.nn.relu(_apply_conv(p["c2"], x))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p["f1"]["w"] + p["f1"]["b"])
+        return x @ p["out"]["w"] + p["out"]["b"]
+
+    return init, apply
+
+
+def _groupnorm(p, x, groups):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    x = xg.reshape(n, h, w, c)
+    return x * p["scale"] + p["bias"]
+
+
+def _gn_params(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def resnet_gn(
+    num_classes: int,
+    image_shape=(8, 8, 3),
+    widths=(16, 32, 64),
+    blocks_per_stage: int = 2,
+    gn_groups: int = 8,
+) -> Tuple[Init, Apply]:
+    """ResNet with GroupNorm (paper CIFAR-100 config modulo width/depth)."""
+    h, w, c = image_shape
+
+    def init(rng):
+        ks = iter(jax.random.split(rng, 4 + 6 * len(widths) * blocks_per_stage))
+        p = {"stem": _conv(next(ks), 3, 3, c, widths[0]), "stem_gn": _gn_params(widths[0])}
+        cin = widths[0]
+        for s, width in enumerate(widths):
+            for b in range(blocks_per_stage):
+                blk = {
+                    "c1": _conv(next(ks), 3, 3, cin, width),
+                    "gn1": _gn_params(width),
+                    "c2": _conv(next(ks), 3, 3, width, width),
+                    "gn2": _gn_params(width),
+                }
+                if cin != width:
+                    blk["proj"] = _conv(next(ks), 1, 1, cin, width)
+                p[f"s{s}b{b}"] = blk
+                cin = width
+        p["out"] = _dense(next(ks), cin, num_classes)
+        return p
+
+    def apply(p, x):
+        x = x.reshape(x.shape[0], h, w, c)
+        x = jax.nn.relu(_groupnorm(p["stem_gn"], _apply_conv(p["stem"], x), gn_groups))
+        cin = widths[0]
+        for s, width in enumerate(widths):
+            for b in range(blocks_per_stage):
+                blk = p[f"s{s}b{b}"]
+                stride = 2 if (b == 0 and s > 0) else 1
+                y = jax.nn.relu(_groupnorm(blk["gn1"], _apply_conv(blk["c1"], x, stride), gn_groups))
+                y = _groupnorm(blk["gn2"], _apply_conv(blk["c2"], y), gn_groups)
+                sc = x if "proj" not in blk else _apply_conv(blk["proj"], x, stride)
+                if stride != 1 and "proj" not in blk:
+                    sc = sc[:, ::2, ::2, :]
+                x = jax.nn.relu(y + sc)
+                cin = width
+        x = x.mean(axis=(1, 2))
+        return x @ p["out"]["w"] + p["out"]["b"]
+
+    return init, apply
+
+
+def lstm(vocab: int, hidden: int = 128, embed: int = 32) -> Tuple[Init, Apply]:
+    """Char-LSTM for next-token prediction (paper Shakespeare config)."""
+
+    def init(rng):
+        ks = jax.random.split(rng, 4)
+        return {
+            "emb": 0.02 * jax.random.normal(ks[0], (vocab, embed), jnp.float32),
+            "wx": _dense(ks[1], embed, 4 * hidden),
+            "wh": _dense(ks[2], hidden, 4 * hidden, scale=(1.0 / hidden) ** 0.5),
+            "out": _dense(ks[3], hidden, vocab),
+        }
+
+    def apply(p, x):
+        # x: [B, T] int tokens -> logits [B, T, vocab]
+        e = p["emb"][x]                       # [B, T, E]
+        B = x.shape[0]
+        h0 = jnp.zeros((B, p["wh"]["w"].shape[0]), jnp.float32)
+        c0 = jnp.zeros_like(h0)
+
+        def step(carry, et):
+            h, c = carry
+            gates = et @ p["wx"]["w"] + p["wx"]["b"] + h @ p["wh"]["w"] + p["wh"]["b"]
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+
+        _, hs = jax.lax.scan(step, (h0, c0), e.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)            # [B, T, H]
+        return hs @ p["out"]["w"] + p["out"]["b"]
+
+    return init, apply
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+
+
+def make_loss(apply: Apply) -> Callable[[dict, dict], jax.Array]:
+    """Standard classification / next-token loss over {'x','y'} batches."""
+
+    def loss(params, batch):
+        logits = apply(params, batch["x"])
+        return softmax_xent(logits, batch["y"])
+
+    return loss
+
+
+def accuracy(apply: Apply, params, x, y, batch: int = 512) -> float:
+    """Streaming eval accuracy."""
+    n = x.shape[0]
+    correct = 0
+    for i in range(0, n, batch):
+        logits = apply(params, x[i : i + batch])
+        pred = jnp.argmax(logits, -1)
+        yy = y[i : i + batch]
+        correct += int((pred == yy).sum())
+    return correct / y.size

@@ -1,0 +1,96 @@
+"""Selective (Mamba-style) diagonal SSM used by the Hymba hybrid heads.
+
+Diagonal selective state space:
+    h_t = exp(-softplus(dt_t) * A) * h_{t-1} + (dt_t * B_t) x_t
+    y_t = C_t . h_t + D * x_t
+
+with input-dependent dt_t, B_t, C_t (the "selective" part). Parallel mode
+uses ``jax.lax.associative_scan`` over (decay, increment) pairs -- the
+TPU-idiomatic log-depth evaluation; decode mode is the O(1) recurrence
+(why hybrid archs run the 524k shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+
+def init_ssm(rng, d_model, d_inner, d_state, dtype):
+    ks = jax.random.split(rng, 6)
+    return {
+        "win": init_linear(ks[0], d_model, d_inner, dtype),
+        "wdt": init_linear(ks[1], d_model, d_inner, dtype, bias=True),
+        "wb": init_linear(ks[2], d_model, d_state, dtype),
+        "wc": init_linear(ks[3], d_model, d_state, dtype),
+        "wout": init_linear(ks[4], d_inner, d_model, dtype),
+        "log_a": jnp.log(jnp.linspace(1.0, float(d_state), d_state, dtype=jnp.float32))[None, :]
+        + jnp.zeros((d_inner, d_state), jnp.float32),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def _gates(p, x):
+    u = jax.nn.silu(linear(p["win"], x))                      # [B,T,Di]
+    dt = jax.nn.softplus(linear(p["wdt"], x).astype(jnp.float32))  # [B,T,Di]
+    Bm = linear(p["wb"], x).astype(jnp.float32)                # [B,T,S]
+    Cm = linear(p["wc"], x).astype(jnp.float32)                # [B,T,S]
+    A = -jnp.exp(p["log_a"])                                   # [Di,S] (negative)
+    decay = jnp.exp(dt[..., None] * A[None, None])             # [B,T,Di,S]
+    drive = (dt * u.astype(jnp.float32))[..., None] * Bm[:, :, None, :]  # [B,T,Di,S]
+    return u, decay, drive, Cm
+
+
+def _combine(a, b):
+    (da, ia), (db, ib) = a, b
+    return (da * db, ia * db + ib)
+
+
+def ssm_parallel(p, x, state, chunk: int = 2048):
+    """x: [B,T,D] -> (y [B,T,D], new_state [B,Di,S]).
+
+    Time is processed in chunks (associative scan inside, sequential state
+    carry across) to bound the [B,C,Di,S] live activation footprint on long
+    sequences.
+    """
+    scope = jax.named_scope("ssm")
+    scope.__enter__()
+    B, T, D = x.shape
+    C = min(chunk, T)
+    pad = (-T) % C
+    u, decay, drive, Cm = _gates(p, x)
+    if pad:
+        # pad tokens: decay 1, drive 0 -> state passes through unchanged
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        drive = jnp.pad(drive, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (T + pad) // C
+    Di, S = decay.shape[-2:]
+
+    def resh(a):
+        return a.reshape(B, nc, C, *a.shape[2:]).transpose(1, 0, *range(2, a.ndim + 1))
+
+    dec_c, drv_c, cm_c, u_c = map(resh, (decay, drive, Cm, u))
+
+    def chunk_fn(st, inp):
+        dec, drv, cm, uu = inp
+        drv = drv.at[:, 0].add(dec[:, 0] * st)
+        _, h = jax.lax.associative_scan(_combine, (dec, drv), axis=1)
+        y = jnp.einsum("btds,bts->btd", h, cm) + p["d_skip"] * uu.astype(jnp.float32)
+        return h[:, -1], y
+
+    state, ys = jax.lax.scan(chunk_fn, state, (dec_c, drv_c, cm_c, u_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T + pad, Di)[:, :T]
+    out = y.astype(x.dtype) @ p["wout"]["w"] + p["wout"].get("b", 0.0)
+    scope.__exit__(None, None, None)
+    return out, state
+
+
+def ssm_step(p, x_t, state):
+    """x_t: [B,D]; state: [B,Di,S] -> (y [B,D], new_state)."""
+    u, decay, drive, Cm = _gates(p, x_t[:, None])
+    state = decay[:, 0] * state + drive[:, 0]
+    y = jnp.einsum("bds,bs->bd", state, Cm[:, 0]) + p["d_skip"] * u[:, 0].astype(jnp.float32)
+    return (y.astype(x_t.dtype) @ p["wout"]["w"] + p["wout"].get("b", 0.0)), state

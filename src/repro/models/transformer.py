@@ -1,0 +1,418 @@
+"""Unified production model zoo: one scanned-layer decoder substrate with
+pluggable mixers, covering all six assigned architecture families.
+
+Per family:
+  dense   -- pre-RMSNorm GQA attention + SwiGLU (glm4 / qwen2.5 / qwen3 /
+             gemma3; per-layer sliding windows drive gemma3's 5:1 pattern)
+  moe     -- attention + top-k MoE FFN (mixtral, granite)
+  ssm     -- RWKV6 time-mix + RWKV channel-mix (attention-free)
+  hybrid  -- parallel attention + Mamba-SSM heads, fused (hymba)
+  audio   -- whisper enc-dec: bidirectional encoder over (stubbed) conv
+             frames + causal decoder with cross-attention
+  vlm     -- internvl2: projector over (stubbed) ViT patch embeddings
+             prepended to the token stream, dense decoder
+
+Layers are stacked on axis 0 and executed with ``lax.scan`` (compact HLO for
+40+ layer configs) with optional per-layer remat. Every family provides:
+  init(rng)                      -> params
+  loss(params, batch)            -> scalar      (train path)
+  init_cache(batch_size, seq)    -> cache pytree
+  prefill(params, batch, cache)  -> (logits_last, cache)
+  decode_step(params, batch, cache) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rwkv6 as RWKV
+from repro.models import ssm as SSM
+from repro.models.config import ArchConfig
+
+PyTree = Any
+
+
+class ModelBundle(NamedTuple):
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable                # (params, batch) -> scalar
+    forward: Callable             # (params, batch) -> logits (train shapes)
+    init_cache: Callable          # (batch, seq) -> cache
+    prefill: Callable             # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable         # (params, batch, cache) -> (logits, cache)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ------------------------------------------------------------------ layers
+
+
+def _layer_windows(cfg: ArchConfig) -> np.ndarray:
+    """Per-layer sliding window sizes ([L] int32); 0 = global attention."""
+    Lh = cfg.num_layers
+    if cfg.local_global_ratio > 0:
+        r = cfg.local_global_ratio
+        w = np.full(Lh, cfg.sliding_window or 1024, np.int32)
+        w[r::r + 1] = 0  # every (r+1)-th layer is global
+        return w
+    return np.full(Lh, cfg.sliding_window, np.int32)
+
+
+def _init_decoder_layer(cfg: ArchConfig, rng) -> dict:
+    ks = jax.random.split(rng, 8)
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    p = {"ln1": L.init_rms(d, dt), "ln2": L.init_rms(d, dt)}
+    if cfg.arch_type == "ssm":
+        p["rwkv"] = RWKV.init_rwkv6(ks[0], d, cfg.num_heads, dt)
+        p["cmix"] = {
+            "wr": L.init_linear(ks[1], d, d, dt),
+            "wk": L.init_linear(ks[2], d, cfg.d_ff, dt),
+            "wv": L.init_linear(ks[3], cfg.d_ff, d, dt),
+            "mix": (0.5 * jnp.ones((2, d))).astype(dt),
+        }
+        return p
+    p["attn"] = L.init_attention(
+        ks[0], d, cfg.num_heads, cfg.num_kv_heads, cfg.d_head, dt,
+        qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+    )
+    if cfg.arch_type == "hybrid":
+        p["ssm"] = SSM.init_ssm(ks[1], d, cfg.ssm_d_inner or d, cfg.ssm_state, dt)
+    if cfg.arch_type == "moe":
+        p["moe"] = MOE.init_moe(ks[2], d, cfg.d_ff, cfg.num_experts, dt)
+    else:
+        p["mlp"] = L.init_swiglu(ks[2], d, cfg.d_ff, dt)
+    if cfg.arch_type == "audio":
+        p["ln_x"] = L.init_rms(d, dt)
+        p["xattn"] = L.init_attention(
+            ks[3], d, cfg.num_heads, cfg.num_kv_heads, cfg.d_head, dt
+        )
+    return p
+
+
+def _rwkv_cmix(p, x, x_prev):
+    """RWKV channel mixing with token shift. x: [B,T,D]."""
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mr, mk = p["mix"][0], p["mix"][1]
+    xr = x * mr + xs * (1 - mr)
+    xk = x * mk + xs * (1 - mk)
+    r = jax.nn.sigmoid(L.linear(p["wr"], xr))
+    k = jnp.square(jax.nn.relu(L.linear(p["wk"], xk)))
+    return r * L.linear(p["wv"], k)
+
+
+def _apply_decoder_layer(
+    cfg: ArchConfig, p: dict, x, *, window, memory=None,
+    cache=None, cache_index=None, mode: str = "train",
+):
+    """One decoder layer. Returns (x, new_cache).
+
+    cache (per-layer slice) keys by family:
+      attention: k, v           [B, S, Kv, Dh]
+      ssm:       state, x_prev, ffn_prev
+      hybrid:    k, v, sstate
+      audio:     k, v (self-attention only; memory K/V recomputed)
+    """
+    B, T, D = x.shape
+    new_cache = {}
+
+    if cfg.arch_type == "ssm":
+        h = L.rms_norm(x, p["ln1"])
+        if mode == "decode":
+            o, xp, st = RWKV.rwkv6_step(
+                p["rwkv"], h[:, 0], cache["x_prev"], cache["state"],
+                n_heads=cfg.num_heads,
+            )
+            o = o[:, None]
+            new_cache.update(state=st, x_prev=xp)
+        else:
+            st0 = jnp.zeros(
+                (B, cfg.num_heads, D // cfg.num_heads, D // cfg.num_heads), jnp.float32
+            ) if cache is None else cache["state"]
+            xp0 = jnp.zeros((B, D), x.dtype) if cache is None else cache["x_prev"]
+            o, xp, st = RWKV.rwkv6_chunked(
+                p["rwkv"], h, xp0, st0, n_heads=cfg.num_heads, chunk=cfg.rwkv_chunk
+            )
+            new_cache.update(state=st, x_prev=xp)
+        x = x + o
+        h = L.rms_norm(x, p["ln2"])
+        fp = (
+            cache["ffn_prev"]
+            if (cache is not None and mode == "decode")
+            else jnp.zeros((B, D), x.dtype)
+        )
+        x = x + _rwkv_cmix(p["cmix"], h, fp)
+        new_cache["ffn_prev"] = h[:, -1]
+        return x, new_cache, 0.0
+
+    # --- attention families ------------------------------------------
+    h = L.rms_norm(x, p["ln1"])
+    kv_cache = None
+    if cache is not None and "k" in cache:
+        kv_cache = {"k": cache["k"], "v": cache["v"]}
+    attn_out, kvc = L.attention_block(
+        p["attn"], h,
+        n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, d_head=cfg.d_head,
+        rope_base=cfg.rope_base, causal=True, window=window,
+        qk_norm=cfg.qk_norm, kv_cache=kv_cache, cache_index=cache_index,
+        attn_impl="blocked" if (T > 1024 or kv_cache is not None) else "naive",
+        block=cfg.attn_block,
+    )
+    if kvc is not None:
+        new_cache.update(kvc)
+
+    if cfg.arch_type == "hybrid":
+        if mode == "decode":
+            sout, st = SSM.ssm_step(p["ssm"], h[:, 0], cache["sstate"])
+            sout = sout[:, None]
+        else:
+            di = cfg.ssm_d_inner or D
+            st0 = (
+                jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+                if cache is None else cache["sstate"]
+            )
+            sout, st = SSM.ssm_parallel(p["ssm"], h, st0)
+        new_cache["sstate"] = st
+        # Hymba: parallel heads, mean-fused.
+        attn_out = 0.5 * (attn_out + sout.astype(attn_out.dtype))
+
+    x = x + attn_out
+
+    if cfg.arch_type == "audio" and memory is not None:
+        h = L.rms_norm(x, p["ln_x"])
+        xo, _ = L.attention_block(
+            p["xattn"], h,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, d_head=cfg.d_head,
+            rope_base=cfg.rope_base, causal=False, window=0,
+            kv_memory=memory, attn_impl="naive",
+        )
+        x = x + xo
+
+    h = L.rms_norm(x, p["ln2"])
+    aux = 0.0
+    if cfg.arch_type == "moe":
+        # serve paths route dropless (prefill/decode consistency) whenever
+        # the token count keeps the [E, S, D] buffers sane.
+        S_tok = h.shape[0] * h.shape[1]
+        mo, aux = MOE.moe_block(
+            p["moe"], h, num_experts=cfg.num_experts, top_k=cfg.top_k,
+            dropless=(mode != "train" and S_tok <= 4096),
+            # training keeps the dispatch buffers small (grad accumulation
+            # multiplies live copies); serving prefers fewer, larger chunks
+            chunk_tokens=4096 if mode == "train" else 16384,
+            sequential=(mode == "train"),
+        )
+        x = x + mo
+    else:
+        x = x + L.swiglu(p["mlp"], h)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------------ encoder
+# (whisper: bidirectional attention over stubbed conv-frontend frames)
+
+
+def _init_encoder_layer(cfg: ArchConfig, rng):
+    ks = jax.random.split(rng, 2)
+    dt = _dtype(cfg)
+    return {
+        "ln1": L.init_rms(cfg.d_model, dt),
+        "ln2": L.init_rms(cfg.d_model, dt),
+        "attn": L.init_attention(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.d_head, dt
+        ),
+        "mlp": L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _encode(cfg: ArchConfig, enc_params, pos_emb, frames):
+    x = frames.astype(_dtype(cfg)) + pos_emb[None, : frames.shape[1]]
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"])
+        o, _ = L.attention_block(
+            lp["attn"], h,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, d_head=cfg.d_head,
+            rope_base=cfg.rope_base, causal=False, window=0, attn_impl="naive",
+        )
+        x = x + o
+        x = x + L.swiglu(lp["mlp"], L.rms_norm(x, lp["ln2"]))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc_params)
+    return x
+
+
+# ------------------------------------------------------------------ model
+
+
+def _stack_init(fn, rng, n):
+    return jax.vmap(fn)(jax.random.split(rng, n))
+
+
+def chunked_xent(logits_fn, hidden, targets, chunk=512):
+    """CE over the sequence in chunks: avoids materializing [T, vocab]."""
+    import math
+
+    B, T, D = hidden.shape
+    c = math.gcd(T, chunk)
+    if c < 64:
+        c = T
+    nc = T // c
+    h = hidden.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    t = targets.reshape(B, nc, c).transpose(1, 0, 2)
+
+    def body(tot, inp):
+        hh, tt = inp
+        lg = logits_fn(hh).astype(jnp.float32)
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(lp, tt[..., None], axis=-1).sum()
+        return tot + nll, None
+
+    with jax.named_scope("xent"):
+        tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h, t))
+    return tot / (B * T)
+
+
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    dt = _dtype(cfg)
+    windows = jnp.asarray(_layer_windows(cfg))
+
+    def init(rng):
+        ks = jax.random.split(rng, 6)
+        p = {
+            "embed": L.init_embedding(ks[0], cfg.vocab_padded, cfg.d_model, dt),
+            "ln_f": L.init_rms(cfg.d_model, dt),
+            "layers": _stack_init(
+                partial(_init_decoder_layer, cfg), ks[1], cfg.num_layers
+            ),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = L.init_linear(ks[2], cfg.d_model, cfg.vocab_padded, dt)
+        if cfg.arch_type == "audio":
+            p["encoder"] = _stack_init(
+                partial(_init_encoder_layer, cfg), ks[3], cfg.encoder_layers
+            )
+            p["enc_pos"] = (
+                0.02 * jax.random.normal(ks[4], (cfg.encoder_frames, cfg.d_model))
+            ).astype(dt)
+        if cfg.arch_type == "vlm":
+            p["projector"] = {
+                "w1": L.init_linear(ks[3], cfg.vision_dim, cfg.d_model, dt),
+                "w2": L.init_linear(ks[4], cfg.d_model, cfg.d_model, dt),
+            }
+        return p
+
+    def _logits(p, hidden):
+        if cfg.tie_embeddings:
+            return L.unembed(p["embed"], hidden)
+        return L.linear(p["unembed"], hidden)
+
+    def _embed_inputs(p, batch):
+        """Token (+ modality stub) embeddings: [B, T, D]."""
+        x = L.embed(p["embed"], batch["tokens"])
+        if cfg.arch_type == "vlm" and "patches" in batch:
+            v = batch["patches"].astype(dt)
+            v = L.linear(p["projector"]["w2"], jax.nn.gelu(L.linear(p["projector"]["w1"], v)))
+            x = jnp.concatenate([v, x], axis=1)
+        return x.astype(dt)
+
+    def _memory(p, batch):
+        if cfg.arch_type != "audio":
+            return None
+        if "memory" in batch:          # serving: encoder ran once at admission
+            return batch["memory"].astype(dt)
+        if "frames" in batch:
+            return _encode(cfg, p["encoder"], p["enc_pos"], batch["frames"])
+        return None
+
+    def _run_layers(p, x, memory, cache=None, cache_index=None, mode="train"):
+        def body(x, inp):
+            if cache is None:
+                lp, w = inp
+                cl = None
+            else:
+                lp, w, cl = inp
+            x, nc, aux = _apply_decoder_layer(
+                cfg, lp, x, window=w, memory=memory,
+                cache=cl, cache_index=cache_index, mode=mode,
+            )
+            return x, (nc, aux)
+
+        fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+        xs = (p["layers"], windows) if cache is None else (p["layers"], windows, cache)
+        x, (new_cache, aux) = jax.lax.scan(fn, x, xs)
+        return x, new_cache, jnp.sum(aux) if cfg.arch_type == "moe" else 0.0
+
+    # ---------------- train -----------------
+    def forward(p, batch):
+        x = _embed_inputs(p, batch)
+        mem = _memory(p, batch)
+        x, _, _ = _run_layers(p, x, mem, mode="eval")
+        x = L.rms_norm(x, p["ln_f"])
+        return _logits(p, x)
+
+    def loss(p, batch):
+        x = _embed_inputs(p, batch)
+        mem = _memory(p, batch)
+        x, _, aux = _run_layers(p, x, mem, mode="train")
+        x = L.rms_norm(x, p["ln_f"])
+        tgt = batch["targets"]
+        if cfg.arch_type == "vlm" and "patches" in batch:
+            x = x[:, batch["patches"].shape[1]:]  # loss over text positions
+        lfn = (lambda h: L.unembed(p["embed"], h)) if cfg.tie_embeddings else (
+            lambda h: L.linear(p["unembed"], h)
+        )
+        ce = chunked_xent(lfn, x, tgt)
+        return ce + 0.01 * aux
+
+    # ---------------- serve ------------------
+    def init_cache(batch_size: int, seq: int):
+        B, S, Lh = batch_size, seq, cfg.num_layers
+        c = {}
+        if cfg.arch_type != "ssm":
+            c["k"] = jnp.zeros((Lh, B, S, cfg.num_kv_heads, cfg.d_head), dt)
+            c["v"] = jnp.zeros((Lh, B, S, cfg.num_kv_heads, cfg.d_head), dt)
+        if cfg.arch_type == "ssm":
+            dh = cfg.d_model // cfg.num_heads
+            c["state"] = jnp.zeros((Lh, B, cfg.num_heads, dh, dh), jnp.float32)
+            c["x_prev"] = jnp.zeros((Lh, B, cfg.d_model), dt)
+            c["ffn_prev"] = jnp.zeros((Lh, B, cfg.d_model), dt)
+        if cfg.arch_type == "hybrid":
+            di = cfg.ssm_d_inner or cfg.d_model
+            c["sstate"] = jnp.zeros((Lh, B, di, cfg.ssm_state), jnp.float32)
+        return c
+
+    def prefill(p, batch, cache):
+        """Forward the prompt, writing the cache; returns last-pos logits."""
+        x = _embed_inputs(p, batch)
+        mem = _memory(p, batch)
+        x, cache, _ = _run_layers(
+            p, x, mem, cache=cache, cache_index=jnp.zeros((), jnp.int32),
+            mode="prefill",
+        )
+        x = L.rms_norm(x[:, -1:], p["ln_f"])
+        return _logits(p, x)[:, 0], cache
+
+    def decode_step(p, batch, cache):
+        """One-token decode. batch: {'token': [B,1], 'index': scalar}."""
+        x = _embed_inputs(p, {"tokens": batch["token"]})
+        mem = _memory(p, batch)
+        x, cache, _ = _run_layers(
+            p, x, mem, cache=cache, cache_index=batch["index"], mode="decode"
+        )
+        x = L.rms_norm(x, p["ln_f"])
+        return _logits(p, x)[:, 0], cache
+
+    return ModelBundle(
+        cfg=cfg, init=init, loss=loss, forward=forward,
+        init_cache=init_cache, prefill=prefill, decode_step=decode_step,
+    )

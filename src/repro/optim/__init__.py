@@ -1,0 +1,5 @@
+"""repro.optim -- minimal functional optimizers (paper uses plain SGD)."""
+from repro.optim.optimizers import Optimizer, adamw, sgd
+from repro.optim.schedule import constant, cosine, linear_warmup_cosine
+
+__all__ = ["Optimizer", "sgd", "adamw", "constant", "cosine", "linear_warmup_cosine"]

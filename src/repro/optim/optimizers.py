@@ -1,0 +1,70 @@
+"""Functional optimizers (init/update pairs over pytrees).
+
+The paper's experiments use plain SGD (lr 0.1, no momentum); the production
+LM training path uses AdamW. Kept dependency-free (no optax in container).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array], momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            new = jax.tree.map(lambda p, g: p - lr_t * g, params, grads)
+            return new, state
+        state = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        new = jax.tree.map(lambda p, m: p - lr_t * m, params, state)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+        lr_t = lr_fn(step)
+
+        def upd(p, mi, vi):
+            upd_ = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            return (p - lr_t * (upd_ + weight_decay * p)).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v}
+
+    return Optimizer(init, update)

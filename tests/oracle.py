@@ -1,0 +1,41 @@
+"""Pure-python (numpy, loops) oracle of paper Algorithm 1.
+
+Deliberately written as literal transcription of the pseudocode -- no
+vectorization tricks -- so the jax engines can be validated against it
+bit-for-bit (full-batch deterministic gradients).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def mtgc_round(x0, grads, G, K, E, H, lr, z=None, y=None, use_z=True, use_y=True):
+    """One global round of Algorithm 1 on a d-dimensional model.
+
+    x0: [d] round-start model; grads(g, k, x) -> [d] full-batch gradient of
+    client (g, k). z: [G, K, d], y: [G, d] (zero-initialized if None).
+    Returns (x_new [d], z, y, client_traj dict for deeper checks).
+    """
+    d = x0.shape[0]
+    z = np.zeros((G, K, d)) if z is None else z.copy()
+    y = np.zeros((G, d)) if y is None else y.copy()
+    xbar_j = np.stack([x0.copy() for _ in range(G)])     # group models
+
+    for e in range(E):
+        x = np.stack([[xbar_j[g].copy() for _ in range(K)] for g in range(G)])
+        for h in range(H):
+            for g in range(G):
+                for k in range(K):
+                    grad = grads(g, k, x[g, k])
+                    x[g, k] = x[g, k] - lr * (grad + z[g, k] + y[g])
+        new_xbar = np.stack([x[g].mean(axis=0) for g in range(G)])
+        if use_z:
+            for g in range(G):
+                for k in range(K):
+                    z[g, k] = z[g, k] + (x[g, k] - new_xbar[g]) / (H * lr)
+        xbar_j = new_xbar
+    xbar = xbar_j.mean(axis=0)
+    if use_y:
+        for g in range(G):
+            y[g] = y[g] + (xbar_j[g] - xbar) / (H * E * lr)
+    return xbar, z, y

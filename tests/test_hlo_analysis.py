@@ -1,0 +1,111 @@
+"""The trip-count-aware HLO walker that powers the roofline analysis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def test_loop_free_matches_xla_cost_analysis():
+    def f(a, b):
+        return (a @ b).sum() + jnp.exp(a).sum()
+
+    a = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    c = jax.jit(f).lower(a, b).compile()
+    res = H.analyze(c.as_text())
+    xla = c.cost_analysis()
+    # dominated by the dot: 2*128*64*256
+    assert abs(res.flops - xla["flops"]) / xla["flops"] < 0.05
+    assert res.flops >= 2 * 128 * 64 * 256
+
+
+@pytest.mark.parametrize("n", [1, 3, 8])
+def test_scan_trip_count_multiplies(n):
+    def g(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        c, _ = jax.lax.scan(body, x, None, length=n)
+        return c
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = jax.jit(g).lower(x).compile()
+    res = H.analyze(c.as_text())
+    exact = n * 2 * 128 ** 3
+    assert 0.95 < res.flops / exact < 1.10, (n, res.flops, exact)
+
+
+def test_nested_scans_multiply():
+    def nested(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ c2, None
+            c, _ = jax.lax.scan(inner, c, None, length=4)
+            return c, None
+        c, _ = jax.lax.scan(outer, x, None, length=3)
+        return c
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = jax.jit(nested).lower(x).compile()
+    res = H.analyze(c.as_text())
+    exact = 12 * 2 * 128 ** 3
+    assert 0.95 < res.flops / exact < 1.10
+
+
+def test_collectives_counted_with_trip_counts():
+    """psum inside a scan on a 1-device 'mesh' lowers to all-reduce ops
+    that the walker must multiply by the trip count."""
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %p = (s32[], f32[64,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,128] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %ar = f32[64,128] all-reduce(%x), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[64,128]) tuple(%ni, %ar)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%cond (p: (s32[], f32[64,128])) -> pred[] {
+  %p = (s32[], f32[64,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[64,128]) -> f32[64,128] {
+  %x = f32[64,128] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64,128]) tuple(%zero, %x)
+  %w = (s32[], f32[64,128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[64,128] get-tuple-element(%w), index=1
+}
+"""
+    res = H.analyze(hlo)
+    assert res.per_collective["all-reduce"] == 5 * 64 * 128 * 4
+    assert res.collective_bytes == 5 * 64 * 128 * 4
+
+
+def test_dus_counts_slice_not_buffer():
+    hlo = """
+HloModule t
+
+ENTRY %main (buf: f32[1024,128], upd: f32[1,128]) -> f32[1024,128] {
+  %buf = f32[1024,128] parameter(0)
+  %upd = f32[1,128] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %d = f32[1024,128] dynamic-update-slice(%buf, %upd, %z, %z)
+}
+"""
+    res = H.analyze(hlo)
+    # in-place: ~2x the update slice, NOT 2x the megabyte buffer
+    assert res.bytes <= 4 * 1 * 128 * 4 + 16

@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mtgc_update import mtgc_update
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------ mtgc_update
+
+
+@pytest.mark.parametrize("shape", [(5,), (128,), (1000,), (33, 129), (2, 3, 130)])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-6), (jnp.bfloat16, 1e-2)])
+def test_mtgc_update_sweep(shape, dtype, tol):
+    xs = [jnp.asarray(RNG.normal(size=shape), dtype) for _ in range(4)]
+    got = mtgc_update(*xs, lr=0.1, interpret=True, block_rows=8)
+    want = ref.mtgc_update_ref(*xs, 0.1)
+    assert got.dtype == xs[0].dtype and got.shape == xs[0].shape
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32))))
+    assert err < tol, (shape, dtype, err)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 4000),
+       lr=st.floats(1e-4, 1.0),
+       blk=st.sampled_from([8, 16, 64]))
+def test_mtgc_update_property(n, lr, blk):
+    rng = np.random.default_rng(n)
+    xs = [jnp.asarray(rng.normal(size=(n,)), jnp.float32) for _ in range(4)]
+    got = mtgc_update(*xs, lr=lr, interpret=True, block_rows=blk)
+    want = ref.mtgc_update_ref(*xs, lr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize("B,T,S,H,Kv,Dh,causal,win", [
+    (1, 128, 128, 4, 4, 64, True, 0),
+    (2, 128, 128, 4, 2, 64, True, 0),       # GQA
+    (1, 256, 256, 2, 1, 32, True, 64),      # MQA + sliding window
+    (1, 128, 256, 4, 4, 64, False, 0),      # cross/bidirectional
+    (2, 256, 256, 8, 2, 128, True, 100),    # window not block-aligned
+    (1, 64, 64, 25, 5, 32, True, 16),       # hymba's 25/5 heads
+])
+def test_flash_attention_sweep(B, T, S, H, Kv, Dh, causal, win):
+    q = jnp.asarray(RNG.normal(size=(B, T, H, Dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, Kv, Dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, Kv, Dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=win,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=win)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 5e-5, err
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 128, 4, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32))))
+    assert got.dtype == jnp.bfloat16 and err < 3e-2, err
+
+
+@settings(max_examples=8, deadline=None)
+@given(tb=st.sampled_from([(64, 64), (128, 64), (192, 64)]),
+       hkv=st.sampled_from([(4, 4), (4, 2), (6, 3)]),
+       causal=st.booleans(),
+       win=st.sampled_from([0, 32, 77]))
+def test_flash_attention_property(tb, hkv, causal, win):
+    T, blk = tb
+    H, Kv = hkv
+    rng = np.random.default_rng(T * H + win)
+    q = jnp.asarray(rng.normal(size=(1, T, H, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, T, Kv, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, T, Kv, 32)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=win,
+                          block_q=blk, block_k=blk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=5e-5)
+
+
+# -------------------------------------------------------------- rwkv scan
+
+
+@pytest.mark.parametrize("B,H,T,Dh,C", [
+    (1, 2, 32, 16, 8), (2, 3, 64, 32, 16), (1, 1, 128, 64, 64),
+    (2, 2, 64, 64, 32),
+])
+def test_rwkv6_scan_sweep(B, H, T, Dh, C):
+    r, k, v = (jnp.asarray(RNG.normal(size=(B, H, T, Dh)), jnp.float32)
+               for _ in range(3))
+    logw = -jnp.abs(jnp.asarray(RNG.normal(size=(B, H, T, Dh)), jnp.float32))
+    u = jnp.asarray(RNG.normal(size=(H, Dh)), jnp.float32)
+    S0 = jnp.asarray(RNG.normal(size=(B, H, Dh, Dh)), jnp.float32)
+    want_o, want_s = ref.rwkv6_scan_ref(r, k, v, logw, u, S0)
+
+    flat = lambda a: a.reshape(B * H, T, Dh)
+    u_b = jnp.broadcast_to(u[None], (B, H, Dh)).reshape(B * H, Dh)
+    got_o, got_s = rwkv6_scan(flat(r), flat(k), flat(v), flat(logw), u_b,
+                              S0.reshape(B * H, Dh, Dh), chunk=C, interpret=True)
+    np.testing.assert_allclose(got_o.reshape(B, H, T, Dh), want_o,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_s.reshape(B, H, Dh, Dh), want_s,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv6_state_carry_composes():
+    """scan(T) == scan(T/2) then scan(T/2) with the carried state."""
+    B, H, T, Dh, C = 1, 2, 64, 16, 8
+    r, k, v = (jnp.asarray(RNG.normal(size=(B * H, T, Dh)), jnp.float32)
+               for _ in range(3))
+    logw = -jnp.abs(jnp.asarray(RNG.normal(size=(B * H, T, Dh)), jnp.float32))
+    u = jnp.asarray(RNG.normal(size=(B * H, Dh)), jnp.float32)
+    S0 = jnp.zeros((B * H, Dh, Dh))
+    o_full, s_full = rwkv6_scan(r, k, v, logw, u, S0, chunk=C, interpret=True)
+    h = T // 2
+    o1, s1 = rwkv6_scan(r[:, :h], k[:, :h], v[:, :h], logw[:, :h], u, S0,
+                        chunk=C, interpret=True)
+    o2, s2 = rwkv6_scan(r[:, h:], k[:, h:], v[:, h:], logw[:, h:], u, s1,
+                        chunk=C, interpret=True)
+    np.testing.assert_allclose(np.concatenate([o1, o2], 1), o_full,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s2, s_full, rtol=1e-4, atol=1e-4)
+
+
+def test_model_rwkv_path_matches_kernel():
+    """rwkv6_chunked (the model's jnp path) and the Pallas kernel agree."""
+    import jax.random as jr
+    from repro.models.rwkv6 import init_rwkv6, rwkv6_chunked, _proj
+    D, Hn = 64, 4
+    p = init_rwkv6(jr.PRNGKey(0), D, Hn, jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(2, 32, D)), jnp.float32)
+    xp = jnp.zeros((2, D))
+    st = jnp.zeros((2, Hn, D // Hn, D // Hn))
+    out_model, _, st_model = rwkv6_chunked(p, x, xp, st, n_heads=Hn, chunk=8)
+
+    r, k, v, logw, g = _proj(p, x, xp, Hn)
+    tr = lambda a: a.transpose(0, 2, 1, 3).reshape(2 * Hn, 32, D // Hn)
+    u_b = jnp.broadcast_to(p["u"][None], (2, Hn, D // Hn)).reshape(2 * Hn, -1)
+    o_kern, s_kern = rwkv6_scan(
+        tr(r).astype(jnp.float32), tr(k).astype(jnp.float32),
+        tr(v).astype(jnp.float32), tr(logw), u_b,
+        st.reshape(2 * Hn, D // Hn, D // Hn), chunk=8, interpret=True)
+    np.testing.assert_allclose(
+        s_kern.reshape(2, Hn, D // Hn, D // Hn), st_model, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,147 @@
+"""Core MTGC engine vs the pure-python oracle + the paper's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HFLConfig, hfl_init, make_global_round, global_model
+from repro.core import tree as tu
+
+from oracle import mtgc_round
+
+D = 6
+
+
+def quad_loss(params, batch):
+    """0.5 * ||a * x - b||^2 with per-client (a, b) passed through the batch
+    (constant across steps -> deterministic full-batch gradients)."""
+    r = batch["a"] * params["w"] - batch["b"]
+    return 0.5 * jnp.sum(r * r)
+
+
+def make_batches(G, K, E, H, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(G, K, D)).astype(np.float32) + 2.0
+    b = rng.normal(size=(G, K, D)).astype(np.float32)
+    batches = {
+        "a": np.broadcast_to(a, (E, H, G, K, D)).copy(),
+        "b": np.broadcast_to(b, (E, H, G, K, D)).copy(),
+    }
+    return a, b, batches
+
+
+def np_grad(a, b):
+    return lambda g, k, x: a[g, k] * (a[g, k] * x - b[g, k])
+
+
+@pytest.mark.parametrize("G,K,E,H", [(2, 2, 2, 3), (3, 2, 4, 2), (1, 4, 1, 5)])
+def test_engine_matches_oracle(G, K, E, H):
+    lr = 0.05
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=lr, algorithm="mtgc")
+    a, b, batches = make_batches(G, K, E, H)
+    x0 = np.zeros(D, np.float32)
+
+    state = hfl_init({"w": jnp.asarray(x0)}, cfg)
+    round_fn = jax.jit(make_global_round(quad_loss, cfg))
+
+    # two rounds: exercises carrying z/y across rounds (z re-zeroed per the
+    # paper's experimental footnote; y persists)
+    z = y = None
+    want = x0
+    for _ in range(2):
+        state, _ = round_fn(state, jax.tree.map(jnp.asarray, batches))
+        want, _, y = mtgc_round(want, np_grad(a, b), G, K, E, H, lr, z=None, y=y)
+    got = np.asarray(global_model(state)["w"])
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_correction_invariants():
+    G, K, E, H = 3, 4, 2, 3
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.1, algorithm="mtgc")
+    a, b, batches = make_batches(G, K, E, H, seed=1)
+    state = hfl_init({"w": jnp.zeros(D)}, cfg)
+    round_fn = jax.jit(make_global_round(quad_loss, cfg))
+    for _ in range(3):
+        state, _ = round_fn(state, jax.tree.map(jnp.asarray, batches))
+        # paper Sec. 3.2: sum_i z_i = 0 per group, sum_j y_j = 0
+        zsum = np.asarray(state.z["w"]).sum(axis=1)
+        np.testing.assert_allclose(zsum, 0.0, atol=1e-4)
+        ysum = np.asarray(state.y["w"]).sum(axis=0)
+        np.testing.assert_allclose(ysum, 0.0, atol=1e-5)
+
+
+def test_corrections_do_not_move_averages():
+    """z/y cancel in the group/global means: with identical data order,
+    MTGC and HFedAvg produce the same global model after ONE group round of
+    H=1 (single step -> no drift for corrections to act on)."""
+    G, K = 2, 3
+    cfg_m = HFLConfig(num_groups=G, clients_per_group=K, local_steps=1,
+                      group_rounds=1, lr=0.1, algorithm="mtgc")
+    cfg_f = cfg_m.__class__(**{**cfg_m.__dict__, "algorithm": "hfedavg"})
+    a, b, batches = make_batches(G, K, 1, 1, seed=2)
+    out = {}
+    for cfg in (cfg_m, cfg_f):
+        state = hfl_init({"w": jnp.zeros(D)}, cfg)
+        state, _ = jax.jit(make_global_round(quad_loss, cfg))(
+            state, jax.tree.map(jnp.asarray, batches))
+        out[cfg.algorithm] = np.asarray(global_model(state)["w"])
+    np.testing.assert_allclose(out["mtgc"], out["hfedavg"], rtol=1e-6)
+
+
+def test_mtgc_converges_to_global_optimum_under_heterogeneity():
+    """The paper's central claim (Fig. 2): with heterogeneous clients and
+    long local phases, MTGC reaches the *global* optimum; HFedAvg stalls
+    with a drift-induced bias."""
+    G, K, E, H, lr = 2, 2, 4, 8, 0.05
+    a, b, batches = make_batches(G, K, E, H, seed=3)
+    # global optimum of sum of quadratics: x* = sum(a*b) / sum(a^2)
+    xstar = (a * b).sum((0, 1)) / (a * a).sum((0, 1))
+
+    err = {}
+    for algo in ("mtgc", "hfedavg"):
+        cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                        group_rounds=E, lr=lr, algorithm=algo)
+        state = hfl_init({"w": jnp.zeros(D)}, cfg)
+        rf = jax.jit(make_global_round(quad_loss, cfg))
+        for _ in range(60):
+            state, _ = rf(state, jax.tree.map(jnp.asarray, batches))
+        err[algo] = float(np.linalg.norm(np.asarray(global_model(state)["w"]) - xstar))
+    # HFedAvg stalls at a drift-induced bias; MTGC keeps contracting toward
+    # x* (the per-round z re-zeroing of the paper's footnote 2 makes late
+    # convergence gradual, so we check the bias gap, not exact arrival).
+    assert err["mtgc"] < 0.05, err
+    assert err["mtgc"] < err["hfedavg"] / 5, err
+
+
+@pytest.mark.parametrize("algo", ["local_corr", "group_corr", "fedprox", "feddyn"])
+def test_baselines_run_and_are_finite(algo):
+    G, K, E, H = 2, 2, 2, 3
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.05, algorithm=algo,
+                    prox_mu=0.1, feddyn_alpha=0.1)
+    a, b, batches = make_batches(G, K, E, H, seed=4)
+    state = hfl_init({"w": jnp.zeros(D)}, cfg)
+    rf = jax.jit(make_global_round(quad_loss, cfg))
+    for _ in range(3):
+        state, m = rf(state, jax.tree.map(jnp.asarray, batches))
+    assert np.isfinite(np.asarray(m.loss)).all()
+    assert np.isfinite(np.asarray(global_model(state)["w"])).all()
+
+
+def test_gradient_init_matches_theory_lines():
+    """correction_init='gradient' (Alg. 1 lines 3-4): z starts at the
+    group-mean-gradient minus own gradient."""
+    G, K, E, H = 2, 2, 1, 1
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.1, algorithm="mtgc",
+                    correction_init="gradient")
+    a, b, batches = make_batches(G, K, E, H, seed=5)
+    state = hfl_init({"w": jnp.zeros(D)}, cfg)
+    rf = jax.jit(make_global_round(quad_loss, cfg))
+    state2, _ = rf(state, jax.tree.map(jnp.asarray, batches))
+    # after one (E=H=1) round with gradient init, all clients took the SAME
+    # corrected step (gradient of the group mean) -> zero client drift
+    x = np.asarray(state2.params["w"])
+    np.testing.assert_allclose(x, np.broadcast_to(x[0, 0], x.shape), rtol=1e-6)

@@ -1,0 +1,90 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HFLConfig, global_model, hfl_init, make_global_round
+from repro.core import tree as tu
+
+from test_mtgc_engine import D, make_batches, quad_loss
+
+
+# ----------------------------------------------------------- tree algebra
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 64), s=st.floats(-3, 3))
+def test_tree_axpy_linear(n, s):
+    rng = np.random.default_rng(n)
+    a = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32),
+         "b": {"c": jnp.asarray(rng.normal(size=(2, n)), jnp.float32)}}
+    b = jax.tree.map(jnp.ones_like, a)
+    out = tu.tree_axpy(s, a, b)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               s * np.asarray(a["w"]) + 1.0, rtol=1e-5)
+    dot_aa = tu.tree_dot(a, a)
+    assert float(dot_aa) >= 0
+    np.testing.assert_allclose(float(tu.tree_sq_norm(a)), float(dot_aa))
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=st.integers(1, 4), k=st.integers(1, 4))
+def test_tree_mean_broadcast_roundtrip(g, k):
+    rng = np.random.default_rng(g * 7 + k)
+    a = {"w": jnp.asarray(rng.normal(size=(g, k, 3)), jnp.float32)}
+    m = tu.tree_mean(a, axis=1)
+    back = tu.tree_broadcast_to_axis(m, 1, k)
+    assert back["w"].shape == (g, k, 3)
+    # mean is idempotent through broadcast
+    np.testing.assert_allclose(np.asarray(tu.tree_mean(back, axis=1)["w"]),
+                               np.asarray(m["w"]), rtol=1e-6)
+
+
+# ------------------------------------------------------- engine invariants
+
+
+@settings(max_examples=8, deadline=None)
+@given(G=st.integers(1, 3), K=st.integers(1, 3),
+       E=st.integers(1, 3), H=st.integers(1, 4))
+def test_invariants_hold_for_random_topologies(G, K, E, H):
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.05, algorithm="mtgc")
+    a, b, batches = make_batches(G, K, E, H, seed=G * 97 + K * 13 + E + H)
+    state = hfl_init({"w": jnp.zeros(D)}, cfg)
+    state, m = jax.jit(make_global_round(quad_loss, cfg))(
+        state, jax.tree.map(jnp.asarray, batches))
+    np.testing.assert_allclose(np.asarray(state.z["w"]).sum(1), 0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state.y["w"]).sum(0), 0, atol=1e-5)
+    # all clients equal after dissemination
+    x = np.asarray(state.params["w"])
+    np.testing.assert_allclose(x, np.broadcast_to(x[:1, :1], x.shape),
+                               atol=1e-6)
+    assert np.isfinite(np.asarray(m.loss)).all()
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 100))
+def test_client_permutation_equivariance(seed):
+    """Permuting clients inside a group permutes z and leaves the global
+    model unchanged (aggregations are symmetric means)."""
+    G, K, E, H = 2, 3, 2, 2
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.05, algorithm="mtgc")
+    a, b, batches = make_batches(G, K, E, H, seed=seed)
+    rf = jax.jit(make_global_round(quad_loss, cfg))
+
+    st0 = hfl_init({"w": jnp.zeros(D)}, cfg)
+    st1, _ = rf(st0, jax.tree.map(jnp.asarray, batches))
+
+    perm = np.random.default_rng(seed).permutation(K)
+    pb = {k: jnp.asarray(v[:, :, :, perm]) for k, v in batches.items()}
+    st2, _ = rf(st0, pb)
+
+    # float reductions over permuted operands differ in the last ulp and
+    # the z update amplifies by 1/(H*lr): compare with matching slack
+    np.testing.assert_allclose(np.asarray(global_model(st1)["w"]),
+                               np.asarray(global_model(st2)["w"]),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st1.z["w"])[:, perm],
+                               np.asarray(st2.z["w"]), rtol=1e-3, atol=5e-4)

@@ -1,0 +1,174 @@
+"""End-to-end system tests: the production launchers on reduced configs,
+the multi-pod dry-run machinery (in a subprocess -- it forces 512 host
+devices), and the partition-spec rules."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_train_cli_smoke():
+    """examples deliverable (b): train a reduced arch end-to-end, loss drops."""
+    from repro.configs import get_arch
+    from repro.data.lm import lm_batches, make_lm_tokens
+    from repro.launch.train import make_sharded_round, sharded_init
+    from repro.models.transformer import build_model
+
+    cfg = get_arch("glm4-9b").reduced()
+    bundle = build_model(cfg)
+    rng = np.random.default_rng(0)
+    toks, _ = make_lm_tokens(rng, cfg.vocab_size, 50_000, num_domains=4)
+    params = bundle.init(jax.random.PRNGKey(0))
+    state = sharded_init(params, 2, 2)
+    rf = jax.jit(make_sharded_round(bundle.loss, E=2, H=2, lr=0.1))
+    losses = []
+    for _ in range(4):
+        batch = lm_batches(toks, rng, (2, 2, 1, 2, 2, 2), 64)
+        state, m = rf(state, batch)
+        losses.append(float(m.loss.mean()))
+    assert losses[-1] < losses[0], losses
+
+
+def test_param_specs_cover_every_leaf():
+    """Every parameter leaf of every arch gets a valid PartitionSpec whose
+    sharded dims divide evenly on the planned mesh."""
+    from repro.configs import ARCH_IDS, get_arch, get_plan
+    from repro.models.transformer import build_model
+    from repro.sharding import specs as sp
+
+    for arch in ARCH_IDS:
+        cfg = get_arch(arch)
+        plan = get_plan(arch)
+        g, k, f, m = plan.train_factors
+        axis_sizes = {"group": g, "client": k, "fsdp": f, "model": m}
+        bundle = build_model(cfg)
+        shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        tree = sp.param_spec_tree(shapes, axis_sizes=axis_sizes, cfg=cfg)
+
+        def check(path, spec, leaf):
+            assert len(spec) <= len(leaf.shape), (arch, path)
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                if ax is not None:
+                    assert dim % axis_sizes[ax] == 0, (arch, path, dim, ax)
+
+        jax.tree_util.tree_map_with_path(check, tree, shapes)
+
+
+def test_mesh_plans_factor_the_pod():
+    from repro.configs import ARCH_IDS, get_plan
+    for arch in ARCH_IDS:
+        plan = get_plan(arch)
+        plan.validate(256)
+        g, k, f, m = plan.train_factors
+        assert g * k * f * m == 256
+
+
+def test_shape_skip_rules():
+    from repro.configs import ARCH_IDS, get_arch
+    from repro.configs.shapes import SkipShape, serve_specs
+
+    expected_skips = {"internvl2-26b", "whisper-medium", "glm4-9b",
+                      "qwen2.5-32b", "qwen3-14b", "granite-moe-1b-a400m"}
+    skipped = set()
+    for arch in ARCH_IDS:
+        cfg = get_arch(arch)
+        try:
+            serve_specs(cfg, "long_500k")
+        except SkipShape:
+            skipped.add(arch)
+    assert skipped == expected_skips
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_smoke():
+    """One real (arch x shape x mesh) dry-run in a subprocess (the forced
+    512-device env must not leak into this test process)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "granite-moe-1b-a400m", "--shape", "decode_32k", "--mesh", "pod",
+         "--tag", "pytest", "--out", "/tmp/dryrun_pytest"],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.loads(open(
+        "/tmp/dryrun_pytest/granite-moe-1b-a400m__decode_32k__pod__pytest.json").read())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    assert rec["terms"]["compute_s"] > 0
+    assert rec["memory"]["temp_size_in_bytes"] < 16e9  # fits v5e HBM
+
+
+def test_serve_generation_loop():
+    """batched serving: prefill + greedy decode stays finite and identical
+    across batch entries with identical prompts."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.models.transformer import build_model
+
+    cfg = get_arch("rwkv6-1.6b").reduced()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    B, T, GEN = 3, 12, 6
+    toks = np.tile(np.arange(T, dtype=np.int32)[None], (B, 1))
+    cache = bundle.init_cache(B, T + GEN)
+    lg, cache = bundle.prefill(params, {"tokens": jnp.asarray(toks)}, cache)
+    tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    outs = [tok]
+    for i in range(GEN - 1):
+        lg, cache = bundle.decode_step(
+            params, {"token": tok, "index": jnp.asarray(T + i, jnp.int32)}, cache)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+    gen = np.asarray(jnp.concatenate(outs, 1))
+    assert (gen == gen[0]).all()  # identical prompts -> identical streams
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.checkpoint import latest_step, restore, save
+    from repro.launch.train import sharded_init
+
+    state = sharded_init({"w": jnp.arange(6, dtype=jnp.float32)}, 2, 2)
+    save(str(tmp_path / "ck"), 7, state._asdict())
+    assert latest_step(str(tmp_path / "ck")) == 7
+    like = jax.tree.map(np.zeros_like, state._asdict())
+    got = restore(str(tmp_path / "ck"), 7, like)
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(state.params["w"]))
+
+
+def test_serve_specs_kv_split_alignment():
+    """kv-split serve meshes: head dims shard over 'kv' only, dense dims
+    over ('kv','tp'); cache kv-head dim matches the attention sharding."""
+    from repro.configs import ARCH_IDS, get_arch
+    from repro.configs.shapes import serve_specs
+    from repro.launch.mesh import serve_kv_split
+    from repro.models.transformer import build_model
+    from repro.sharding import specs as sp
+
+    for arch in ("qwen2.5-32b", "glm4-9b", "mixtral-8x22b", "gemma3-27b"):
+        cfg = get_arch(arch)
+        kv = serve_kv_split(cfg.num_heads, cfg.num_kv_heads)
+        assert kv > 1, arch
+        axis_sizes = {"data": 16, "kv": kv, "tp": 16 // kv}
+        shapes = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+        tree = sp.serve_param_specs(cfg, shapes, axis_sizes)
+
+        def check(path, spec, leaf):
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                if ax is None:
+                    continue
+                sz = 1
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    sz *= axis_sizes[a]
+                assert dim % sz == 0, (arch, path, dim, ax)
+
+        jax.tree_util.tree_map_with_path(check, tree, shapes)
