@@ -10,14 +10,13 @@ uses the paper's 100-client/10-group setting.
 from __future__ import annotations
 
 import dataclasses
-import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HFLConfig, global_model, hfl_init, make_global_round
+from repro.core import HFLConfig, global_model, hfl_init, make_global_round, round_masks
 from repro.data.partition import partition, sample_round_batches
 from repro.data.synthetic import make_classification, train_test_split
 from repro.models.small import accuracy, make_loss, mlp
@@ -54,7 +53,10 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
                   mode: str | None = None, alpha: float | None = None,
                   E: int | None = None, H: int | None = None,
                   G: int | None = None, K: int | None = None,
-                  seed: int | None = None, rounds: int | None = None):
+                  seed: int | None = None, rounds: int | None = None,
+                  client_participation: float = 1.0,
+                  group_participation: float = 1.0,
+                  participation_mode: str = "uniform"):
     """Train one algorithm; returns dict(acc=[...], loss=[...], rounds=[...])."""
     G = G or setup.num_groups
     K = K or setup.clients_per_group
@@ -76,18 +78,35 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
     loss_fn = make_loss(apply)
     cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
                     group_rounds=E, lr=setup.lr, algorithm=algorithm,
-                    prox_mu=0.01, feddyn_alpha=0.1)
+                    prox_mu=0.01, feddyn_alpha=0.1,
+                    client_participation=client_participation,
+                    group_participation=group_participation,
+                    participation_mode=participation_mode)
     state = hfl_init(init(jax.random.PRNGKey(seed)), cfg)
     round_fn = jax.jit(make_global_round(loss_fn, cfg))
 
     hist = {"round": [], "acc": [], "loss": []}
+    # Frozen replicas hold stale params: evaluate a client that received the
+    # most recent dissemination (on an empty round, nobody received and the
+    # last recipient still holds the current global model).
+    eval_gk = (0, 0)
     for t in range(rounds):
+        # Under partial participation, mirror the engine's masks on the host
+        # and skip packing batches for the clients sitting this round out.
+        client_mask = (None if cfg.full_participation
+                       else np.asarray(round_masks(state.rng, cfg)[0].client))
         batches = sample_round_batches(train.x, train.y, idx, rng, E, H,
-                                       setup.batch)
+                                       setup.batch, client_mask=client_mask)
         state, metrics = round_fn(state, jax.tree.map(jnp.asarray, batches))
+        if client_mask is not None and client_mask.any():
+            eval_gk = tuple(np.argwhere(client_mask > 0)[0])
         if (t + 1) % eval_every == 0 or t == rounds - 1:
-            acc = accuracy(apply, global_model(state),
-                           jnp.asarray(test.x), test.y)
+            if client_mask is None:
+                params_eval = global_model(state)
+            else:
+                g_a, k_a = eval_gk
+                params_eval = jax.tree.map(lambda x: x[g_a, k_a], state.params)
+            acc = accuracy(apply, params_eval, jnp.asarray(test.x), test.y)
             hist["round"].append(t + 1)
             hist["acc"].append(float(acc))
             hist["loss"].append(float(np.mean(metrics.loss)))

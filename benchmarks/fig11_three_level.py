@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BenchSetup, report, write_csv
+from benchmarks.common import BenchSetup, report
 from repro.core import make_multilevel_round, multilevel_global_model, multilevel_init
 from repro.data.partition import partition
 from repro.data.synthetic import make_classification, train_test_split

@@ -21,12 +21,13 @@ def main() -> None:
 
     from benchmarks import (ablation_beyond, fig3_fl_baselines,
                             fig4_corrections, fig5_system_params,
-                            fig7_comm_cost, fig11_three_level, roofline,
-                            table51_speedup)
+                            fig7_comm_cost, fig11_three_level,
+                            fig_participation, roofline, table51_speedup)
 
     suites = {
         "fig3_fl_baselines": lambda: fig3_fl_baselines.main(quick=not args.full),
         "fig4_corrections": lambda: fig4_corrections.main(quick=not args.full),
+        "fig_participation": lambda: fig_participation.main(quick=not args.full),
         "table51_speedup": lambda: table51_speedup.main(quick=not args.full),
         "fig5_system_params": lambda: fig5_system_params.main(quick=not args.full),
         "fig7_comm_cost": lambda: fig7_comm_cost.main(quick=not args.full),

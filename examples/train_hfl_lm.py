@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.checkpoint import save
 from repro.configs import get_arch
-from repro.data.lm import lm_batches, make_lm_tokens
+from repro.data.lm import make_lm_tokens
 from repro.launch.train import make_sharded_round, sharded_init
 from repro.models.transformer import build_model
 

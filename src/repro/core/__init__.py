@@ -19,6 +19,11 @@ from repro.core.multilevel import (
     multilevel_global_model,
     multilevel_init,
 )
+from repro.core.participation import (
+    ParticipationMasks,
+    round_masks,
+    sample_hfl_masks,
+)
 from repro.core.scaffold import ScaffoldState, make_scaffold_round, scaffold_init
 
 ALGORITHMS = ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox", "feddyn")
@@ -26,6 +31,9 @@ ALGORITHMS = ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox", "feddyn"
 __all__ = [
     "ALGORITHMS",
     "HFLConfig",
+    "ParticipationMasks",
+    "round_masks",
+    "sample_hfl_masks",
     "HFLState",
     "RoundMetrics",
     "global_model",

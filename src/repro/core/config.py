@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +23,18 @@ class HFLConfig:
       feddyn_alpha:      FedDyn regularization coefficient.
       server_lr:         aggregator-side learning rate (1.0 = plain average,
                          kept for beyond-paper experimentation).
+      client_participation: C_k -- fraction of each group's clients sampled
+                         per global round (1.0 = the paper's full
+                         participation).
+      group_participation:  C_g -- fraction of groups reachable per global
+                         round; a skipped group freezes all of its clients
+                         and its y_j for the round.
+      participation_mode: 'uniform' (independent Bernoulli draws) or 'fixed'
+                         (exactly max(1, round(C * n)) participants, sampled
+                         without replacement).
+      use_fused_update:  route the MTGC local step through the fused Pallas
+                         kernel (kernels/mtgc_update.py); interpret-mode off
+                         TPU. Only valid for algorithm='mtgc'.
     """
 
     num_groups: int = 2
@@ -36,13 +47,26 @@ class HFLConfig:
     prox_mu: float = 0.0
     feddyn_alpha: float = 0.0
     server_lr: float = 1.0
+    client_participation: float = 1.0
+    group_participation: float = 1.0
+    participation_mode: str = "uniform"
+    use_fused_update: bool = False
 
     @property
     def total_clients(self) -> int:
         return self.num_groups * self.clients_per_group
 
+    @property
+    def full_participation(self) -> bool:
+        return self.client_participation >= 1.0 and self.group_participation >= 1.0
+
     def validate(self) -> "HFLConfig":
         assert self.num_groups >= 1 and self.clients_per_group >= 1
         assert self.local_steps >= 1 and self.group_rounds >= 1
         assert self.correction_init in ("zero", "gradient")
+        assert 0.0 < self.client_participation <= 1.0
+        assert 0.0 < self.group_participation <= 1.0
+        assert self.participation_mode in ("uniform", "fixed")
+        assert not (self.use_fused_update and self.algorithm != "mtgc"), (
+            "use_fused_update fuses exactly g + z + y: mtgc only")
         return self

@@ -17,6 +17,16 @@ the group/global aggregations lower to hierarchical all-reduces.
 Baselines are the same engine with corrections toggled off (HFedAvg), one
 correction only (local / group correction, Fig. 4), or with FedProx / FedDyn
 gradient modifiers (Fig. 3).
+
+Partial participation (beyond the paper, the regime where correction
+methods are stress-tested): when ``cfg.client_participation`` /
+``cfg.group_participation`` < 1, per-round 0/1 masks are drawn from
+``state.rng`` (see ``core.participation``); inactive clients keep their
+params and corrections frozen, every aggregation becomes a masked mean, and
+``z``/``y`` updates fire only for participants. Masks are data, not
+structure -- the scans and the jitted program shape are unchanged. With
+full participation the masked machinery is compiled out entirely, so the
+default path is bit-for-bit the paper engine.
 """
 from __future__ import annotations
 
@@ -27,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import tree as tu
 from repro.core.config import HFLConfig
+from repro.core.participation import round_masks
 
 PyTree = Any
 
@@ -34,11 +45,13 @@ PyTree = Any
 class HFLState(NamedTuple):
     """State carried between global rounds.
 
-    params: [G, K, ...]  per-client models (all equal right after a round).
+    params: [G, K, ...]  per-client models (all equal right after a round
+                         under full participation; frozen replicas keep
+                         stale params under partial participation).
     z:      [G, K, ...]  client->group correction (zeros when unused).
     y:      [G, ...]     group->global correction (zeros when unused).
     dyn:    [G, K, ...]  FedDyn gradient memory (zeros when unused).
-    rng:    PRNG key for stochastic batching.
+    rng:    PRNG key for stochastic batching / participation sampling.
     round:  global round counter t.
     """
 
@@ -56,6 +69,7 @@ class RoundMetrics(NamedTuple):
     group_drift: jax.Array   # scalar mean ||xbar_j - xbar||^2 at global agg
     z_norm: jax.Array        # scalar mean ||z||^2 after the round
     y_norm: jax.Array        # scalar mean ||y||^2 after the round
+    participation: jax.Array  # scalar fraction of clients active this round
 
 
 def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None) -> HFLState:
@@ -104,82 +118,141 @@ def make_global_round(
 
     G, K, H, E = cfg.num_groups, cfg.clients_per_group, cfg.local_steps, cfg.group_rounds
     lr = cfg.lr
-
-    def local_phase(x, z, y, dyn, anchor, batches_eh):
-        """H local SGD steps (Alg. 1, lines 6-7). batches_eh: [H, G, K, ...]."""
-        y_b = tu.tree_broadcast_to_axis(y, 1, K)  # [G, K, ...]
-
-        def step(carry, batch):
-            x = carry
-            loss, g = _client_grads(loss_fn, x, batch)
-            # Corrected direction: g + z + y (MTGC); baselines toggle terms.
-            d = g
-            if use_z:
-                d = tu.tree_add(d, z)
-            if use_y:
-                d = tu.tree_add(d, y_b)
-            if use_prox:
-                d = jax.tree.map(lambda di, xi, ai: di + cfg.prox_mu * (xi - ai), d, x, anchor)
-            if use_dyn:
-                d = jax.tree.map(
-                    lambda di, mi, xi, ai: di - mi + cfg.feddyn_alpha * (xi - ai),
-                    d, dyn, x, anchor,
-                )
-            x = jax.tree.map(lambda xi, di: xi - lr * di, x, d)
-            return x, jnp.mean(loss)
-
-        x, losses = jax.lax.scan(step, x, batches_eh)
-        return x, losses
-
-    def group_round(carry, batches_eh):
-        """One group round e: local phase + group aggregation (lines 5-9)."""
-        x, z, y, dyn, anchor = carry
-        x_end, losses = local_phase(x, z, y, dyn, anchor, batches_eh)
-
-        # Group aggregation (line 8): xbar_j = mean over clients.
-        xbar = tu.tree_mean(x_end, axis=1)                     # [G, ...]
-        xbar_b = tu.tree_broadcast_to_axis(xbar, 1, K)          # [G, K, ...]
-
-        drift = tu.tree_sq_norm(tu.tree_sub(x_end, xbar_b)) / (G * K)
-
-        # Client-group correction update (line 9):
-        #   z_i += (x_{i,H} - xbar_j) / (H * lr)
-        if use_z:
-            z = jax.tree.map(
-                lambda zi, xe, xb: zi + (xe - xb) / (H * lr), z, x_end, xbar_b
-            )
-        # Model dissemination: every client restarts from the group model.
-        x = xbar_b
-        return (x, z, y, dyn, anchor), (losses, drift)
+    partial = not cfg.full_participation
+    use_fused = cfg.use_fused_update
+    if use_fused:
+        from repro.kernels import ops as kops
+        fused_mode = "pallas" if jax.default_backend() == "tpu" else "interpret"
 
     def global_round(state: HFLState, batches: PyTree) -> tuple[HFLState, RoundMetrics]:
         x, z, y, dyn = state.params, state.z, state.y, state.dyn
+
+        if partial:
+            masks, rng = round_masks(state.rng, cfg)
+            cmask = masks.client                              # [G, K]
+            n_active = jnp.maximum(jnp.sum(cmask), 1.0)
+        else:
+            cmask = None
+            rng = state.rng
+
+        def local_phase(x, z, y, dyn, anchor, batches_eh):
+            """H local SGD steps (Alg. 1, lines 6-7). batches_eh: [H, G, K, ...]."""
+            y_b = tu.tree_broadcast_to_axis(y, 1, K)  # [G, K, ...]
+
+            def step(carry, batch):
+                x = carry
+                loss, g = _client_grads(loss_fn, x, batch)
+                if use_fused:
+                    # Hot-spot AXPY fused through VMEM (Alg. 1 line 7).
+                    x_new = jax.tree.map(
+                        lambda xi, gi, zi, yi: kops.mtgc_update(
+                            xi, gi, zi, yi, lr=lr, mode=fused_mode),
+                        x, g, z, y_b,
+                    )
+                else:
+                    # Corrected direction: g + z + y (MTGC); baselines
+                    # toggle terms.
+                    d = g
+                    if use_z:
+                        d = tu.tree_add(d, z)
+                    if use_y:
+                        d = tu.tree_add(d, y_b)
+                    if use_prox:
+                        d = jax.tree.map(
+                            lambda di, xi, ai: di + cfg.prox_mu * (xi - ai),
+                            d, x, anchor)
+                    if use_dyn:
+                        d = jax.tree.map(
+                            lambda di, mi, xi, ai: di - mi + cfg.feddyn_alpha * (xi - ai),
+                            d, dyn, x, anchor,
+                        )
+                    x_new = jax.tree.map(lambda xi, di: xi - lr * di, x, d)
+                if partial:
+                    x = tu.tree_select(cmask, x_new, x)
+                    lmean = jnp.sum(jnp.where(cmask != 0, loss, 0)) / n_active
+                else:
+                    x = x_new
+                    lmean = jnp.mean(loss)
+                return x, lmean
+
+            x, losses = jax.lax.scan(step, x, batches_eh)
+            return x, losses
+
+        def group_round(carry, batches_eh):
+            """One group round e: local phase + group aggregation (lines 5-9)."""
+            x, z, y, dyn, anchor = carry
+            x_end, losses = local_phase(x, z, y, dyn, anchor, batches_eh)
+
+            # Group aggregation (line 8): xbar_j = mean over (active) clients.
+            if partial:
+                xbar = tu.tree_masked_mean(x_end, cmask, axis=1)    # [G, ...]
+            else:
+                xbar = tu.tree_mean(x_end, axis=1)                  # [G, ...]
+            xbar_b = tu.tree_broadcast_to_axis(xbar, 1, K)          # [G, K, ...]
+
+            diff = tu.tree_sub(x_end, xbar_b)
+            if partial:
+                drift = tu.tree_masked_sq_norm(diff, cmask) / n_active
+            else:
+                drift = tu.tree_sq_norm(diff) / (G * K)
+
+            # Client-group correction update (line 9):
+            #   z_i += (x_{i,H} - xbar_j) / (H * lr)
+            if use_z:
+                z_new = jax.tree.map(
+                    lambda zi, xe, xb: zi + (xe - xb) / (H * lr), z, x_end, xbar_b
+                )
+                z = tu.tree_select(cmask, z_new, z) if partial else z_new
+            # Model dissemination: every active client restarts from the
+            # group model; inactive clients stay frozen.
+            x = tu.tree_select(cmask, xbar_b, x_end) if partial else xbar_b
+            return (x, z, y, dyn, anchor), (losses, drift)
 
         # --- Round initialization (lines 2-4) ---------------------------
         # Group model init is implicit: params enter equal across clients.
         if use_z:
             if cfg.correction_init == "zero":
-                # Footnote 2: experiments initialize z = 0 each round.
-                z = tu.tree_zeros_like(z)
+                # Footnote 2: experiments initialize z = 0 each round
+                # (participants only -- frozen clients keep their z).
+                z0 = tu.tree_zeros_like(z)
+                z = tu.tree_select(cmask, z0, z) if partial else z0
             else:
                 # Theoretical init (line 3): z_i = -g_i + mean_group g_i,
                 # evaluated with the first local batch xi_{i,0}^{t,0}.
                 b00 = jax.tree.map(lambda b: b[0, 0], batches)
                 _, g0 = _client_grads(loss_fn, x, b00)
-                g0m = tu.tree_broadcast_to_axis(tu.tree_mean(g0, axis=1), 1, K)
-                z = tu.tree_sub(g0m, g0)
+                if partial:
+                    g0m = tu.tree_broadcast_to_axis(
+                        tu.tree_masked_mean(g0, cmask, axis=1), 1, K)
+                    z = tu.tree_select(cmask, tu.tree_sub(g0m, g0), z)
+                else:
+                    g0m = tu.tree_broadcast_to_axis(tu.tree_mean(g0, axis=1), 1, K)
+                    z = tu.tree_sub(g0m, g0)
         if use_y and cfg.correction_init == "gradient":
             is_first = state.round == 0
+            if partial:
+                # Gate on actual activity, not mere reachability: a group
+                # whose client draws all came up empty must keep y frozen
+                # and stay out of the global mean (its masked group mean
+                # would fall back to garbage batches).
+                gact0 = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
 
             def grad_init_y(y):
                 b00 = jax.tree.map(lambda b: b[0, 0], batches)
                 _, g0 = _client_grads(loss_fn, x, b00)
-                gj = tu.tree_mean(g0, axis=1)                      # [G, ...]
-                gg = tu.tree_mean(gj, axis=0)                      # [...]
+                if partial:
+                    gj = tu.tree_masked_mean(g0, cmask, axis=1)    # [G, ...]
+                    gg = tu.tree_masked_mean(gj, gact0, axis=0)    # [...]
+                else:
+                    gj = tu.tree_mean(g0, axis=1)                  # [G, ...]
+                    gg = tu.tree_mean(gj, axis=0)                  # [...]
                 return jax.tree.map(lambda gjj, ggg: ggg - gjj, gj, gg)
 
+            y_init = grad_init_y(y)
+            if partial:
+                y_init = tu.tree_select(gact0, y_init, y)
             y = jax.tree.map(
-                lambda yg, yo: jnp.where(is_first, yg, yo), grad_init_y(y), y
+                lambda yg, yo: jnp.where(is_first, yg, yo), y_init, y
             )
 
         anchor = x  # group-round-start model (FedProx / FedDyn reference)
@@ -190,32 +263,51 @@ def make_global_round(
         )
 
         # --- Global aggregation (line 10) --------------------------------
-        xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)          # [G, ...] (clients equal)
-        xbar = tu.tree_mean(xbar_j, axis=0)                     # [...]
-        gdrift = tu.tree_sq_norm(
-            tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G))
-        ) / G
+        if partial:
+            # A group with zero sampled clients contributes nothing: its
+            # activity indicator gates it out of the mean and the y update.
+            gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)  # [G]
+            xbar_j = tu.tree_masked_mean(x, cmask, axis=1)           # [G, ...]
+            xbar = tu.tree_masked_mean(xbar_j, gact, axis=0)         # [...]
+            gdrift = tu.tree_masked_sq_norm(
+                tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G)), gact
+            ) / jnp.maximum(jnp.sum(gact), 1.0)
+        else:
+            xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)   # [G, ...] (clients equal)
+            xbar = tu.tree_mean(xbar_j, axis=0)             # [...]
+            gdrift = tu.tree_sq_norm(
+                tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G))
+            ) / G
 
         # Group-global correction update (line 11):
         #   y_j += (xbar_j^{t,E} - xbar^{t+1}) / (H * E * lr)
         if use_y:
-            y = jax.tree.map(
+            y_new = jax.tree.map(
                 lambda yj, xj, xg: yj + (xj - xg) / (H * E * lr), y, xbar_j, xbar
             )
+            y = tu.tree_select(gact, y_new, y) if partial else y_new
 
         # FedDyn gradient-memory update (per client, after its local work).
         if use_dyn:
-            dyn = jax.tree.map(
+            dyn_new = jax.tree.map(
                 lambda mi, xi, ai: mi - cfg.feddyn_alpha * (xi - ai), dyn, x, anchor
             )
+            dyn = tu.tree_select(cmask, dyn_new, dyn) if partial else dyn_new
 
-        # Dissemination: everyone restarts from the (server-lr) global model.
+        # Dissemination: active clients restart from the (server-lr) global
+        # model; frozen clients keep what they have.
         if cfg.server_lr != 1.0:
-            prev = jax.tree.map(lambda xi: xi[0, 0], state.params)
+            if partial:
+                # No stored global model under partial participation: anchor
+                # the server step on the mean over all replicas.
+                prev = tu.tree_mean(state.params, axis=(0, 1))
+            else:
+                prev = jax.tree.map(lambda xi: xi[0, 0], state.params)
             xbar = jax.tree.map(lambda p, xb: p + cfg.server_lr * (xb - p), prev, xbar)
-        x = jax.tree.map(
+        x_glob = jax.tree.map(
             lambda xg: jnp.broadcast_to(xg, (G, K) + xg.shape), xbar
         )
+        x = tu.tree_select(cmask, x_glob, x) if partial else x_glob
 
         metrics = RoundMetrics(
             loss=losses,
@@ -223,9 +315,11 @@ def make_global_round(
             group_drift=gdrift,
             z_norm=tu.tree_sq_norm(z) / (G * K),
             y_norm=tu.tree_sq_norm(y) / G,
+            participation=(jnp.sum(cmask) / (G * K)) if partial
+            else jnp.ones((), jnp.float32),
         )
         new_state = HFLState(
-            params=x, z=z, y=y, dyn=dyn, rng=state.rng, round=state.round + 1
+            params=x, z=z, y=y, dyn=dyn, rng=rng, round=state.round + 1
         )
         return new_state, metrics
 
@@ -233,5 +327,12 @@ def make_global_round(
 
 
 def global_model(state: HFLState) -> PyTree:
-    """The current global model xbar (all clients are equal between rounds)."""
+    """The current global model xbar (all clients are equal between rounds).
+
+    Under partial participation frozen replicas may hold stale params, so
+    index a client that certainly received the last dissemination is not
+    statically known; callers tracking the exact global model under partial
+    participation should average active replicas via the round's masks.
+    Between full-participation rounds every replica is the global model.
+    """
     return jax.tree.map(lambda x: x[0, 0], state.params)

@@ -16,16 +16,26 @@ experimental setting, footnote 2).
 
 Local update (Alg. 2 line 5):  x <- x - lr * (g + sum_m nu_{k_1..k_m}).
 Level-m update (line 9):       nu_n += (subtree_mean(n) - parent_mean) / (lr * P_m).
+
+Partial participation (beyond the paper): ``participation[m]`` is the
+fraction of level-(m+1) nodes whose uplink is live each global round; a
+node is *active* iff its whole ancestor chain is live. Aggregations become
+hierarchical masked means over active subtrees (child-equal-weighted, the
+M-level generalization of the two-level engine's group-then-global masked
+means), frozen subtrees keep their params and nus, and nu updates /
+re-initializations fire only where an active leaf exists. Masks are data --
+the nested scans are unchanged, and with full participation the masked
+machinery is compiled out.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import tree as tu
+from repro.core.participation import sample_axis_mask
 
 PyTree = Any
 
@@ -33,9 +43,12 @@ PyTree = Any
 class MultiLevelState(NamedTuple):
     params: PyTree           # [*dims, ...]
     nus: tuple               # nus[m-1] has leading shape dims[:m], m = 1..M
+    rng: jax.Array | None = None  # participation sampling key
 
 
-def multilevel_init(params0: PyTree, dims: Sequence[int]) -> MultiLevelState:
+def multilevel_init(
+    params0: PyTree, dims: Sequence[int], rng: jax.Array | None = None
+) -> MultiLevelState:
     dims = tuple(dims)
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x, dims + x.shape), params0
@@ -44,7 +57,8 @@ def multilevel_init(params0: PyTree, dims: Sequence[int]) -> MultiLevelState:
         jax.tree.map(lambda x: jnp.zeros(dims[: m + 1] + x.shape, x.dtype), params0)
         for m in range(len(dims))
     )
-    return MultiLevelState(params=stacked, nus=nus)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    return MultiLevelState(params=stacked, nus=nus, rng=rng)
 
 
 def _subtree_mean(x: PyTree, level: int, M: int) -> PyTree:
@@ -64,16 +78,43 @@ def _broadcast_back(a: PyTree, dims: tuple, level: int) -> PyTree:
     return jax.tree.map(_b, a)
 
 
+def _masked_levels(x: PyTree, leaf_act: jax.Array, to_level: int, dims: tuple):
+    """Hierarchical masked means from the leaves down to ``to_level``.
+
+    Child-equal-weighted: a level-a node's value is the plain mean of its
+    *active* children's values, where a child is active iff some leaf in its
+    subtree is active. Returns (vals, acts) with vals[l] = mean tree with
+    leading shape dims[:l] and acts[l] = 0/1 activity of level-l nodes, for
+    l in [to_level, M]. Inactive slices fall back to unmasked means; their
+    activity bit is 0 so downstream updates never read them.
+    """
+    M = len(dims)
+    vals = {M: x}
+    acts = {M: leaf_act}
+    val, w = x, leaf_act
+    for a in range(M - 1, to_level - 1, -1):
+        has = jnp.sum(w, axis=a) > 0
+        val = tu.tree_masked_mean(val, w, axis=a)
+        w = has.astype(jnp.float32)
+        vals[a] = val
+        acts[a] = w
+    return vals, acts
+
+
 def make_multilevel_round(
     loss_fn: Callable[[PyTree, PyTree], jax.Array],
     dims: Sequence[int],
     periods: Sequence[int],
     lr: float,
+    *,
+    participation: Sequence[float] | None = None,
+    participation_mode: str = "uniform",
 ) -> Callable[[MultiLevelState, PyTree], tuple[MultiLevelState, jax.Array]]:
     """Build one *global round* (= P_1 local iterations) as a jittable fn.
 
     batches leaves: [P_1, *dims, ...] -- one batch per local step per client.
-    Returns (state, losses[P_1]).
+    ``participation[m]`` (optional, one per level) is the per-round fraction
+    of live level-(m+1) uplinks. Returns (state, losses[P_1]).
     """
     dims = tuple(dims)
     periods = tuple(periods)
@@ -81,6 +122,11 @@ def make_multilevel_round(
     assert len(periods) == M, "one period per level"
     for a, b in zip(periods, periods[1:]):
         assert a > b and a % b == 0, f"periods must nest: {periods}"
+    if participation is not None:
+        participation = tuple(float(p) for p in participation)
+        assert len(participation) == M, "one participation fraction per level"
+        assert all(0.0 < p <= 1.0 for p in participation), participation
+    partial = participation is not None and any(p < 1.0 for p in participation)
 
     # Block ratios: level-m block = ratios[m-1] repetitions of level-(m+1)
     # block; the innermost block is P_M local steps.
@@ -92,13 +138,20 @@ def make_multilevel_round(
         vg = jax.vmap(vg)
 
     def local_step(carry, batch):
-        x, nus = carry
+        x, nus, act = carry
         loss, g = vg(x, batch)
         d = g
         for m in range(M):
             d = tu.tree_add(d, _broadcast_back(nus[m], dims, m + 1))
-        x = jax.tree.map(lambda xi, di: xi - lr * di, x, d)
-        return (x, nus), jnp.mean(loss)
+        x_new = jax.tree.map(lambda xi, di: xi - lr * di, x, d)
+        if partial:
+            x = tu.tree_select(act, x_new, x)
+            lmean = jnp.sum(jnp.where(act != 0, loss, 0)) / jnp.maximum(
+                jnp.sum(act), 1.0)
+        else:
+            x = x_new
+            lmean = jnp.mean(loss)
+        return (x, nus, act), lmean
 
     def make_block(level: int):
         """Block of P_level steps followed by the level-``level`` aggregation."""
@@ -109,28 +162,62 @@ def make_multilevel_round(
 
         def block(carry, batches_block):
             carry, losses = jax.lax.scan(inner, carry, batches_block)
-            x, nus = carry
-            # Aggregation at this level (over axes level-1 .. M-1):
-            s = _subtree_mean(x, level, M)          # child subtree means
-            a = _subtree_mean(x, level - 1, M)      # parent means
-            a_to_s = _broadcast_back(a, dims[:level], level - 1) if level >= 1 else a
+            x, nus, act = carry
             nus = list(nus)
-            nus[level - 1] = jax.tree.map(
-                lambda nu, si, ai: nu + (si - ai) / (lr * periods[level - 1]),
-                nus[level - 1], s, a_to_s,
-            )
-            # Re-initialize deeper corrections (Alg. 2 line 11).
-            for m in range(level, M):
-                nus[m] = tu.tree_zeros_like(nus[m])
-            # Dissemination: every client under a parent restarts from it.
-            x = _broadcast_back(a, dims, level - 1)
-            return (x, tuple(nus)), losses
+            if partial:
+                # Masked aggregation: child means at ``level`` and parent
+                # means at ``level - 1`` over active subtrees only.
+                vals, acts = _masked_levels(x, act, level - 1, dims)
+                s, a_val = vals[level], vals[level - 1]
+                a_to_s = (_broadcast_back(a_val, dims[:level], level - 1)
+                          if level >= 1 else a_val)
+                nu_new = jax.tree.map(
+                    lambda nu, si, ai: nu + (si - ai) / (lr * periods[level - 1]),
+                    nus[level - 1], s, a_to_s,
+                )
+                nus[level - 1] = tu.tree_select(acts[level], nu_new, nus[level - 1])
+                # Re-initialize deeper corrections (Alg. 2 line 11) only
+                # where the subtree took part in this block.
+                for m in range(level, M):
+                    nus[m] = tu.tree_select(
+                        acts[m + 1], tu.tree_zeros_like(nus[m]), nus[m])
+                # Dissemination: active leaves restart from their
+                # level-(level-1) ancestor; frozen leaves keep their params.
+                x = tu.tree_select(act, _broadcast_back(a_val, dims, level - 1), x)
+            else:
+                # Aggregation at this level (over axes level-1 .. M-1):
+                s = _subtree_mean(x, level, M)          # child subtree means
+                a = _subtree_mean(x, level - 1, M)      # parent means
+                a_to_s = _broadcast_back(a, dims[:level], level - 1) if level >= 1 else a
+                nus[level - 1] = jax.tree.map(
+                    lambda nu, si, ai: nu + (si - ai) / (lr * periods[level - 1]),
+                    nus[level - 1], s, a_to_s,
+                )
+                # Re-initialize deeper corrections (Alg. 2 line 11).
+                for m in range(level, M):
+                    nus[m] = tu.tree_zeros_like(nus[m])
+                # Dissemination: every client under a parent restarts from it.
+                x = _broadcast_back(a, dims, level - 1)
+            return (x, tuple(nus), act), losses
 
         return block
 
     top = make_block(1)
 
     def round_fn(state: MultiLevelState, batches: PyTree):
+        if partial:
+            mkey, rng = jax.random.split(state.rng)
+            keys = jax.random.split(mkey, M)
+            leaf_act = None
+            for m in range(M):
+                mask = sample_axis_mask(
+                    keys[m], dims[: m + 1], participation[m], participation_mode)
+                leaf_act = mask if leaf_act is None else (
+                    leaf_act.reshape(leaf_act.shape + (1,)) * mask)
+        else:
+            leaf_act = None
+            rng = state.rng
+
         # Reshape flat [P_1, ...] leading axis into the nested block shape.
         lead = tuple(ratios)
 
@@ -139,14 +226,15 @@ def make_multilevel_round(
 
         nested = jax.tree.map(_reshape, batches)
         # The top block's scan consumes axis 0 (ratio r_1); feed it whole.
-        (carry, losses) = top((state.params, state.nus), nested)
-        x, nus = carry
-        return MultiLevelState(params=x, nus=nus), losses.reshape(-1)
+        (carry, losses) = top((state.params, state.nus, leaf_act), nested)
+        x, nus, _ = carry
+        return MultiLevelState(params=x, nus=nus, rng=rng), losses.reshape(-1)
 
     return round_fn
 
 
 def multilevel_global_model(state: MultiLevelState) -> PyTree:
-    # All clients are equal between rounds; index the first leaf client.
+    # All clients are equal between full-participation rounds; index the
+    # first leaf client.
     ndim_lead = len(state.nus)
     return jax.tree.map(lambda a: a[(0,) * ndim_lead], state.params)

@@ -1,0 +1,90 @@
+"""Per-round participation sampling (partial client / group availability).
+
+The paper's experiments assume full participation; real hierarchical
+deployments sample a subset of clients -- and sometimes whole groups (cell
+towers, hospital networks) -- each round. Masks are *data*, not structure:
+the engines stay fully jittable, inactive replicas simply have their
+updates gated out with ``where`` and every aggregation becomes a masked
+mean (see ``core.tree``).
+
+Masks are drawn from the engine state's PRNG key, so a host data pipeline
+can call :func:`round_masks` with ``state.rng`` *before* the round to skip
+packing batches for inactive clients -- it reproduces exactly the masks the
+jitted round function derives internally.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+MODES = ("uniform", "fixed")
+
+
+class ParticipationMasks(NamedTuple):
+    """0/1 float masks for one global round.
+
+    group:  [G]    -- group j is reachable this round.
+    client: [G, K] -- client (j, i) is active (already gated by its group).
+    """
+
+    group: jax.Array
+    client: jax.Array
+
+
+def fixed_count(frac: float, n: int) -> int:
+    """Participants per parent under 'fixed' sampling: never zero."""
+    return max(1, int(round(frac * n)))
+
+
+def sample_axis_mask(key: jax.Array, shape: tuple, frac: float, mode: str) -> jax.Array:
+    """0/1 float mask of ``shape``; the last axis is the sampled population.
+
+    'uniform': independent Bernoulli(frac) per entry -- a row may come up
+    empty, which downstream code treats as a frozen (skipped) aggregation.
+    'fixed': exactly ``fixed_count(frac, shape[-1])`` ones per row, uniformly
+    without replacement (rank the uniform draws and threshold).
+    """
+    if frac >= 1.0:
+        return jnp.ones(shape, jnp.float32)
+    u = jax.random.uniform(key, shape)
+    if mode == "uniform":
+        return (u < frac).astype(jnp.float32)
+    if mode == "fixed":
+        k = fixed_count(frac, shape[-1])
+        rank = jnp.argsort(jnp.argsort(u, axis=-1), axis=-1)
+        return (rank < k).astype(jnp.float32)
+    raise ValueError(f"unknown participation mode {mode!r}")
+
+
+def sample_hfl_masks(
+    key: jax.Array,
+    num_groups: int,
+    clients_per_group: int,
+    client_frac: float,
+    group_frac: float,
+    mode: str = "uniform",
+) -> ParticipationMasks:
+    """Two-level masks: group availability gates every client under it."""
+    kg, kc = jax.random.split(key)
+    gmask = sample_axis_mask(kg, (num_groups,), group_frac, mode)
+    cmask = sample_axis_mask(
+        kc, (num_groups, clients_per_group), client_frac, mode
+    ) * gmask[:, None]
+    return ParticipationMasks(group=gmask, client=cmask)
+
+
+def round_masks(rng: jax.Array, cfg) -> tuple[ParticipationMasks, jax.Array]:
+    """(masks for the upcoming round, carried key) from a state's ``rng``.
+
+    The engine consumes the key the same way, so host-side batch packing and
+    the jitted round agree on who participates without any side channel.
+    """
+    mkey, next_rng = jax.random.split(rng)
+    masks = sample_hfl_masks(
+        mkey, cfg.num_groups, cfg.clients_per_group,
+        cfg.client_participation, cfg.group_participation,
+        cfg.participation_mode,
+    )
+    return masks, next_rng

@@ -40,6 +40,51 @@ def tree_mean(a: PyTree, axis) -> PyTree:
     return jax.tree.map(lambda x: jnp.mean(x, axis=axis), a)
 
 
+def expand_mask(mask: jax.Array, x: jax.Array) -> jax.Array:
+    """Right-pad a leading-axes mask with unit dims so it broadcasts to x."""
+    return mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+
+
+def tree_select(mask: jax.Array, a: PyTree, b: PyTree) -> PyTree:
+    """Leafwise where(mask != 0, a, b); mask covers the leading topology axes.
+
+    The unselected branch never propagates (frozen replicas keep their exact
+    bits even if the rejected update is NaN from a dummy batch).
+    """
+    return jax.tree.map(
+        lambda ai, bi: jnp.where(expand_mask(mask, ai) != 0, ai, bi), a, b
+    )
+
+
+def tree_masked_mean(a: PyTree, mask: jax.Array, axis: int) -> PyTree:
+    """Mean over ``axis`` counting only entries with mask != 0.
+
+    ``mask`` spans the leading topology axes of every leaf. Slices with no
+    active entries fall back to the unmasked mean -- callers gate those
+    slices out downstream (their activity indicator is zero), so the
+    fallback value is never observed, it just keeps the program NaN-free.
+    Masked-out entries go through ``where`` (not multiplication) so non-finite
+    values in frozen replicas cannot poison the aggregate.
+    """
+    cnt = jnp.sum(mask, axis=axis)
+    has = cnt != 0
+    denom = jnp.maximum(cnt, 1)
+
+    def _m(x):
+        w = expand_mask(mask, x) != 0
+        s = jnp.sum(jnp.where(w, x, 0), axis=axis)
+        mm = s / expand_mask(denom, s)
+        return jnp.where(expand_mask(has, mm), mm, jnp.mean(x, axis=axis))
+
+    return jax.tree.map(_m, a)
+
+
+def tree_masked_sq_norm(a: PyTree, mask: jax.Array):
+    """||a||^2 restricted to entries with mask != 0 on the leading axes."""
+    zeroed = jax.tree.map(lambda x: jnp.where(expand_mask(mask, x) != 0, x, 0), a)
+    return tree_sq_norm(zeroed)
+
+
 def tree_broadcast_to_axis(a: PyTree, axis: int, size: int) -> PyTree:
     """Insert a broadcasted leading axis (dissemination after aggregation)."""
 

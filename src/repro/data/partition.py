@@ -97,11 +97,17 @@ def sample_round_batches(
     group_rounds: int,
     local_steps: int,
     batch_size: int,
+    client_mask: np.ndarray | None = None,
 ):
     """Pre-sample one global round of batches: leaves [E, H, G, K, b, ...].
 
     (Pre-sampling keeps the round function purely functional; per-round host
     sampling mirrors an input pipeline feeding the jitted step.)
+
+    ``client_mask`` ([G, K] 0/1, e.g. ``repro.core.round_masks(state.rng,
+    cfg).client``) skips packing for inactive clients: their slots stay
+    zero -- the engine freezes them anyway -- which drops host sampling work
+    and host->device bytes by the non-participation fraction.
     """
     G, K = len(indices), len(indices[0])
     E, H, B = group_rounds, local_steps, batch_size
@@ -109,6 +115,8 @@ def sample_round_batches(
     by = np.zeros((E, H, G, K, B) + data_y.shape[1:], data_y.dtype)
     for g in range(G):
         for k in range(K):
+            if client_mask is not None and not client_mask[g][k]:
+                continue
             pool = indices[g][k]
             sel = rng.choice(pool, size=(E, H, B), replace=True)
             bx[:, :, g, k] = data_x[sel]

@@ -218,12 +218,12 @@ def run_case(arch_id: str, shape_id: str, mesh_kind: str, overrides=None,
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
         chips = mesh.devices.size
-        cost = compiled.cost_analysis() or {}
         mema = compiled.memory_analysis()
         # Trip-count-aware accounting (XLA's cost_analysis counts every
         # while body once -- useless for scan-heavy programs; see
         # launch/hlo_analysis.py). Raw XLA numbers kept as cross-checks.
         from repro.launch import hlo_analysis as H
+        cost = H.xla_cost_dict(compiled)
         hc = H.analyze(compiled.as_text())
         flops = hc.flops
         bytes_acc = hc.bytes

@@ -182,6 +182,15 @@ class HloCosts:
     notes: list = dataclasses.field(default_factory=list)
 
 
+def xla_cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions (a plain
+    dict in newer releases, a one-dict-per-device list in older ones)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _shape_of(text: str):
     """(bytes, elems, dims-of-first-shape) of a result-type string."""
     b = e = 0

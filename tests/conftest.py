@@ -1,0 +1,18 @@
+"""Suite-wide config.
+
+The property-test modules need ``hypothesis``; CI installs it via the
+``test`` extra, but the offline repro container cannot. Register the
+deterministic fallback (tests/_hypothesis_fallback.py) before those modules
+import, so collection never dies on ModuleNotFoundError.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()

@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import HFLConfig, hfl_init, make_global_round, global_model
-from repro.core import tree as tu
 
 from oracle import mtgc_round
 

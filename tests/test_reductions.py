@@ -1,5 +1,4 @@
 """Paper Sec. 3.3 / App. G: MTGC with N=1 group and E=1 IS SCAFFOLD."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

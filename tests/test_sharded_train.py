@@ -8,6 +8,7 @@ microbatch chunks.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import HFLConfig, global_model, hfl_init, make_global_round
 from repro.launch.train import make_sharded_round, sharded_init
@@ -49,6 +50,7 @@ def test_sharded_round_equals_engine():
             np.asarray(st_prod.y["w"]).sum(axis=0), 0.0, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_grad_accumulation_is_exact():
     """A chunks of size c == one step on the full A*c batch (mean loss)."""
     G, K, E, H, lr = 2, 2, 1, 2, 0.05

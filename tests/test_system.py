@@ -13,6 +13,7 @@ import pytest
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
+@pytest.mark.slow
 def test_train_cli_smoke():
     """examples deliverable (b): train a reduced arch end-to-end, loss drops."""
     from repro.configs import get_arch
@@ -104,6 +105,7 @@ def test_dryrun_subprocess_smoke():
     assert rec["memory"]["temp_size_in_bytes"] < 16e9  # fits v5e HBM
 
 
+@pytest.mark.slow
 def test_serve_generation_loop():
     """batched serving: prefill + greedy decode stays finite and identical
     across batch entries with identical prompts."""
