@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (BenchSetup, report, rounds_to_accuracy)
+from benchmarks.common import BenchSetup, report, rounds_to_accuracy
 from repro.core import HFLConfig, global_model, hfl_init, make_global_round
 from repro.data.partition import partition, sample_round_batches
 from repro.data.synthetic import make_classification, train_test_split

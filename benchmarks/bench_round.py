@@ -1,0 +1,237 @@
+"""Round-engine microbenchmark: flat-buffer state vs the pytree path.
+
+The repo's first perf-trajectory point. For every combination of
+{tree, flat} x {mtgc, hfedavg} x {full, C=0.5 participation} this measures,
+on the same model / data / schedule:
+
+* post-compile wall-clock per global round (min over interleaved reps --
+  tree and flat alternate rep-by-rep so background load hits both paths
+  equally),
+* trace+compile time of the first call (where per-leaf dispatch hurts most),
+* local steps/s,
+
+and cross-checks flat vs tree numerics (allclose, rtol 1e-5, after 3
+rounds) before timing. Results land in ``benchmarks/results/BENCH_round.json``
+(uploaded as a CI artifact by the non-blocking job) and as a printed table.
+
+Workloads:
+
+* ``ragged`` (default): the paper-style synthetic quadratic consensus
+  objective over a ragged many-leaf parameter tree. This is the
+  engine-bound regime -- hundreds of small tensors (LSTM gates, norm
+  scales/biases, per-layer heads), where per-leaf dispatch in the
+  aggregation/correction phases dominates and the flat path collapses it
+  into whole-model ops. The aggregation-heavy quick schedule (E=4, H=2)
+  mirrors the paper's fast-timescale regime.
+* ``mlp``: the deep narrow ``deep_mlp`` classifier -- a model-bound control
+  where the sequential grad chain (identical in both paths) dominates;
+  expect the flat win to show up mostly in trace+compile time here.
+
+    PYTHONPATH=src python -m benchmarks.bench_round --quick
+    PYTHONPATH=src python -m benchmarks.bench_round --full --model mlp
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HFLConfig, as_tree, hfl_init, make_global_round
+from repro.models.small import deep_mlp, make_loss
+
+RESULTS = Path(__file__).parent / "results"
+PARITY_ROUNDS = 3
+
+
+@dataclasses.dataclass
+class BenchConfig:
+    model: str = "ragged"     # "ragged" | "mlp"
+    num_groups: int = 2
+    clients_per_group: int = 2
+    group_rounds: int = 4     # E
+    local_steps: int = 2      # H
+    # ragged: number of leaves and their size range
+    num_blocks: int = 300
+    min_block: int = 16
+    max_block: int = 256
+    # mlp: depth/width/batch
+    depth: int = 48
+    hidden: int = 32
+    dim: int = 32
+    num_classes: int = 10
+    batch: int = 8
+    reps: int = 9
+    seed: int = 0
+
+    @classmethod
+    def full(cls, model: str = "ragged"):
+        return cls(model=model, num_groups=4, clients_per_group=5,
+                   num_blocks=600, depth=48, hidden=64, batch=16, reps=9)
+
+
+def _ragged_problem(bc: BenchConfig):
+    """Quadratic consensus objective over a ragged many-leaf tree:
+    F_i(x) = 0.5 * ||a_i * x - b_i||^2 leafwise, heterogeneous (a, b)."""
+    rng = np.random.default_rng(bc.seed)
+    sizes = rng.integers(bc.min_block, bc.max_block, size=bc.num_blocks)
+    params0 = {f"b{i:03d}": jnp.zeros((int(s),), jnp.float32)
+               for i, s in enumerate(sizes)}
+
+    def loss_fn(p, batch):
+        return 0.5 * sum(jnp.sum((batch["a"][k] * v - batch["b"][k]) ** 2)
+                         for k, v in p.items())
+
+    lead = (bc.group_rounds, bc.local_steps, bc.num_groups,
+            bc.clients_per_group)
+    batches = {
+        "a": {k: jnp.asarray(rng.normal(size=lead + v.shape) * 0.3 + 1.0,
+                             jnp.float32) for k, v in params0.items()},
+        "b": {k: jnp.asarray(rng.normal(size=lead + v.shape), jnp.float32)
+              for k, v in params0.items()},
+    }
+    return params0, loss_fn, batches
+
+
+def _mlp_problem(bc: BenchConfig):
+    init, apply = deep_mlp(bc.num_classes, bc.dim, hidden=bc.hidden,
+                           depth=bc.depth)
+    loss_fn = make_loss(apply)
+    params0 = init(jax.random.PRNGKey(bc.seed))
+    rng = np.random.default_rng(bc.seed)
+    shape = (bc.group_rounds, bc.local_steps, bc.num_groups,
+             bc.clients_per_group, bc.batch)
+    batches = {
+        "x": jnp.asarray(rng.normal(size=shape + (bc.dim,)), jnp.float32),
+        "y": jnp.asarray(rng.integers(0, bc.num_classes, size=shape)),
+    }
+    return params0, loss_fn, batches
+
+
+def _cfg(bc: BenchConfig, algorithm: str, participation: float, flat: bool):
+    return HFLConfig(
+        num_groups=bc.num_groups, clients_per_group=bc.clients_per_group,
+        local_steps=bc.local_steps, group_rounds=bc.group_rounds, lr=0.05,
+        algorithm=algorithm, client_participation=participation,
+        participation_mode="fixed", use_flat_state=flat,
+    )
+
+
+def _run_combo(params0, loss_fn, batches, cfg_tree, cfg_flat, reps: int):
+    """One compile per path: parity check (PARITY_ROUNDS from fresh states,
+    timing the first call as trace+compile), then alternating timed reps so
+    background load hits tree and flat equally."""
+    rfs, states, compile_s, finals = {}, {}, {}, {}
+    for cfg in (cfg_tree, cfg_flat):
+        flat = cfg.use_flat_state
+        state = hfl_init(params0, cfg)
+        rfs[flat] = jax.jit(make_global_round(loss_fn, cfg))
+        t0 = time.perf_counter()
+        state, m = rfs[flat](state, batches)
+        jax.block_until_ready(m.loss)
+        compile_s[flat] = time.perf_counter() - t0
+        for _ in range(PARITY_ROUNDS - 1):
+            state, _ = rfs[flat](state, batches)
+        finals[flat] = as_tree(state.params)
+        states[flat] = state
+    errs, oks = [], []
+    for t_leaf, f_leaf in zip(jax.tree.leaves(finals[False]),
+                              jax.tree.leaves(finals[True])):
+        errs.append(float(jnp.max(jnp.abs(t_leaf - f_leaf))))
+        oks.append(bool(jnp.allclose(t_leaf, f_leaf, rtol=1e-5, atol=1e-6)))
+
+    times = {False: [], True: []}
+    for _ in range(reps):
+        for flat in (False, True):
+            t0 = time.perf_counter()
+            states[flat], m = rfs[flat](states[flat], batches)
+            jax.block_until_ready(m.loss)
+            times[flat].append(time.perf_counter() - t0)
+    steps = cfg_tree.group_rounds * cfg_tree.local_steps
+    timed = {}
+    for flat in (False, True):
+        round_s = float(np.min(times[flat]))
+        timed[flat] = {
+            "round_ms": round_s * 1e3,
+            "trace_compile_s": compile_s[flat],
+            "steps_per_s": steps / round_s,
+        }
+    return timed, max(errs), all(oks)
+
+
+def main(quick: bool = True, model: str = "ragged") -> dict:
+    bc = BenchConfig(model=model) if quick else BenchConfig.full(model)
+    params0, loss_fn, batches = (
+        _ragged_problem(bc) if bc.model == "ragged" else _mlp_problem(bc))
+    n_leaves = len(jax.tree.leaves(params0))
+    n_params = sum(x.size for x in jax.tree.leaves(params0))
+    print(f"[bench_round] backend={jax.default_backend()} model={bc.model} "
+          f"leaves={n_leaves} params={n_params} "
+          f"G={bc.num_groups} K={bc.clients_per_group} "
+          f"E={bc.group_rounds} H={bc.local_steps}")
+
+    combos = []
+    for algorithm in ("mtgc", "hfedavg"):
+        for participation in (1.0, 0.5):
+            cfg_t = _cfg(bc, algorithm, participation, flat=False)
+            cfg_f = _cfg(bc, algorithm, participation, flat=True)
+            timed, max_err, parity_ok = _run_combo(
+                params0, loss_fn, batches, cfg_t, cfg_f, bc.reps)
+            tree, flat = timed[False], timed[True]
+            speedup = tree["round_ms"] / flat["round_ms"]
+            trace_speedup = tree["trace_compile_s"] / flat["trace_compile_s"]
+            combos.append({
+                "algorithm": algorithm,
+                "participation": participation,
+                "tree": tree,
+                "flat": flat,
+                "speedup": speedup,
+                "trace_compile_speedup": trace_speedup,
+                "parity_max_err": max_err,
+                "parity_ok": parity_ok,
+            })
+            print(f"  {algorithm:8s} C={participation:3.1f}: "
+                  f"tree {tree['round_ms']:8.2f} ms  "
+                  f"flat {flat['round_ms']:8.2f} ms  "
+                  f"speedup {speedup:4.2f}x  "
+                  f"(trace+compile {tree['trace_compile_s']:.1f}s -> "
+                  f"{flat['trace_compile_s']:.1f}s, {trace_speedup:.1f}x)  "
+                  f"parity {'OK' if parity_ok else 'FAIL'} "
+                  f"(max err {max_err:.2e})")
+
+    speedups = [c["speedup"] for c in combos]
+    out = {
+        "backend": jax.default_backend(),
+        "config": dataclasses.asdict(bc),
+        "model": {"kind": bc.model, "leaves": n_leaves, "params": n_params},
+        "parity_rounds": PARITY_ROUNDS,
+        "combos": combos,
+        "min_speedup": min(speedups),
+        "geomean_speedup": float(np.exp(np.mean(np.log(speedups)))),
+        "all_parity_ok": all(c["parity_ok"] for c in combos),
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / "BENCH_round.json"
+    path.write_text(json.dumps(out, indent=2))
+    print(f"[bench_round] min speedup {out['min_speedup']:.2f}x, "
+          f"geomean {out['geomean_speedup']:.2f}x -> {path}")
+    if not out["all_parity_ok"]:
+        raise SystemExit("flat/tree parity FAILED")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    group = ap.add_mutually_exclusive_group()
+    group.add_argument("--quick", action="store_true", default=True,
+                       help="CI-sized config (default)")
+    group.add_argument("--full", action="store_true",
+                       help="larger topology / batches")
+    ap.add_argument("--model", choices=("ragged", "mlp"), default="ragged")
+    args = ap.parse_args()
+    main(quick=not args.full, model=args.model)

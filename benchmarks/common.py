@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HFLConfig, global_model, hfl_init, make_global_round, round_masks
+from repro.core import HFLConfig, as_tree, global_model, hfl_init, make_global_round, round_masks
 from repro.data.partition import partition, sample_round_batches
 from repro.data.synthetic import make_classification, train_test_split
 from repro.models.small import accuracy, make_loss, mlp
@@ -105,7 +105,8 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
                 params_eval = global_model(state)
             else:
                 g_a, k_a = eval_gk
-                params_eval = jax.tree.map(lambda x: x[g_a, k_a], state.params)
+                params_eval = as_tree(
+                    jax.tree.map(lambda x: x[g_a, k_a], state.params))
             acc = accuracy(apply, params_eval, jnp.asarray(test.x), test.y)
             hist["round"].append(t + 1)
             hist["acc"].append(float(acc))

@@ -18,8 +18,10 @@ def main(quick: bool = True) -> None:
     report("fig5_system_params", rows,
            ["groups", "clients_per_group", "algorithm", "final_acc"])
     by = {(g, k, a): acc for g, k, a, acc in rows}
-    wide = by[(topos[0][0], topos[0][1], "local_corr")] - by[(topos[0][0], topos[0][1], "group_corr")]
-    many = by[(topos[-1][0], topos[-1][1], "group_corr")] - by[(topos[-1][0], topos[-1][1], "local_corr")]
+    g0, k0 = topos[0]
+    gn, kn = topos[-1]
+    wide = by[(g0, k0, "local_corr")] - by[(g0, k0, "group_corr")]
+    many = by[(gn, kn, "group_corr")] - by[(gn, kn, "local_corr")]
     print(f"[fig5] many-clients favours local corr (delta {wide:+.4f}); "
           f"many-groups favours group corr (delta {many:+.4f})")
 

@@ -19,10 +19,17 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (ablation_beyond, fig3_fl_baselines,
-                            fig4_corrections, fig5_system_params,
-                            fig7_comm_cost, fig11_three_level,
-                            fig_participation, roofline, table51_speedup)
+    from benchmarks import (
+        ablation_beyond,
+        fig11_three_level,
+        fig3_fl_baselines,
+        fig4_corrections,
+        fig5_system_params,
+        fig7_comm_cost,
+        fig_participation,
+        roofline,
+        table51_speedup,
+    )
 
     suites = {
         "fig3_fl_baselines": lambda: fig3_fl_baselines.main(quick=not args.full),

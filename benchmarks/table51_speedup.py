@@ -3,8 +3,7 @@ grow, per algorithm; speedups relative to HFedAvg; plus the
 heterogeneity-immunity claim (alpha sweep)."""
 from __future__ import annotations
 
-from benchmarks.common import (BenchSetup, report, rounds_to_accuracy,
-                               run_algorithm)
+from benchmarks.common import BenchSetup, report, rounds_to_accuracy, run_algorithm
 
 ALGOS = ("hfedavg", "local_corr", "group_corr", "mtgc")
 

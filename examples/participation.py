@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HFLConfig, hfl_init, make_global_round, round_masks
+from repro.core import HFLConfig, as_tree, hfl_init, make_global_round, round_masks
 from repro.data.partition import partition, sample_round_batches
 from repro.data.synthetic import make_classification, train_test_split
 from repro.models.small import accuracy, make_loss, mlp
@@ -48,7 +48,7 @@ def main():
             if (t + 1) % 5 == 0:
                 # Evaluate a replica that received the last dissemination.
                 g_a, k_a = np.argwhere(cmask > 0)[0]
-                params = jax.tree.map(lambda x: x[g_a, k_a], state.params)
+                params = as_tree(jax.tree.map(lambda x: x[g_a, k_a], state.params))
                 acc = accuracy(apply, params, jnp.asarray(test.x), test.y)
                 print(f"round {t+1:3d}  active {int(cmask.sum()):2d}/{G*K}  "
                       f"loss {float(np.mean(m.loss)):.4f}  test acc {acc:.4f}  "

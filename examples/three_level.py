@@ -10,8 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (make_multilevel_round, multilevel_global_model,
-                        multilevel_init)
+from repro.core import make_multilevel_round, multilevel_global_model, multilevel_init
 from repro.data.partition import partition
 from repro.data.synthetic import make_classification, train_test_split
 from repro.models.small import accuracy, make_loss, mlp

@@ -4,26 +4,18 @@ Public API:
   HFLConfig, HFLState, hfl_init, make_global_round, global_model
   ScaffoldState, scaffold_init, make_scaffold_round
   MultiLevelState, multilevel_init, make_multilevel_round
+  Packer, FlatBuffers, make_packer, as_tree (flat-state plumbing)
 """
 from repro.core.config import HFLConfig
-from repro.core.engine import (
-    HFLState,
-    RoundMetrics,
-    global_model,
-    hfl_init,
-    make_global_round,
-)
+from repro.core.engine import HFLState, RoundMetrics, global_model, hfl_init, make_global_round
 from repro.core.multilevel import (
     MultiLevelState,
     make_multilevel_round,
     multilevel_global_model,
     multilevel_init,
 )
-from repro.core.participation import (
-    ParticipationMasks,
-    round_masks,
-    sample_hfl_masks,
-)
+from repro.core.packer import FlatBuffers, Packer, as_tree, is_flat, make_packer
+from repro.core.participation import ParticipationMasks, round_masks, sample_hfl_masks
 from repro.core.scaffold import ScaffoldState, make_scaffold_round, scaffold_init
 
 ALGORITHMS = ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox", "feddyn")
@@ -31,6 +23,11 @@ ALGORITHMS = ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox", "feddyn"
 __all__ = [
     "ALGORITHMS",
     "HFLConfig",
+    "FlatBuffers",
+    "Packer",
+    "as_tree",
+    "is_flat",
+    "make_packer",
     "ParticipationMasks",
     "round_masks",
     "sample_hfl_masks",

@@ -34,7 +34,18 @@ class HFLConfig:
                          without replacement).
       use_fused_update:  route the MTGC local step through the fused Pallas
                          kernel (kernels/mtgc_update.py); interpret-mode off
-                         TPU. Only valid for algorithm='mtgc'.
+                         TPU. Only valid for algorithm='mtgc'. Combined with
+                         ``use_flat_state`` the whole model is one batched
+                         kernel call with the participation mask folded in.
+      use_flat_state:    store params/z/dyn as contiguous ``[G, K, N]``
+                         buffers (one per dtype) and ``y`` as ``[G, N]``
+                         (see core/packer.py). The round hot path then runs
+                         as a handful of whole-model ops instead of
+                         per-leaf dispatch; ``hfl_init`` returns a
+                         FlatBuffers-state and the round function adapts to
+                         whichever state layout it is traced with. Default
+                         on (the simulator engine's flat/tree parity is
+                         covered by tests/test_flat_state.py).
     """
 
     num_groups: int = 2
@@ -51,6 +62,7 @@ class HFLConfig:
     group_participation: float = 1.0
     participation_mode: str = "uniform"
     use_fused_update: bool = False
+    use_flat_state: bool = True
 
     @property
     def total_clients(self) -> int:

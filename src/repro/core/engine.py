@@ -27,6 +27,21 @@ params and corrections frozen, every aggregation becomes a masked mean, and
 structure -- the scans and the jitted program shape are unchanged. With
 full participation the masked machinery is compiled out entirely, so the
 default path is bit-for-bit the paper engine.
+
+Flat state (``cfg.use_flat_state``, default on): ``hfl_init`` packs params,
+``z`` and ``dyn`` into contiguous ``[G, K, N]`` buffers (one per dtype) and
+``y`` into ``[G, N]`` (see ``core.packer``); the round function detects the
+layout at trace time from the state itself. Every aggregation, correction
+update, drift norm and dissemination then runs as a single whole-model op
+instead of per-leaf dispatch. The gradient hot loop still consumes tree
+views -- ``packer.unflatten`` produces them once per *local phase* (not per
+step, so the hot loop pays no repack traffic), the phase's correction sum
+``z + y`` collapses into one precomputed tensor, and the participation
+``where`` folds into the same fused update expression. With
+``use_fused_update`` the local step becomes a single batched Pallas call
+over the entire flat model (mask folded in, ``y`` broadcast by the kernel's
+index map; kernels/mtgc_update.py) -- the TPU path. Flat/tree parity is
+enforced by tests/test_flat_state.py; models are untouched either way.
 """
 from __future__ import annotations
 
@@ -37,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import tree as tu
 from repro.core.config import HFLConfig
+from repro.core.packer import FlatBuffers, as_tree, is_flat, make_packer
 from repro.core.participation import round_masks
 
 PyTree = Any
@@ -73,13 +89,33 @@ class RoundMetrics(NamedTuple):
 
 
 def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None) -> HFLState:
-    """Broadcast a single model to every client and zero the corrections."""
+    """Broadcast a single model to every client and zero the corrections.
+
+    With ``cfg.use_flat_state`` the state leaves are contiguous flat
+    buffers (FlatBuffers; see core/packer.py) rather than model pytrees --
+    recover tree views with ``packer.as_tree`` / ``FlatBuffers.to_tree``.
+    """
     G, K = cfg.num_groups, cfg.clients_per_group
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    if cfg.use_flat_state:
+        packer = make_packer(params0)
+        flat0 = packer.flatten(params0)
+        params = FlatBuffers(
+            {k: jnp.broadcast_to(b, (G, K) + b.shape) for k, b in flat0.bufs.items()},
+            packer,
+        )
+        return HFLState(
+            params=params,
+            z=packer.zeros((G, K)),
+            y=packer.zeros((G,)),
+            dyn=packer.zeros((G, K)),
+            rng=rng,
+            round=jnp.zeros((), jnp.int32),
+        )
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0
     )
     y0 = jax.tree.map(lambda x: jnp.zeros((G,) + x.shape, x.dtype), params0)
-    rng = jax.random.PRNGKey(0) if rng is None else rng
     return HFLState(
         params=stacked,
         z=tu.tree_zeros_like(stacked),
@@ -106,6 +142,11 @@ def make_global_round(
     vmaps it over the [G, K] axes. ``batches`` passed to the returned function
     must have leaves shaped ``[E, H, G, K, ...]`` (one batch per local step
     per client).
+
+    The returned function adapts at trace time to the state layout it is
+    given: a flat state (from ``hfl_init`` under ``cfg.use_flat_state``)
+    runs the flat hot path, a pytree state runs the per-leaf reference
+    path; ``loss_fn`` always sees model pytrees.
     """
     cfg.validate()
     algo = cfg.algorithm
@@ -126,6 +167,8 @@ def make_global_round(
 
     def global_round(state: HFLState, batches: PyTree) -> tuple[HFLState, RoundMetrics]:
         x, z, y, dyn = state.params, state.z, state.y, state.dyn
+        flat = is_flat(state.params)
+        packer = state.params.packer if flat else None
 
         if partial:
             masks, rng = round_masks(state.rng, cfg)
@@ -135,7 +178,12 @@ def make_global_round(
             cmask = None
             rng = state.rng
 
-        def local_phase(x, z, y, dyn, anchor, batches_eh):
+        def step_loss_mean(loss):
+            if partial:
+                return jnp.sum(jnp.where(cmask != 0, loss, 0)) / n_active
+            return jnp.mean(loss)
+
+        def local_phase_tree(x, z, y, dyn, anchor, batches_eh):
             """H local SGD steps (Alg. 1, lines 6-7). batches_eh: [H, G, K, ...]."""
             y_b = tu.tree_broadcast_to_axis(y, 1, K)  # [G, K, ...]
 
@@ -169,14 +217,77 @@ def make_global_round(
                     x_new = jax.tree.map(lambda xi, di: xi - lr * di, x, d)
                 if partial:
                     x = tu.tree_select(cmask, x_new, x)
-                    lmean = jnp.sum(jnp.where(cmask != 0, loss, 0)) / n_active
                 else:
                     x = x_new
-                    lmean = jnp.mean(loss)
-                return x, lmean
+                return x, step_loss_mean(loss)
 
             x, losses = jax.lax.scan(step, x, batches_eh)
             return x, losses
+
+        def local_phase_flat(x, z, y, dyn, anchor, batches_eh):
+            """Flat local phase: repack at the phase boundary, never per step.
+
+            z and y are constant for the whole phase, so their sum collapses
+            into one precomputed correction tensor; the participation gate
+            folds into the same fused update expression (no separate
+            parameter-sized ``tree_select`` pass).
+            """
+            if use_fused:
+                # One batched Pallas call over the entire flat model per
+                # step: y stays [G, N] (broadcast by the kernel index map)
+                # and the mask is applied in-register.
+                def step(xf, batch):
+                    loss, g = _client_grads(loss_fn, packer.unflatten(xf), batch)
+                    gf = packer.flatten(g)
+                    xf = FlatBuffers(
+                        {k: kops.mtgc_update_flat(
+                            xf.bufs[k], gf.bufs[k], z.bufs[k], y.bufs[k],
+                            cmask, lr=lr, mode=fused_mode)
+                         for k in xf.bufs},
+                        packer,
+                    )
+                    return xf, step_loss_mean(loss)
+
+                return jax.lax.scan(step, x, batches_eh)
+
+            # Unpack the phase constants once ([G, N] y stays a factor K
+            # smaller than the replicas until it broadcasts in-kernel).
+            z_t = z.to_tree() if use_z else None
+            y_t = y.to_tree() if use_y else None
+            anchor_t = anchor.to_tree() if (use_prox or use_dyn) else None
+            dyn_t = dyn.to_tree() if use_dyn else None
+
+            def step(x_t, batch):
+                loss, g = _client_grads(loss_fn, x_t, batch)
+
+                def upd(xi, gi, *rest):
+                    it = iter(rest)
+                    d = gi
+                    if use_z:
+                        d = d + next(it)
+                    if use_y:
+                        d = d + jnp.expand_dims(next(it), 1)
+                    if use_prox or use_dyn:
+                        ai = next(it)
+                    if use_prox:
+                        d = d + cfg.prox_mu * (xi - ai)
+                    if use_dyn:
+                        d = d - next(it) + cfg.feddyn_alpha * (xi - ai)
+                    x_new = xi - lr * d
+                    if partial:
+                        return jnp.where(tu.expand_mask(cmask, x_new) != 0, x_new, xi)
+                    return x_new
+
+                extra = [t for t, used in ((z_t, use_z), (y_t, use_y),
+                                           (anchor_t, use_prox or use_dyn),
+                                           (dyn_t, use_dyn)) if used]
+                x_t = jax.tree.map(upd, x_t, g, *extra)
+                return x_t, step_loss_mean(loss)
+
+            x_t, losses = jax.lax.scan(step, packer.unflatten(x), batches_eh)
+            return packer.flatten(x_t), losses
+
+        local_phase = local_phase_flat if flat else local_phase_tree
 
         def group_round(carry, batches_eh):
             """One group round e: local phase + group aggregation (lines 5-9)."""
@@ -220,7 +331,9 @@ def make_global_round(
                 # Theoretical init (line 3): z_i = -g_i + mean_group g_i,
                 # evaluated with the first local batch xi_{i,0}^{t,0}.
                 b00 = jax.tree.map(lambda b: b[0, 0], batches)
-                _, g0 = _client_grads(loss_fn, x, b00)
+                _, g0 = _client_grads(loss_fn, as_tree(x), b00)
+                if flat:
+                    g0 = packer.flatten(g0)
                 if partial:
                     g0m = tu.tree_broadcast_to_axis(
                         tu.tree_masked_mean(g0, cmask, axis=1), 1, K)
@@ -239,7 +352,9 @@ def make_global_round(
 
             def grad_init_y(y):
                 b00 = jax.tree.map(lambda b: b[0, 0], batches)
-                _, g0 = _client_grads(loss_fn, x, b00)
+                _, g0 = _client_grads(loss_fn, as_tree(x), b00)
+                if flat:
+                    g0 = packer.flatten(g0)
                 if partial:
                     gj = tu.tree_masked_mean(g0, cmask, axis=1)    # [G, ...]
                     gg = tu.tree_masked_mean(gj, gact0, axis=0)    # [...]
@@ -258,9 +373,23 @@ def make_global_round(
         anchor = x  # group-round-start model (FedProx / FedDyn reference)
 
         # --- E group rounds (lines 5-9) ---------------------------------
-        (x, z, y, dyn, _), (losses, drifts) = jax.lax.scan(
-            group_round, (x, z, y, dyn, anchor), batches
-        )
+        if flat:
+            # y, dyn and anchor are constant across the E group rounds:
+            # close over them instead of threading parameter-sized flat
+            # buffers through the scan carry (loop-invariant constants
+            # instead of per-iteration carry traffic).
+            def group_round_flat(carry, batches_eh):
+                xc, zc = carry
+                (xc, zc, _, _, _), out = group_round(
+                    (xc, zc, y, dyn, anchor), batches_eh)
+                return (xc, zc), out
+
+            (x, z), (losses, drifts) = jax.lax.scan(
+                group_round_flat, (x, z), batches)
+        else:
+            (x, z, y, dyn, _), (losses, drifts) = jax.lax.scan(
+                group_round, (x, z, y, dyn, anchor), batches
+            )
 
         # --- Global aggregation (line 10) --------------------------------
         if partial:
@@ -334,5 +463,6 @@ def global_model(state: HFLState) -> PyTree:
     statically known; callers tracking the exact global model under partial
     participation should average active replicas via the round's masks.
     Between full-participation rounds every replica is the global model.
+    Flat states are unpacked back into the model tree.
     """
-    return jax.tree.map(lambda x: x[0, 0], state.params)
+    return as_tree(jax.tree.map(lambda x: x[0, 0], state.params))

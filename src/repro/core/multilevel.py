@@ -26,6 +26,16 @@ means), frozen subtrees keep their params and nus, and nu updates /
 re-initializations fire only where an active leaf exists. Masks are data --
 the nested scans are unchanged, and with full participation the masked
 machinery is compiled out.
+
+Flat state (``multilevel_init(..., use_flat_state=True)``): params and
+every nu level are packed into contiguous ``[*lead, N]`` buffers
+(core/packer.py) and the round adapts at trace time, mirroring the
+two-level engine: the nu-sum is constant across the innermost P_M-step
+block, so it collapses into one precomputed correction tensor, tree views
+are produced once per innermost block (the gradient loop pays no repack
+traffic), and every level's aggregation / nu update / dissemination runs as
+whole-model ops. Parity with the pytree path is covered by
+tests/test_flat_state.py.
 """
 from __future__ import annotations
 
@@ -35,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tree as tu
+from repro.core.packer import FlatBuffers, as_tree, is_flat, make_packer
 from repro.core.participation import sample_axis_mask
 
 PyTree = Any
@@ -47,9 +58,20 @@ class MultiLevelState(NamedTuple):
 
 
 def multilevel_init(
-    params0: PyTree, dims: Sequence[int], rng: jax.Array | None = None
+    params0: PyTree, dims: Sequence[int], rng: jax.Array | None = None,
+    *, use_flat_state: bool = False,
 ) -> MultiLevelState:
     dims = tuple(dims)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    if use_flat_state:
+        packer = make_packer(params0)
+        flat0 = packer.flatten(params0)
+        stacked = FlatBuffers(
+            {k: jnp.broadcast_to(b, dims + b.shape) for k, b in flat0.bufs.items()},
+            packer,
+        )
+        nus = tuple(packer.zeros(dims[: m + 1]) for m in range(len(dims)))
+        return MultiLevelState(params=stacked, nus=nus, rng=rng)
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x, dims + x.shape), params0
     )
@@ -57,7 +79,6 @@ def multilevel_init(
         jax.tree.map(lambda x: jnp.zeros(dims[: m + 1] + x.shape, x.dtype), params0)
         for m in range(len(dims))
     )
-    rng = jax.random.PRNGKey(0) if rng is None else rng
     return MultiLevelState(params=stacked, nus=nus, rng=rng)
 
 
@@ -153,15 +174,57 @@ def make_multilevel_round(
             lmean = jnp.mean(loss)
         return (x, nus, act), lmean
 
+    def _flat_local_phase(x, nus, act, batches_block):
+        """Innermost P_M steps on a flat state: repack at the block boundary.
+
+        The nu-sum is constant across the block, so it is materialized once
+        as a single flat add per level and unpacked alongside the params;
+        the participation gate folds into the fused update expression.
+        """
+        packer = x.packer
+        corr = None
+        for m in range(M):
+            bb = _broadcast_back(nus[m], dims, m + 1)
+            corr = bb if corr is None else tu.tree_add(corr, bb)
+        corr_t = packer.unflatten(corr)
+
+        def step(x_t, batch):
+            loss, g = vg(x_t, batch)
+
+            def upd(xi, gi, ci):
+                x_new = xi - lr * (gi + ci)
+                if partial:
+                    return jnp.where(tu.expand_mask(act, x_new) != 0, x_new, xi)
+                return x_new
+
+            x_t = jax.tree.map(upd, x_t, g, corr_t)
+            if partial:
+                lmean = jnp.sum(jnp.where(act != 0, loss, 0)) / jnp.maximum(
+                    jnp.sum(act), 1.0)
+            else:
+                lmean = jnp.mean(loss)
+            return x_t, lmean
+
+        x_t, losses = jax.lax.scan(step, packer.unflatten(x), batches_block)
+        return packer.flatten(x_t), losses
+
     def make_block(level: int):
         """Block of P_level steps followed by the level-``level`` aggregation."""
         if level == M:
-            inner = local_step
+            def run_inner(carry, batches_block):
+                x, nus, act = carry
+                if is_flat(x):
+                    x, losses = _flat_local_phase(x, nus, act, batches_block)
+                    return (x, nus, act), losses
+                return jax.lax.scan(local_step, carry, batches_block)
         else:
             inner = make_block(level + 1)
 
+            def run_inner(carry, batches_block):
+                return jax.lax.scan(inner, carry, batches_block)
+
         def block(carry, batches_block):
-            carry, losses = jax.lax.scan(inner, carry, batches_block)
+            carry, losses = run_inner(carry, batches_block)
             x, nus, act = carry
             nus = list(nus)
             if partial:
@@ -235,6 +298,6 @@ def make_multilevel_round(
 
 def multilevel_global_model(state: MultiLevelState) -> PyTree:
     # All clients are equal between full-participation rounds; index the
-    # first leaf client.
+    # first leaf client (flat states unpack back into the model tree).
     ndim_lead = len(state.nus)
-    return jax.tree.map(lambda a: a[(0,) * ndim_lead], state.params)
+    return as_tree(jax.tree.map(lambda a: a[(0,) * ndim_lead], state.params))

@@ -86,13 +86,18 @@ def tree_masked_sq_norm(a: PyTree, mask: jax.Array):
 
 
 def tree_broadcast_to_axis(a: PyTree, axis: int, size: int) -> PyTree:
-    """Insert a broadcasted leading axis (dissemination after aggregation)."""
+    """Insert a broadcasted leading axis (dissemination after aggregation).
+
+    Uses ``broadcast_to`` (a view under XLA fusion), not ``tile``: tiling
+    materialized ``size`` parameter-sized copies of the aggregate at every
+    dissemination.
+    """
 
     def _b(x):
         x = jnp.expand_dims(x, axis)
-        reps = [1] * x.ndim
-        reps[axis] = size
-        return jnp.tile(x, reps)
+        shape = list(x.shape)
+        shape[axis] = size
+        return jnp.broadcast_to(x, shape)
 
     return jax.tree.map(_b, a)
 

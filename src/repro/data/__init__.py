@@ -1,4 +1,5 @@
 """repro.data -- synthetic datasets + the paper's Dirichlet partitioner."""
+from repro.data.lm import lm_batches, make_lm_tokens
 from repro.data.partition import partition, partition_stats, sample_round_batches
 from repro.data.synthetic import (
     Dataset,
@@ -7,7 +8,6 @@ from repro.data.synthetic import (
     make_language,
     train_test_split,
 )
-from repro.data.lm import make_lm_tokens, lm_batches
 
 __all__ = [
     "Dataset",

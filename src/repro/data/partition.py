@@ -71,7 +71,8 @@ def partition(
     raise RuntimeError("could not build a partition with enough samples/client")
 
 
-def _label_shift(rng, labels, num_groups, clients_per_group, classes_per_group=3, classes_per_client=2):
+def _label_shift(rng, labels, num_groups, clients_per_group,
+                 classes_per_group=3, classes_per_client=2):
     """App. C label shift: assign 3 of C classes per group, 2 per client."""
     classes = np.unique(labels)
     out = []

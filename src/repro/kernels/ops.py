@@ -22,11 +22,22 @@ def _resolve(mode: str) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def mtgc_update(x, g, z, y, *, lr, mode: str = "auto", **kw):
+def mtgc_update(x, g, z, y, *, lr, g_scale=1.0, mode: str = "auto", **kw):
     m = _resolve(mode)
     if m == "ref":
-        return ref.mtgc_update_ref(x, g, z, y, lr)
-    return mu.mtgc_update(x, g, z, y, lr=lr, interpret=(m == "interpret"), **kw)
+        return ref.mtgc_update_ref(x, g, z, y, lr, g_scale)
+    return mu.mtgc_update(x, g, z, y, lr=lr, g_scale=g_scale,
+                          interpret=(m == "interpret"), **kw)
+
+
+def mtgc_update_flat(x, g, z, y, mask=None, *, lr, g_scale=1.0,
+                     mode: str = "auto", **kw):
+    """Whole-model fused update on the flat [G,K,N] layout (see packer.py)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.mtgc_update_flat_ref(x, g, z, y, mask, lr, g_scale)
+    return mu.mtgc_update_flat(x, g, z, y, mask, lr=lr, g_scale=g_scale,
+                               interpret=(m == "interpret"), **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, mode: str = "auto", **kw):

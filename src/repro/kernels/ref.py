@@ -7,10 +7,25 @@ import jax
 import jax.numpy as jnp
 
 
-def mtgc_update_ref(x, g, z, y, lr):
-    """x <- x - lr * (g + z + y), accumulating the correction sum in f32."""
-    d = g.astype(jnp.float32) + z.astype(jnp.float32) + y.astype(jnp.float32)
+def mtgc_update_ref(x, g, z, y, lr, g_scale=1.0):
+    """x <- x - lr * (g * g_scale + z + y), correction sum in f32."""
+    d = (g.astype(jnp.float32) * g_scale + z.astype(jnp.float32)
+         + y.astype(jnp.float32))
     return (x.astype(jnp.float32) - lr * d).astype(x.dtype)
+
+
+def mtgc_update_flat_ref(x, g, z, y, mask=None, lr=0.1, g_scale=1.0):
+    """Flat-layout oracle: x/g/z [G,K,N], y [G,N], mask [G,K] or None.
+
+    The masked branch keeps frozen replicas' exact bits (``where``, not
+    multiplication), matching the Pallas kernel and ``tree_select``.
+    """
+    d = (g.astype(jnp.float32) * g_scale + z.astype(jnp.float32)
+         + y.astype(jnp.float32)[:, None])
+    x_new = (x.astype(jnp.float32) - lr * d).astype(x.dtype)
+    if mask is None:
+        return x_new
+    return jnp.where(mask[..., None] != 0, x_new, x)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):

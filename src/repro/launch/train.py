@@ -11,7 +11,19 @@ oracle), but with
 * the group-global correction ``y`` kept at [G, ...] (never materialized
   per client: it broadcasts into the update via a unit axis),
 * group aggregation -> all-reduce over ``client`` every H steps; global
-  aggregation -> all-reduce over ``group`` (x ``pod``) every E*H steps.
+  aggregation -> all-reduce over ``group`` (x ``pod``) every E*H steps,
+* optionally (``use_fused_update``) the corrected local step runs through
+  the fused Pallas ``mtgc_update`` kernel -- the microbatch mean ``g/A``,
+  the corrections and the AXPY stream through VMEM in one pass instead of
+  three parameter-sized HBM round-trips,
+* optionally (``sharded_init(..., use_flat_state=True)``) the state lives
+  in contiguous flat buffers (core/packer.py): the round detects the
+  layout at trace time, repacks tree views once per group round for the
+  gradient loop, folds ``z + y`` into one precomputed correction tensor,
+  and runs aggregations / z / y updates as whole-model ops. Combined with
+  ``use_fused_update`` the local step is a single batched Pallas call over
+  the entire flat model. Flat states require params and corrections in one
+  dtype (no ``correction_dtype``).
 
 Under GSPMD this lowers to exactly the paper's two-timescale collective
 schedule; local steps generate zero cross-client traffic.
@@ -31,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tree as tu
+from repro.core.packer import FlatBuffers, is_flat, make_packer
 
 PyTree = Any
 
@@ -48,50 +61,101 @@ class ShardedMetrics(NamedTuple):
     y_norm: jax.Array
 
 
-def sharded_init(params0: PyTree, G: int, K: int) -> ShardedHFLState:
+def sharded_init(params0: PyTree, G: int, K: int,
+                 *, use_flat_state: bool = False,
+                 correction_dtype=None) -> ShardedHFLState:
+    """Stacked per-client state. ``correction_dtype`` stores z/y in a
+    narrower dtype (bf16) -- a beyond-paper memory optimization; the update
+    math still runs in the params' dtype. Incompatible with flat states
+    (one contiguous buffer per dtype requires params and corrections to
+    share it)."""
+    if use_flat_state:
+        assert correction_dtype is None, \
+            "flat state packs params and corrections into one buffer per dtype"
+        packer = make_packer(params0)
+        flat0 = packer.flatten(params0)
+        stacked = FlatBuffers(
+            {k: jnp.broadcast_to(b, (G, K) + b.shape) for k, b in flat0.bufs.items()},
+            packer,
+        )
+        return ShardedHFLState(
+            params=stacked, z=packer.zeros((G, K)), y=packer.zeros((G,))
+        )
     stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0)
-    y0 = jax.tree.map(lambda x: jnp.zeros((G,) + x.shape, x.dtype), params0)
-    return ShardedHFLState(params=stacked, z=tu.tree_zeros_like(stacked), y=y0)
+    cdt = correction_dtype
+    z0 = jax.tree.map(lambda x: jnp.zeros(x.shape, cdt or x.dtype), stacked)
+    y0 = jax.tree.map(lambda x: jnp.zeros((G,) + x.shape, cdt or x.dtype), params0)
+    return ShardedHFLState(params=stacked, z=z0, y=y0)
 
 
 def make_sharded_round(
     loss_fn: Callable[[PyTree, PyTree], jax.Array],
     *, E: int, H: int, lr: float, algorithm: str = "mtgc",
-    correction_dtype=None,
+    use_fused_update: bool = False,
+    fused_mode: str | None = None,
 ) -> Callable[[ShardedHFLState, PyTree], tuple[ShardedHFLState, ShardedMetrics]]:
     """One MTGC global round. batches: leaves [E, H, A, G, K, chunk, ...].
 
     ``algorithm``: "mtgc" | "hfedavg" (corrections off -> the paper's
-    baseline, same schedule).  ``correction_dtype``: optionally store z/y in
-    a narrower dtype (bf16) -- a beyond-paper memory optimization; the
-    update math still runs in the params' dtype.
+    baseline, same schedule).  ``use_fused_update``
+    routes the corrected step (mtgc only) through the fused Pallas kernel;
+    ``fused_mode`` overrides the backend dispatch ("auto" resolves to the
+    compiled kernel on TPU and the jnp oracle elsewhere; "interpret" runs
+    the kernel body op-by-op for CPU validation). The returned function
+    adapts at trace time to flat or pytree states (``sharded_init``'s
+    ``use_flat_state``); narrow corrections (``sharded_init``'s
+    ``correction_dtype``) are cast to f32 inside the update either way.
     """
     use_corr = algorithm == "mtgc"
+    assert not (use_fused_update and not use_corr), \
+        "use_fused_update fuses exactly g/A + z + y: mtgc only"
+    if use_fused_update:
+        from repro.kernels import ops as kops
+    fmode = fused_mode or "auto"
     vg = jax.vmap(jax.vmap(jax.value_and_grad(loss_fn)))  # over [G, K]
 
     def round_fn(state: ShardedHFLState, batches: PyTree):
         x, z, y = state
+        flat = is_flat(x)
+        packer = x.packer if flat else None
         if use_corr:
             # Alg. 1 line 3 (with the experimental zero init of footnote 2):
             # the client-group correction restarts every global round; only
             # y persists across rounds.
             z = tu.tree_zeros_like(z)
 
-        def local_step(carry, batch_h):
-            # batch_h leaves: [A, G, K, chunk, ...]
-            x, z, y = carry
-
+        def accum_grads(x_t, batch_h):
+            """Mean loss + summed grads over the A microbatch chunks."""
             def accum(acc, batch_a):
                 gsum, lsum = acc
-                loss, g = vg(x, batch_a)
+                loss, g = vg(x_t, batch_a)
                 return (tu.tree_add(gsum, g), lsum + jnp.mean(loss)), None
 
             A = jax.tree.leaves(batch_h)[0].shape[0]
             (g, lsum), _ = jax.lax.scan(
-                accum, (tu.tree_zeros_like(x), jnp.zeros((), jnp.float32)), batch_h
+                accum, (tu.tree_zeros_like(x_t), jnp.zeros((), jnp.float32)), batch_h
             )
-            inv_a = 1.0 / A
-            if use_corr:
+            return g, lsum / A, 1.0 / A
+
+        def local_step(carry, batch_h):
+            # batch_h leaves: [A, G, K, chunk, ...]
+            x, z, y = carry
+            g, lmean, inv_a = accum_grads(x, batch_h)
+            if use_corr and use_fused_update:
+                # Fused AXPY through VMEM: g/A + z + y and the update in one
+                # pass (kernels/mtgc_update.py). The [G, K, n]-layout kernel
+                # broadcasts y across clients via its block index map, so y
+                # is never materialized per client even per leaf.
+                def fused_leaf(xi, gi, zi, yi):
+                    Gl, Kl = xi.shape[:2]
+                    out = kops.mtgc_update_flat(
+                        xi.reshape(Gl, Kl, -1), gi.reshape(Gl, Kl, -1),
+                        zi.reshape(Gl, Kl, -1), yi.reshape(Gl, -1),
+                        lr=lr, g_scale=inv_a, mode=fmode)
+                    return out.reshape(xi.shape)
+
+                x = jax.tree.map(fused_leaf, x, g, z, y)
+            elif use_corr:
                 x = jax.tree.map(
                     lambda xi, gi, zi, yi: xi - lr * (
                         gi * inv_a + zi.astype(gi.dtype) + yi[:, None].astype(gi.dtype)
@@ -100,12 +164,56 @@ def make_sharded_round(
                 )
             else:
                 x = jax.tree.map(lambda xi, gi: xi - lr * gi * inv_a, x, g)
-            return (x, z, y), (lsum * inv_a, tu.tree_sq_norm(g) * inv_a * inv_a)
+            return (x, z, y), (lmean, tu.tree_sq_norm(g) * inv_a * inv_a)
+
+        def local_phase_flat(x, z, y, batch_e):
+            """H local steps on a flat state, repacking at the phase edge.
+
+            z/y are constant inside the phase: their sum collapses into one
+            precomputed correction tensor (non-fused) or feeds the single
+            batched Pallas call over the whole flat model (fused).
+            """
+            if use_corr and use_fused_update:
+                def step(xf, batch_h):
+                    g, lmean, inv_a = accum_grads(packer.unflatten(xf), batch_h)
+                    gf = packer.flatten(g)
+                    xf = FlatBuffers(
+                        {k: kops.mtgc_update_flat(
+                            xf.bufs[k], gf.bufs[k], z.bufs[k], y.bufs[k],
+                            lr=lr, g_scale=inv_a, mode=fmode)
+                         for k in xf.bufs},
+                        packer,
+                    )
+                    return xf, (lmean, tu.tree_sq_norm(gf) * inv_a * inv_a)
+
+                return jax.lax.scan(step, x, batch_e)
+
+            corr_t = (packer.unflatten(
+                jax.tree.map(lambda zb, yb: zb + yb[:, None], z, y))
+                if use_corr else None)
+
+            def step(x_t, batch_h):
+                g, lmean, inv_a = accum_grads(x_t, batch_h)
+                if use_corr:
+                    x_t = jax.tree.map(
+                        lambda xi, gi, ci: xi - lr * (gi * inv_a + ci),
+                        x_t, g, corr_t)
+                else:
+                    x_t = jax.tree.map(
+                        lambda xi, gi: xi - lr * gi * inv_a, x_t, g)
+                return x_t, (lmean, tu.tree_sq_norm(g) * inv_a * inv_a)
+
+            x_t, out = jax.lax.scan(step, packer.unflatten(x), batch_e)
+            return packer.flatten(x_t), out
 
         def group_round(carry, batch_e):
             # batch_e leaves: [H, A, G, K, chunk, ...]
             x, z, y = carry
-            (x, z, y), (losses, gnorm) = jax.lax.scan(local_step, (x, z, y), batch_e)
+            if flat:
+                x, (losses, gnorm) = local_phase_flat(x, z, y, batch_e)
+            else:
+                (x, z, y), (losses, gnorm) = jax.lax.scan(
+                    local_step, (x, z, y), batch_e)
             with jax.named_scope("group_agg"):
                 xbar = tu.tree_mean(x, axis=1)                   # [G, ...]
             if use_corr:
@@ -170,6 +278,10 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--flat", action="store_true",
+                    help="flat-buffer state (core/packer.py)")
+    ap.add_argument("--fused", action="store_true",
+                    help="fused Pallas mtgc_update local step")
     args = ap.parse_args()
 
     import numpy as np
@@ -189,9 +301,10 @@ def main() -> None:
     print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M algo={args.algorithm}")
 
     G, K, E, H = args.groups, args.clients, args.E, args.H
-    state = sharded_init(params, G, K)
+    state = sharded_init(params, G, K, use_flat_state=args.flat)
     round_fn = jax.jit(make_sharded_round(
-        bundle.loss, E=E, H=H, lr=args.lr, algorithm=args.algorithm))
+        bundle.loss, E=E, H=H, lr=args.lr, algorithm=args.algorithm,
+        use_fused_update=args.fused))
     for t in range(args.rounds):
         batch = lm_batches(toks, rng, (E, H, 1, G, K, args.batch), args.seq)
         state, m = round_fn(state, batch)

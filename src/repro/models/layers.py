@@ -14,7 +14,6 @@ shape-polymorphic. Conventions:
 """
 from __future__ import annotations
 
-
 import jax
 import jax.numpy as jnp
 

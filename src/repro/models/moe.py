@@ -18,7 +18,8 @@ def init_moe(rng, d_model, d_ff, num_experts, dtype):
     ks = jax.random.split(rng, 4)
 
     def ew(key, n_in, n_out):
-        return ((1.0 / n_in) ** 0.5 * jax.random.normal(key, (num_experts, n_in, n_out))).astype(dtype)
+        w = (1.0 / n_in) ** 0.5 * jax.random.normal(key, (num_experts, n_in, n_out))
+        return w.astype(dtype)
 
     return {
         "router": init_linear(ks[0], d_model, num_experts, dtype),

@@ -45,6 +45,34 @@ def mlp(num_classes: int, input_dim: int, hidden: int = 200) -> Tuple[Init, Appl
     return init, apply
 
 
+def deep_mlp(num_classes: int, input_dim: int, hidden: int = 32,
+             depth: int = 48) -> Tuple[Init, Apply]:
+    """Deep, narrow MLP: ``depth`` hidden layers of ``hidden`` units.
+
+    The leaf-rich stress model for the round engines: per-parameter work is
+    tiny while the leaf count is ~``2 * depth``, so per-leaf dispatch and
+    trace cost dominate -- exactly the regime the flat-state hot path
+    (core/packer.py) collapses. Used by benchmarks/bench_round.py.
+    """
+
+    def init(rng):
+        ks = jax.random.split(rng, depth + 2)
+        p = {"in": _dense(ks[0], input_dim, hidden)}
+        for i in range(depth):
+            p[f"h{i:03d}"] = _dense(ks[i + 1], hidden, hidden)
+        p["out"] = _dense(ks[-1], hidden, num_classes)
+        return p
+
+    def apply(p, x):
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ p["in"]["w"] + p["in"]["b"])
+        for i in range(depth):
+            x = jax.nn.relu(x @ p[f"h{i:03d}"]["w"] + p[f"h{i:03d}"]["b"])
+        return x @ p["out"]["w"] + p["out"]["b"]
+
+    return init, apply
+
+
 def _conv(rng, kh, kw, cin, cout):
     scale = (2.0 / (kh * kw * cin)) ** 0.5
     return {
@@ -140,7 +168,8 @@ def resnet_gn(
             for b in range(blocks_per_stage):
                 blk = p[f"s{s}b{b}"]
                 stride = 2 if (b == 0 and s > 0) else 1
-                y = jax.nn.relu(_groupnorm(blk["gn1"], _apply_conv(blk["c1"], x, stride), gn_groups))
+                y = jax.nn.relu(
+                    _groupnorm(blk["gn1"], _apply_conv(blk["c1"], x, stride), gn_groups))
                 y = _groupnorm(blk["gn2"], _apply_conv(blk["c2"], y), gn_groups)
                 sc = x if "proj" not in blk else _apply_conv(blk["proj"], x, stride)
                 if stride != 1 and "proj" not in blk:

@@ -9,8 +9,8 @@ of being skipped wholesale.
 
 Only the surface this suite uses is implemented: ``@given`` with keyword
 strategies, ``@settings(max_examples=..., deadline=..., derandomize=...)``,
-and the ``integers`` / ``floats`` / ``booleans`` / ``sampled_from``
-strategies. No shrinking, no database -- failures report the drawn example
+and the ``integers`` / ``floats`` / ``booleans`` / ``sampled_from`` /
+``tuples`` strategies. No shrinking, no database -- failures report the drawn example
 in the assertion context instead.
 """
 from __future__ import annotations
@@ -60,6 +60,11 @@ def sampled_from(elements) -> _Strategy:
                      f"sampled_from({elements!r})")
 
 
+def tuples(*strategies) -> _Strategy:
+    return _Strategy(lambda r: tuple(s.draw(r) for s in strategies),
+                     f"tuples({', '.join(s.desc for s in strategies)})")
+
+
 def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None,
              derandomize: bool = False, **_ignored):
     def deco(fn):
@@ -104,7 +109,7 @@ def install() -> None:
     """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
     mod = types.ModuleType("hypothesis")
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "booleans", "sampled_from"):
+    for name in ("integers", "floats", "booleans", "sampled_from", "tuples"):
         setattr(st, name, globals()[name])
     mod.given = given
     mod.settings = settings

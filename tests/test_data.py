@@ -3,10 +3,9 @@ synthetic dataset learnability, LM batching."""
 import numpy as np
 import pytest
 
-from repro.data.partition import partition, sample_round_batches
-from repro.data.synthetic import (make_classification, make_language,
-                                  train_test_split)
 from repro.data.lm import lm_batches, make_lm_tokens
+from repro.data.partition import partition, sample_round_batches
+from repro.data.synthetic import make_classification, make_language, train_test_split
 
 
 @pytest.mark.parametrize("mode", ["group_iid", "client_iid", "both_noniid",

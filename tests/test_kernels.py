@@ -2,11 +2,12 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.mtgc_update import mtgc_update
+from repro.kernels.mtgc_update import mtgc_update, mtgc_update_flat
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
 RNG = np.random.default_rng(0)
@@ -35,6 +36,46 @@ def test_mtgc_update_property(n, lr, blk):
     xs = [jnp.asarray(rng.normal(size=(n,)), jnp.float32) for _ in range(4)]
     got = mtgc_update(*xs, lr=lr, interpret=True, block_rows=blk)
     want = ref.mtgc_update_ref(*xs, lr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("G,K,N", [(2, 2, 300), (3, 1, 1), (1, 4, 128 * 9 + 5),
+                                   (2, 3, 4096)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_mtgc_update_flat_sweep(G, K, N, masked):
+    """Whole-model batched kernel: y broadcast by the index map, optional
+    participation mask folded in, g_scale folding the microbatch mean."""
+    rng = np.random.default_rng(G * 100 + K * 10 + N + masked)
+    x, g, z = (jnp.asarray(rng.normal(size=(G, K, N)), jnp.float32)
+               for _ in range(3))
+    y = jnp.asarray(rng.normal(size=(G, N)), jnp.float32)
+    mask = (jnp.asarray(rng.integers(0, 2, size=(G, K)), jnp.float32)
+            if masked else None)
+    got = mtgc_update_flat(x, g, z, y, mask, lr=0.07, g_scale=0.5,
+                           interpret=True, block_rows=16)
+    want = ref.mtgc_update_flat_ref(x, g, z, y, mask, 0.07, 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    if masked:
+        # frozen replicas keep their exact bits
+        np.testing.assert_array_equal(np.asarray(got)[np.asarray(mask) == 0],
+                                      np.asarray(x)[np.asarray(mask) == 0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 3000), k=st.integers(1, 4),
+       lr=st.floats(1e-4, 1.0), blk=st.sampled_from([8, 64, 1024]))
+def test_mtgc_update_flat_property(n, k, lr, blk):
+    rng = np.random.default_rng(n * 7 + k)
+    G = 2
+    x, g, z = (jnp.asarray(rng.normal(size=(G, k, n)), jnp.float32)
+               for _ in range(3))
+    y = jnp.asarray(rng.normal(size=(G, n)), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(G, k)), jnp.float32)
+    got = mtgc_update_flat(x, g, z, y, mask, lr=lr, interpret=True,
+                           block_rows=blk)
+    want = ref.mtgc_update_flat_ref(x, g, z, y, mask, lr)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-6)
 

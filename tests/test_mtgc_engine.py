@@ -1,10 +1,15 @@
-"""Core MTGC engine vs the pure-python oracle + the paper's invariants."""
+"""Core MTGC engine vs the pure-python oracle + the paper's invariants.
+
+These run on the default (flat-state) engine path; state internals are
+read through ``as_tree``, which is the identity for pytree states. The
+flat/tree equivalence itself is covered by tests/test_flat_state.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import HFLConfig, hfl_init, make_global_round, global_model
+from repro.core import HFLConfig, as_tree, global_model, hfl_init, make_global_round
 
 from oracle import mtgc_round
 
@@ -65,9 +70,9 @@ def test_correction_invariants():
     for _ in range(3):
         state, _ = round_fn(state, jax.tree.map(jnp.asarray, batches))
         # paper Sec. 3.2: sum_i z_i = 0 per group, sum_j y_j = 0
-        zsum = np.asarray(state.z["w"]).sum(axis=1)
+        zsum = np.asarray(as_tree(state.z)["w"]).sum(axis=1)
         np.testing.assert_allclose(zsum, 0.0, atol=1e-4)
-        ysum = np.asarray(state.y["w"]).sum(axis=0)
+        ysum = np.asarray(as_tree(state.y)["w"]).sum(axis=0)
         np.testing.assert_allclose(ysum, 0.0, atol=1e-5)
 
 
@@ -142,5 +147,5 @@ def test_gradient_init_matches_theory_lines():
     state2, _ = rf(state, jax.tree.map(jnp.asarray, batches))
     # after one (E=H=1) round with gradient init, all clients took the SAME
     # corrected step (gradient of the group mean) -> zero client drift
-    x = np.asarray(state2.params["w"])
+    x = np.asarray(as_tree(state2.params)["w"])
     np.testing.assert_allclose(x, np.broadcast_to(x[0, 0], x.shape), rtol=1e-6)

@@ -8,9 +8,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (HFLConfig, global_model, hfl_init, make_global_round,
-                        make_multilevel_round, multilevel_global_model,
-                        multilevel_init)
+from repro.core import (
+    HFLConfig,
+    global_model,
+    hfl_init,
+    make_global_round,
+    make_multilevel_round,
+    multilevel_global_model,
+    multilevel_init,
+)
 
 from test_mtgc_engine import D, make_batches, quad_loss
 

@@ -4,10 +4,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
-from repro.core import (HFLConfig, hfl_init, make_global_round, round_masks,
-                        sample_hfl_masks)
+from repro.core import (
+    HFLConfig,
+    as_tree,
+    hfl_init,
+    make_global_round,
+    round_masks,
+    sample_hfl_masks,
+)
 from repro.core import multilevel as ml
 from repro.core import participation as pp
 from repro.core import tree as tu
@@ -101,9 +108,9 @@ def test_host_and_engine_masks_agree():
     for _ in range(3):
         masks, _ = round_masks(state.rng, cfg)
         cm = np.asarray(masks.client)
-        prev = np.asarray(state.params["w"])
+        prev = np.asarray(as_tree(state.params)["w"])
         state, m = rf(state, jax.tree.map(jnp.asarray, batches))
-        cur = np.asarray(state.params["w"])
+        cur = np.asarray(as_tree(state.params)["w"])
         np.testing.assert_array_equal(cur[cm == 0], prev[cm == 0])
         assert not np.allclose(cur[cm == 1], prev[cm == 1])
         np.testing.assert_allclose(float(m.participation), cm.mean(), rtol=1e-6)
@@ -126,13 +133,13 @@ def test_zero_participation_group_freezes_y_and_params():
         gm = np.asarray(masks.group)
         assert gm.sum() == 1  # fixed mode: exactly one of two groups
         off = int(np.argmin(gm))
-        y0 = np.asarray(state.y["w"])
-        z0 = np.asarray(state.z["w"])
-        p0 = np.asarray(state.params["w"])
+        y0 = np.asarray(as_tree(state.y)["w"])
+        z0 = np.asarray(as_tree(state.z)["w"])
+        p0 = np.asarray(as_tree(state.params)["w"])
         state, _ = rf(state, jax.tree.map(jnp.asarray, batches))
-        np.testing.assert_array_equal(np.asarray(state.y["w"])[off], y0[off])
-        np.testing.assert_array_equal(np.asarray(state.z["w"])[off], z0[off])
-        np.testing.assert_array_equal(np.asarray(state.params["w"])[off], p0[off])
+        np.testing.assert_array_equal(np.asarray(as_tree(state.y)["w"])[off], y0[off])
+        np.testing.assert_array_equal(np.asarray(as_tree(state.z)["w"])[off], z0[off])
+        np.testing.assert_array_equal(np.asarray(as_tree(state.params)["w"])[off], p0[off])
 
 
 def test_gradient_init_keeps_empty_group_y_frozen():
@@ -155,10 +162,10 @@ def test_gradient_init_keeps_empty_group_y_frozen():
         rf = jax.jit(make_global_round(quad_loss, cfg))
         state = hfl_init({"w": jnp.zeros(D)}, cfg)
         state2, _ = rf(state, jax.tree.map(jnp.asarray, batches))
-    np.testing.assert_array_equal(np.asarray(state2.y["w"])[0],
-                                  np.asarray(state.y["w"])[0])
-    assert not np.allclose(np.asarray(state2.params["w"])[1, :2],
-                           np.asarray(state.params["w"])[1, :2])
+    np.testing.assert_array_equal(np.asarray(as_tree(state2.y)["w"])[0],
+                                  np.asarray(as_tree(state.y)["w"])[0])
+    assert not np.allclose(np.asarray(as_tree(state2.params)["w"])[1, :2],
+                           np.asarray(as_tree(state.params)["w"])[1, :2])
 
 
 def test_partial_invariants_over_participants():
@@ -176,14 +183,14 @@ def test_partial_invariants_over_participants():
     for _ in range(3):
         masks, _ = round_masks(state.rng, cfg)
         cm = np.asarray(masks.client)[..., None]
-        y_prev = np.asarray(state.y["w"])
+        y_prev = np.asarray(as_tree(state.y)["w"])
         state, m = rf(state, jax.tree.map(jnp.asarray, batches))
         # z was re-zeroed for participants, then summed increments cancel
-        zsum = (np.asarray(state.z["w"]) * cm).sum(axis=1)
+        zsum = (np.asarray(as_tree(state.z)["w"]) * cm).sum(axis=1)
         np.testing.assert_allclose(zsum, 0.0, atol=1e-4)
         # y increments cancel over the groups active this round
         gact = (cm.sum(1) > 0).astype(np.float32)
-        dy = (np.asarray(state.y["w"]) - y_prev) * gact
+        dy = (np.asarray(as_tree(state.y)["w"]) - y_prev) * gact
         np.testing.assert_allclose(dy.sum(axis=0), 0.0, atol=1e-4)
         assert np.isfinite(np.asarray(m.loss)).all()
 
@@ -213,8 +220,8 @@ def test_full_participation_config_matches_masked_all_ones():
             s_ones, _ = rf_ones(st0, jb)
         for name in ("params", "z", "y", "dyn"):
             np.testing.assert_allclose(
-                np.asarray(getattr(s_full, name)["w"]),
-                np.asarray(getattr(s_ones, name)["w"]),
+                np.asarray(as_tree(getattr(s_full, name))["w"]),
+                np.asarray(as_tree(getattr(s_ones, name))["w"]),
                 rtol=1e-6, atol=1e-6, err_msg=f"{algo}.{name}")
 
 
@@ -303,8 +310,8 @@ def test_fused_update_matches_tree_map_path(partial_c):
         outs[fused] = state
     for name in ("params", "z", "y"):
         np.testing.assert_allclose(
-            np.asarray(getattr(outs[False], name)["w"]),
-            np.asarray(getattr(outs[True], name)["w"]),
+            np.asarray(as_tree(getattr(outs[False], name))["w"]),
+            np.asarray(as_tree(getattr(outs[True], name))["w"]),
             rtol=1e-5, atol=1e-6, err_msg=name)
 
 

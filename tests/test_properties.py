@@ -2,9 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
-from repro.core import HFLConfig, global_model, hfl_init, make_global_round
+from repro.core import HFLConfig, as_tree, global_model, hfl_init, make_global_round
 from repro.core import tree as tu
 
 from test_mtgc_engine import D, make_batches, quad_loss
@@ -54,10 +55,10 @@ def test_invariants_hold_for_random_topologies(G, K, E, H):
     state = hfl_init({"w": jnp.zeros(D)}, cfg)
     state, m = jax.jit(make_global_round(quad_loss, cfg))(
         state, jax.tree.map(jnp.asarray, batches))
-    np.testing.assert_allclose(np.asarray(state.z["w"]).sum(1), 0, atol=1e-4)
-    np.testing.assert_allclose(np.asarray(state.y["w"]).sum(0), 0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(as_tree(state.z)["w"]).sum(1), 0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(as_tree(state.y)["w"]).sum(0), 0, atol=1e-5)
     # all clients equal after dissemination
-    x = np.asarray(state.params["w"])
+    x = np.asarray(as_tree(state.params)["w"])
     np.testing.assert_allclose(x, np.broadcast_to(x[:1, :1], x.shape),
                                atol=1e-6)
     assert np.isfinite(np.asarray(m.loss)).all()
@@ -86,5 +87,5 @@ def test_client_permutation_equivariance(seed):
     np.testing.assert_allclose(np.asarray(global_model(st1)["w"]),
                                np.asarray(global_model(st2)["w"]),
                                rtol=1e-4, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(st1.z["w"])[:, perm],
-                               np.asarray(st2.z["w"]), rtol=1e-3, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(as_tree(st1.z)["w"])[:, perm],
+                               np.asarray(as_tree(st2.z)["w"]), rtol=1e-3, atol=5e-4)

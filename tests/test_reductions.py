@@ -4,8 +4,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (HFLConfig, global_model, hfl_init, make_global_round,
-                        make_scaffold_round, scaffold_init)
+from repro.core import (
+    HFLConfig,
+    as_tree,
+    global_model,
+    hfl_init,
+    make_global_round,
+    make_scaffold_round,
+    scaffold_init,
+)
 
 from test_mtgc_engine import D, make_batches, quad_loss
 
@@ -43,4 +50,4 @@ def test_y_is_zero_for_single_group():
     rf = jax.jit(make_global_round(quad_loss, cfg))
     for _ in range(3):
         state, _ = rf(state, jax.tree.map(jnp.asarray, batches))
-        np.testing.assert_allclose(np.asarray(state.y["w"]), 0.0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(as_tree(state.y)["w"]), 0.0, atol=1e-6)

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import HFLConfig, global_model, hfl_init, make_global_round
+from repro.core import HFLConfig, as_tree, global_model, hfl_init, make_global_round
 from repro.launch.train import make_sharded_round, sharded_init
 
 from test_mtgc_engine import D, make_batches, quad_loss
@@ -69,6 +69,79 @@ def test_grad_accumulation_is_exact():
     st2, _ = rf(st, {"a": jnp.asarray(regroup(a)), "b": jnp.asarray(regroup(b))})
     np.testing.assert_allclose(np.asarray(st1.params["w"]),
                                np.asarray(st2.params["w"]), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("use_flat", [False, True])
+def test_fused_sharded_round_matches_unfused(use_flat):
+    """The fused Pallas kernel (interpret mode off-TPU) behind
+    ``use_fused_update`` computes exactly the unfused sharded round --
+    including the folded microbatch mean g/A -- on both state layouts."""
+    G, K, E, H, lr, A = 2, 2, 2, 3, 0.05, 2
+    rng = np.random.default_rng(24)
+    a = rng.normal(size=(E, H, A, G, K, D)).astype(np.float32) + 2.0
+    b = rng.normal(size=(E, H, A, G, K, D)).astype(np.float32)
+    batches = {"a": jnp.asarray(a), "b": jnp.asarray(b)}
+
+    rf_ref = jax.jit(make_sharded_round(quad_loss, E=E, H=H, lr=lr))
+    rf_fused = jax.jit(make_sharded_round(
+        quad_loss, E=E, H=H, lr=lr, use_fused_update=True,
+        fused_mode="interpret"))
+    st_ref = sharded_init({"w": jnp.zeros(D)}, G, K)
+    st_fused = sharded_init({"w": jnp.zeros(D)}, G, K, use_flat_state=use_flat)
+    for _ in range(3):
+        st_ref, m_ref = rf_ref(st_ref, batches)
+        st_fused, m_fused = rf_fused(st_fused, batches)
+    for name in ("params", "z", "y"):
+        np.testing.assert_allclose(
+            np.asarray(as_tree(getattr(st_fused, name))["w"]),
+            np.asarray(getattr(st_ref, name)["w"]),
+            rtol=1e-5, atol=1e-6, err_msg=name)
+    np.testing.assert_allclose(np.asarray(m_fused.loss),
+                               np.asarray(m_ref.loss), rtol=1e-5)
+
+
+@pytest.mark.parametrize("algorithm", ["mtgc", "hfedavg"])
+def test_flat_sharded_round_matches_tree(algorithm):
+    G, K, E, H, lr = 2, 3, 2, 2, 0.05
+    a, b, batches = make_batches(G, K, E, H, seed=25)
+    pb = {k: jnp.asarray(v[:, :, None]) for k, v in batches.items()}
+    rf = jax.jit(make_sharded_round(quad_loss, E=E, H=H, lr=lr,
+                                    algorithm=algorithm))
+    st_t = sharded_init({"w": jnp.zeros(D)}, G, K)
+    st_f = sharded_init({"w": jnp.zeros(D)}, G, K, use_flat_state=True)
+    for _ in range(3):
+        st_t, m_t = rf(st_t, pb)
+        st_f, m_f = rf(st_f, pb)
+    for name in ("params", "z", "y"):
+        np.testing.assert_allclose(
+            np.asarray(as_tree(getattr(st_f, name))["w"]),
+            np.asarray(getattr(st_t, name)["w"]),
+            rtol=1e-5, atol=1e-6, err_msg=name)
+    np.testing.assert_allclose(np.asarray(m_f.loss), np.asarray(m_t.loss),
+                               rtol=1e-5)
+
+
+def test_correction_dtype_is_stored_narrow_and_rejected_for_flat():
+    """bf16 z/y storage survives the round (update math in f32) and is
+    incompatible with the flat layout (one buffer per dtype)."""
+    G, K, E, H = 2, 2, 1, 2
+    a, b, batches = make_batches(G, K, E, H, seed=26)
+    pb = {k: jnp.asarray(v[:, :, None]) for k, v in batches.items()}
+    st = sharded_init({"w": jnp.zeros(D)}, G, K, correction_dtype=jnp.bfloat16)
+    assert st.z["w"].dtype == jnp.bfloat16 and st.y["w"].dtype == jnp.bfloat16
+    rf = jax.jit(make_sharded_round(quad_loss, E=E, H=H, lr=0.05))
+    st, m = rf(st, pb)
+    assert st.z["w"].dtype == jnp.bfloat16 and st.y["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(m.loss)).all()
+    with pytest.raises(AssertionError):
+        sharded_init({"w": jnp.zeros(D)}, G, K, use_flat_state=True,
+                     correction_dtype=jnp.bfloat16)
+
+
+def test_fused_sharded_rejected_for_hfedavg():
+    with pytest.raises(AssertionError):
+        make_sharded_round(quad_loss, E=1, H=1, lr=0.1, algorithm="hfedavg",
+                           use_fused_update=True)
 
 
 def test_hfedavg_mode_drops_corrections():
