@@ -27,14 +27,28 @@ Workloads:
   where the sequential grad chain (identical in both paths) dominates;
   expect the flat win to show up mostly in trace+compile time here.
 
+The second perf-trajectory point rides along as the **horizon section**
+(``benchmarks/results/BENCH_horizon.json``): whole-horizon compiled
+training (``core/driver.py`` -- scan over T rounds in one donated jit with
+on-device batch packing) against the per-round host loop it replaces, on
+the quick CPU config of the fig/table benchmarks (``benchmarks/common``)
+at T=30, min-of-reps post-compile, with driver/loop parity (rtol 1e-5)
+asserted before timing and peak-memory numbers (device ``memory_stats()``
+or host peak RSS) for the donated vs un-donated driver.
+
     PYTHONPATH=src python -m benchmarks.bench_round --quick
     PYTHONPATH=src python -m benchmarks.bench_round --full --model mlp
+    PYTHONPATH=src python -m benchmarks.bench_round --quick --horizon-only
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
+import resource
+import sys
+import threading
 import time
 from pathlib import Path
 
@@ -42,11 +56,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HFLConfig, as_tree, hfl_init, make_global_round
+from repro.core import (
+    HFLConfig,
+    as_tree,
+    hfl_init,
+    make_global_round,
+    make_round_step,
+    pack_client_shards,
+    run_rounds,
+)
 from repro.models.small import deep_mlp, make_loss
 
 RESULTS = Path(__file__).parent / "results"
 PARITY_ROUNDS = 3
+HORIZON_TARGET_SPEEDUP = 1.5
+
+
+def _host_peak_rss_bytes() -> int:
+    """Peak RSS: VmHWM where available (resettable via ``_reset_peak_rss``),
+    getrusage as the portable fallback."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    # ru_maxrss is kilobytes on Linux but bytes on macOS.
+    scale = 1 if sys.platform == "darwin" else 1024
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * scale
+
+
+def peak_memory() -> dict:
+    """Peak device memory via ``memory_stats()``, host peak RSS as the
+    CPU-safe fallback (the CPU backend reports no device stats)."""
+    out = {"host_peak_rss_bytes": _host_peak_rss_bytes()}
+    stats = jax.local_devices()[0].memory_stats()
+    if stats:
+        out["device"] = {k: int(v) for k, v in stats.items()
+                         if isinstance(v, (int, np.integer))}
+    return out
 
 
 @dataclasses.dataclass
@@ -130,7 +179,9 @@ def _run_combo(params0, loss_fn, batches, cfg_tree, cfg_flat, reps: int):
     for cfg in (cfg_tree, cfg_flat):
         flat = cfg.use_flat_state
         state = hfl_init(params0, cfg)
-        rfs[flat] = jax.jit(make_global_round(loss_fn, cfg))
+        # State donated: the loop never holds two copies of the replicas.
+        rfs[flat] = jax.jit(make_global_round(loss_fn, cfg),
+                            donate_argnums=0)
         t0 = time.perf_counter()
         state, m = rfs[flat](state, batches)
         jax.block_until_ready(m.loss)
@@ -162,6 +213,277 @@ def _run_combo(params0, loss_fn, batches, cfg_tree, cfg_flat, reps: int):
             "steps_per_s": steps / round_s,
         }
     return timed, max(errs), all(oks)
+
+
+# ------------------------------------------------------- horizon section
+
+
+def _sampled_peak_rss(fn, interval: float = 0.001):
+    """Run ``fn()`` while a daemon thread samples *current* RSS; returns
+    (fn's result, peak sampled bytes).
+
+    Lifetime watermarks (ru_maxrss / VmHWM) are monotone, so after the
+    timed benchmark phases any earlier, higher peak would mask a
+    measurement and read ~0; resetting them (Linux ``clear_refs``) needs
+    privileges, and a fresh subprocess inherits the parent's resident
+    pages across fork, so its watermark is poisoned too. Sampling current
+    RSS is unprivileged and immune to history; the quantities measured
+    here (parameter-sized buffer copies) stay live for whole rounds, far
+    longer than the sampling interval.
+    """
+    stop = threading.Event()
+    peak = [0]
+    page = os.sysconf("SC_PAGESIZE")
+
+    def read_rss() -> int:
+        try:
+            with open("/proc/self/statm") as f:
+                return int(f.read().split()[1]) * page
+        except OSError:       # non-Linux: lifetime watermark fallback
+            return _host_peak_rss_bytes()
+
+    def loop():
+        while not stop.is_set():
+            peak[0] = max(peak[0], read_rss())
+            stop.wait(interval)
+
+    t = threading.Thread(target=loop, daemon=True)
+    t.start()
+    try:
+        result = fn()
+    finally:
+        stop.set()
+        t.join()
+    peak[0] = max(peak[0], read_rss())
+    return result, peak[0]
+
+
+def _donation_memory(T: int = 4, n: int = 3_000_000) -> dict:
+    """Peak-memory cost of the driver with and without buffer donation.
+
+    A deliberately state-heavy workload (single [G, K, n] flat leaf,
+    E=H=1 scalar-batch quadratic) so the round-to-round state hand-off
+    dominates: without donation every chunk dispatch holds input and output
+    copies of the [G, K, n] buffers, with donation the outputs reuse the
+    inputs. Each variant's peak is sampled live (``_sampled_peak_rss``),
+    so the comparison is valid no matter what ran earlier in the process.
+    """
+    from repro.core import PackedBatches
+
+    cfg = HFLConfig(num_groups=2, clients_per_group=2, local_steps=1,
+                    group_rounds=1, lr=0.1, algorithm="mtgc",
+                    use_flat_state=True)
+
+    def loss_fn(p, b):
+        return 0.5 * jnp.sum((b["a"] * p["w"] - b["b"]) ** 2)
+
+    round_fn = make_global_round(loss_fn, cfg)
+    rng = np.random.default_rng(0)
+    arrays = {
+        "a": jnp.asarray(rng.normal(size=(2, 2, 2, 1)).astype(np.float32) + 1.0),
+        "b": jnp.asarray(rng.normal(size=(2, 2, 2, 1)).astype(np.float32)),
+    }
+    data = PackedBatches(arrays, jax.random.PRNGKey(0), 1, 1, None)
+
+    out = {"rounds": T, "state_mb": 2 * 2 * n * 4 * 3 / 1e6}  # params+z+dyn
+    for donate in (True, False):
+        state = hfl_init({"w": jnp.zeros(n, jnp.float32)}, cfg)
+        jax.block_until_ready(state)
+
+        def run(state=state, donate=donate):
+            out_state, _, _ = run_rounds(round_fn, state, data, T,
+                                         donate=donate)
+            jax.block_until_ready(out_state)
+            return out_state
+
+        _, peak = _sampled_peak_rss(run)
+        mem = peak_memory()
+        mem["sampled_peak_rss_bytes"] = int(peak)
+        out["donate" if donate else "no_donate"] = mem
+    saved = (out["no_donate"]["sampled_peak_rss_bytes"]
+             - out["donate"]["sampled_peak_rss_bytes"])
+    if "device" in out["no_donate"]:
+        saved = max(saved, out["no_donate"]["device"].get("peak_bytes_in_use", 0)
+                    - out["donate"]["device"].get("peak_bytes_in_use", 0))
+    out["peak_bytes_saved_by_donation"] = int(saved)
+    return out
+
+
+def bench_horizon(T: int = 30, reps: int = 3) -> dict:
+    """Whole-horizon compiled driver vs the per-round host loop it replaces.
+
+    The workload is the fig/table benchmark path (``benchmarks/common``:
+    MLP on the synthetic non-i.i.d. partition, G4 K5, T=30, accuracy
+    evaluated every round as ``run_algorithm`` defaults to) on its
+    fast-timescale quick CPU schedule -- E=2, H=2, batch 8, hidden 32 --
+    the regime where the per-round loop's fixed costs (host batch packing,
+    host->device transfer, dispatch, host-side eval sync) are comparable to
+    the round's compute and the compiled horizon pays off. Compute-heavy
+    schedules (E4 H5, batch 32) run the identical driver and simply see a
+    smaller, compute-bound win. Three drivers of the same round function:
+
+    * ``host_loop``   -- the pre-driver ``run_algorithm`` loop: numpy
+      ``sample_round_batches`` + one (un-donated) jitted dispatch + host
+      streaming-accuracy eval, per round.
+    * ``device_loop`` -- per-round dispatch, but batches gathered on device
+      from the packed dataset, the state donated (core.make_round_step),
+      and eval as a second jitted dispatch.
+    * ``driver`` / ``driver_chunked`` -- ``core.run_rounds``: scan over all
+      T rounds (or chunks of 10) inside one donated jit, eval compiled in.
+
+    device_loop and driver consume identical packed data + rng streams, so
+    their parity (states, stacked metrics and eval accuracies, rtol 1e-5)
+    is asserted before anything is timed; host_loop samples on the host so
+    it is timed, not parity-gated. Timings are min-of-reps, interleaved,
+    post-compile.
+    """
+    from benchmarks.common import BenchSetup
+    from repro.data.partition import partition, sample_round_batches
+    from repro.data.synthetic import make_classification, train_test_split
+    from repro.models.small import accuracy, jit_accuracy, mlp
+
+    setup = BenchSetup(group_rounds=2, local_steps=2, batch=8, hidden=32)
+    G, K = setup.num_groups, setup.clients_per_group
+    E, H = setup.group_rounds, setup.local_steps
+    rng = np.random.default_rng(setup.seed)
+    ds = make_classification(rng, num_samples=setup.samples,
+                             num_classes=setup.num_classes, dim=setup.dim,
+                             noise=1.0)
+    train, test = train_test_split(ds, rng)
+    idx = partition(train.y, G, K, mode=setup.mode, alpha=setup.alpha,
+                    seed=setup.seed)
+    init, apply = mlp(setup.num_classes, setup.dim, hidden=setup.hidden)
+    loss_fn = make_loss(apply)
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=setup.lr, algorithm="mtgc")
+    round_fn = make_global_round(loss_fn, cfg)
+    params0 = init(jax.random.PRNGKey(setup.seed))
+    data0 = pack_client_shards({"x": train.x, "y": train.y}, idx,
+                               group_rounds=E, local_steps=H,
+                               batch_size=setup.batch, shards=setup.shards,
+                               rng=np.random.default_rng(setup.seed + 1),
+                               key=jax.random.PRNGKey(setup.seed + 1))
+    test_x = jnp.asarray(test.x)
+    acc_of = jit_accuracy(apply, test_x, jnp.asarray(test.y))
+    print(f"[bench_horizon] backend={jax.default_backend()} T={T} "
+          f"G={G} K={K} E={E} H={H} batch={setup.batch} "
+          f"shards={setup.shards} reps={reps}")
+
+    def eval_fn(prev, state):
+        params = as_tree(jax.tree.map(lambda v: v[0, 0], state.params))
+        return {"acc": acc_of(params)}
+
+    legacy_rf = jax.jit(round_fn)
+
+    def run_host_loop():
+        from repro.core import global_model
+        state = hfl_init(params0, cfg)
+        brng = np.random.default_rng(setup.seed + 1)
+        hist = []
+        for _ in range(T):
+            b = sample_round_batches(train.x, train.y, idx, brng, E, H,
+                                     setup.batch)
+            state, m = legacy_rf(state, jax.tree.map(jnp.asarray, b))
+            acc = accuracy(apply, global_model(state), test_x, test.y)
+            hist.append((float(acc), float(np.mean(m.loss))))
+        return state, hist
+
+    step = make_round_step(round_fn, donate=True)
+    jitted_eval = jax.jit(eval_fn)
+
+    def run_device_loop(collect: bool = False):
+        state, data = hfl_init(params0, cfg), data0
+        mets, accs = [], []
+        for _ in range(T):
+            state, data, m = step(state, data)
+            # The pre-round state was donated into the step dispatch; this
+            # full-participation eval_fn only reads the post-round state,
+            # so pass it for both slots rather than a consumed buffer.
+            accs.append(float(jitted_eval(state, state)["acc"]))
+            if collect:
+                mets.append(m)
+        jax.block_until_ready(state)
+        return state, mets, accs
+
+    def run_driver(chunk=None):
+        state, _, hz = run_rounds(round_fn, hfl_init(params0, cfg), data0, T,
+                                  chunk=chunk, eval_fn=eval_fn)
+        jax.block_until_ready(state)
+        return state, hz
+
+    # ---- parity gate: device loop vs compiled driver, before timing ------
+    state_l, mets, accs = run_device_loop(collect=True)
+    state_d, hz = run_driver()
+    stacked = jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                           *mets)
+    pairs = list(zip(jax.tree.leaves(as_tree(state_l.params)),
+                     jax.tree.leaves(as_tree(state_d.params))))
+    pairs += list(zip(jax.tree.leaves(stacked), jax.tree.leaves(hz.metrics)))
+    pairs.append((np.asarray(accs, np.float32), hz.evals["acc"]))
+    max_err = max(float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32)
+                                        - jnp.asarray(b, jnp.float32))))
+                  for a, b in pairs)
+    parity_ok = all(np.allclose(np.asarray(a), np.asarray(b),
+                                rtol=1e-5, atol=1e-6) for a, b in pairs)
+    print(f"[bench_horizon] driver/loop parity "
+          f"{'OK' if parity_ok else 'FAIL'} (max err {max_err:.2e})")
+    if not parity_ok:
+        raise SystemExit("driver/loop parity FAILED")
+
+    # ---- timing: interleaved min-of-reps, everything compiled ------------
+    variants = {
+        "host_loop": run_host_loop,
+        "device_loop": run_device_loop,
+        "driver": lambda: run_driver(None),
+        "driver_chunked": lambda: run_driver(10),
+    }
+    for fn in variants.values():   # warm every path (compile + remainder)
+        fn()
+    times = {name: [] for name in variants}
+    for _ in range(reps):
+        for name, fn in variants.items():
+            t0 = time.perf_counter()
+            fn()
+            times[name].append(time.perf_counter() - t0)
+
+    timed = {name: {"total_s": float(np.min(ts)),
+                    "per_round_ms": float(np.min(ts)) / T * 1e3}
+             for name, ts in times.items()}
+    speedup_host = timed["host_loop"]["total_s"] / timed["driver"]["total_s"]
+    speedup_loop = timed["device_loop"]["total_s"] / timed["driver"]["total_s"]
+    for name, t in timed.items():
+        print(f"  {name:14s} {t['total_s']*1e3:9.1f} ms "
+              f"({t['per_round_ms']:6.2f} ms/round)")
+    print(f"[bench_horizon] driver speedup: {speedup_host:.2f}x vs host loop, "
+          f"{speedup_loop:.2f}x vs device per-round loop")
+
+    mem_lifetime = peak_memory()
+    mem = _donation_memory()
+    print(f"[bench_horizon] donation saves "
+          f"{mem['peak_bytes_saved_by_donation']/1e6:.1f} MB peak "
+          f"(state {mem['state_mb']:.0f} MB)")
+
+    out = {
+        "backend": jax.default_backend(),
+        "T": T,
+        "reps": reps,
+        "config": dataclasses.asdict(setup),
+        "variants": timed,
+        "speedup_vs_host_loop": speedup_host,
+        "speedup_vs_device_loop": speedup_loop,
+        "target_speedup": HORIZON_TARGET_SPEEDUP,
+        "meets_target": speedup_host >= HORIZON_TARGET_SPEEDUP,
+        "parity_ok": parity_ok,
+        "parity_max_err": max_err,
+        "donation_memory": mem,
+        "memory": mem_lifetime,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / "BENCH_horizon.json"
+    path.write_text(json.dumps(out, indent=2))
+    print(f"[bench_horizon] {'meets' if out['meets_target'] else 'MISSES'} "
+          f"the >={HORIZON_TARGET_SPEEDUP}x target -> {path}")
+    return out
 
 
 def main(quick: bool = True, model: str = "ragged") -> dict:
@@ -214,6 +536,7 @@ def main(quick: bool = True, model: str = "ragged") -> dict:
         "min_speedup": min(speedups),
         "geomean_speedup": float(np.exp(np.mean(np.log(speedups)))),
         "all_parity_ok": all(c["parity_ok"] for c in combos),
+        "memory": peak_memory(),
     }
     RESULTS.mkdir(parents=True, exist_ok=True)
     path = RESULTS / "BENCH_round.json"
@@ -233,5 +556,12 @@ if __name__ == "__main__":
     group.add_argument("--full", action="store_true",
                        help="larger topology / batches")
     ap.add_argument("--model", choices=("ragged", "mlp"), default="ragged")
+    ap.add_argument("--no-horizon", action="store_true",
+                    help="skip the whole-horizon driver benchmark")
+    ap.add_argument("--horizon-only", action="store_true",
+                    help="run only the whole-horizon driver benchmark")
     args = ap.parse_args()
-    main(quick=not args.full, model=args.model)
+    if not args.horizon_only:
+        main(quick=not args.full, model=args.model)
+    if not args.no_horizon:
+        bench_horizon()

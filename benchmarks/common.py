@@ -6,6 +6,14 @@ with the same partition protocol, algorithms and schedule as the paper.
 ``--quick`` (the default under ``python -m benchmarks.run``) shrinks the
 topology/rounds so the whole suite finishes on a 1-core CPU; ``--full``
 uses the paper's 100-client/10-group setting.
+
+Training runs through the compiled horizon driver (``core/driver.py``):
+the dataset is packed per client and uploaded once, every round's batches
+are gathered on device, T rounds run as chunked donated scans, and test
+accuracy is evaluated inside the compiled program at the ``eval_every``
+cadence -- so every fig/table module inherits the whole-horizon speedup
+with no host work in the round loop (host batch packing is gone entirely,
+including the packs the old loop wasted on participation-masked clients).
 """
 from __future__ import annotations
 
@@ -16,10 +24,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HFLConfig, as_tree, global_model, hfl_init, make_global_round, round_masks
-from repro.data.partition import partition, sample_round_batches
+from repro.core import (
+    HFLConfig,
+    as_tree,
+    hfl_init,
+    make_global_round,
+    pack_client_shards,
+    round_masks,
+    run_rounds,
+)
+from repro.data.partition import partition
 from repro.data.synthetic import make_classification, train_test_split
-from repro.models.small import accuracy, make_loss, mlp
+from repro.models.small import jit_accuracy, make_loss, mlp
 
 RESULTS = Path(__file__).parent / "results"
 
@@ -40,6 +56,8 @@ class BenchSetup:
     mode: str = "both_noniid"
     seed: int = 0
     hidden: int = 64
+    shards: int = 16           # packed batch blocks per client (driver)
+    chunk: int | None = None   # rounds per compiled dispatch (None = all)
 
     @classmethod
     def paper(cls):
@@ -56,8 +74,18 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
                   seed: int | None = None, rounds: int | None = None,
                   client_participation: float = 1.0,
                   group_participation: float = 1.0,
-                  participation_mode: str = "uniform"):
-    """Train one algorithm; returns dict(acc=[...], loss=[...], rounds=[...])."""
+                  participation_mode: str = "uniform",
+                  chunk: int | None = None):
+    """Train one algorithm; returns dict(acc=[...], loss=[...], rounds=[...]).
+
+    The whole horizon runs through ``core.driver.run_rounds``: batches are
+    gathered on device from the once-uploaded packed partition, the state
+    buffers are donated round to round, and accuracy is evaluated inside
+    the compiled scan. Under partial participation the evaluated replica is
+    the first active client of the round (re-derived from the pre-round
+    ``state.rng``, exactly the masks the engine uses); on the rare
+    empty round under 'uniform' sampling this falls back to replica (0, 0).
+    """
     G = G or setup.num_groups
     K = K or setup.clients_per_group
     E = E or setup.group_rounds
@@ -83,35 +111,33 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
                     group_participation=group_participation,
                     participation_mode=participation_mode)
     state = hfl_init(init(jax.random.PRNGKey(seed)), cfg)
-    round_fn = jax.jit(make_global_round(loss_fn, cfg))
+    round_fn = make_global_round(loss_fn, cfg)
+    data = pack_client_shards({"x": train.x, "y": train.y}, idx,
+                              group_rounds=E, local_steps=H,
+                              batch_size=setup.batch, shards=setup.shards,
+                              rng=rng, key=jax.random.PRNGKey(seed + 1))
+    acc_of = jit_accuracy(apply, jnp.asarray(test.x), jnp.asarray(test.y))
 
-    hist = {"round": [], "acc": [], "loss": []}
-    # Frozen replicas hold stale params: evaluate a client that received the
-    # most recent dissemination (on an empty round, nobody received and the
-    # last recipient still holds the current global model).
-    eval_gk = (0, 0)
-    for t in range(rounds):
-        # Under partial participation, mirror the engine's masks on the host
-        # and skip packing batches for the clients sitting this round out.
-        client_mask = (None if cfg.full_participation
-                       else np.asarray(round_masks(state.rng, cfg)[0].client))
-        batches = sample_round_batches(train.x, train.y, idx, rng, E, H,
-                                       setup.batch, client_mask=client_mask)
-        state, metrics = round_fn(state, jax.tree.map(jnp.asarray, batches))
-        if client_mask is not None and client_mask.any():
-            eval_gk = tuple(np.argwhere(client_mask > 0)[0])
-        if (t + 1) % eval_every == 0 or t == rounds - 1:
-            if client_mask is None:
-                params_eval = global_model(state)
-            else:
-                g_a, k_a = eval_gk
-                params_eval = as_tree(
-                    jax.tree.map(lambda x: x[g_a, k_a], state.params))
-            acc = accuracy(apply, params_eval, jnp.asarray(test.x), test.y)
-            hist["round"].append(t + 1)
-            hist["acc"].append(float(acc))
-            hist["loss"].append(float(np.mean(metrics.loss)))
-    return hist
+    def eval_fn(prev, state):
+        if cfg.full_participation:
+            params = as_tree(jax.tree.map(lambda v: v[0, 0], state.params))
+        else:
+            # Frozen replicas hold stale params: evaluate the first client
+            # that received this round's dissemination (argmax of the
+            # round's mask, re-derived from the pre-round rng).
+            cmask = round_masks(prev.rng, cfg)[0].client
+            i = jnp.argmax(cmask.reshape(-1))
+            params = as_tree(jax.tree.map(lambda v: v[i // K, i % K],
+                                          state.params))
+        return {"acc": acc_of(params)}
+
+    state, data, hz = run_rounds(round_fn, state, data, rounds,
+                                 chunk=chunk or setup.chunk,
+                                 eval_every=eval_every, eval_fn=eval_fn)
+    loss_t = np.asarray(hz.metrics.loss).reshape(rounds, -1).mean(axis=1)
+    return {"round": [int(r) for r in hz.eval_rounds],
+            "acc": [float(a) for a in hz.evals["acc"]],
+            "loss": [float(loss_t[r - 1]) for r in hz.eval_rounds]}
 
 
 def rounds_to_accuracy(hist: dict, target: float) -> float:

@@ -1,12 +1,15 @@
 """Partial-participation demo: half the clients sit out every round.
 
 Same hierarchy and non-i.i.d. data as the quickstart, but each global round
-samples 50% of every group's clients ('fixed' mode: exactly half). The host
-asks the engine's RNG who participates (`round_masks`) *before* packing
-batches, so inactive clients cost no host sampling and no host->device
-bytes; the jitted round derives the identical masks internally and freezes
-everyone who sat out. MTGC's corrections keep helping under sampling --
-compare against hierarchical FedAvg on the same mask/batch stream.
+samples 50% of every group's clients ('fixed' mode: exactly half). The
+whole run is one compiled scan (core/driver.py): participation masks are
+drawn from the engine state's PRNG *inside* the program, batches come from
+on-device selection out of the once-uploaded packed dataset (no host
+packing at all -- the old loop's host-side mask mirroring is gone), and
+evaluation picks an active replica each eval round by re-deriving the
+round's mask from the pre-round rng (``round_masks``), all under the same
+jit. MTGC's corrections keep helping under sampling -- compare against
+hierarchical FedAvg on the same mask/batch stream.
 
     PYTHONPATH=src python examples/participation.py
 """
@@ -14,10 +17,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HFLConfig, as_tree, hfl_init, make_global_round, round_masks
-from repro.data.partition import partition, sample_round_batches
+from repro.core import (
+    HFLConfig,
+    as_tree,
+    hfl_init,
+    make_global_round,
+    pack_client_shards,
+    round_masks,
+    run_rounds,
+)
+from repro.data.partition import partition
 from repro.data.synthetic import make_classification, train_test_split
-from repro.models.small import accuracy, make_loss, mlp
+from repro.models.small import jit_accuracy, make_loss, mlp
 
 
 def main():
@@ -29,31 +40,41 @@ def main():
 
     init, apply = mlp(10, 32, hidden=64)
     loss_fn = make_loss(apply)
+    acc_of = jit_accuracy(apply, jnp.asarray(test.x), jnp.asarray(test.y))
 
     for algo in ("mtgc", "hfedavg"):
         cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
                         group_rounds=E, lr=0.1, algorithm=algo,
                         client_participation=0.5, participation_mode="fixed")
+
+        def eval_fn(prev, state, cfg=cfg):
+            # Frozen replicas hold stale params: evaluate a client that
+            # received this round's dissemination. The round's mask is
+            # re-derived from the pre-round rng -- exactly the draw the
+            # engine used inside the round.
+            cmask = round_masks(prev.rng, cfg)[0].client
+            i = jnp.argmax(cmask.reshape(-1))
+            params = as_tree(jax.tree.map(lambda v: v[i // K, i % K],
+                                          state.params))
+            return {"acc": acc_of(params)}
+
         state = hfl_init(init(jax.random.PRNGKey(0)), cfg)
-        step = jax.jit(make_global_round(loss_fn, cfg))
-        data_rng = np.random.default_rng(1)  # same stream for both algos
+        data = pack_client_shards({"x": train.x, "y": train.y}, idx,
+                                  group_rounds=E, local_steps=H,
+                                  batch_size=32, shards=8,
+                                  rng=np.random.default_rng(1),
+                                  key=jax.random.PRNGKey(1))
+        state, data, hz = run_rounds(make_global_round(loss_fn, cfg), state,
+                                     data, rounds, eval_every=5,
+                                     eval_fn=eval_fn)
         print(f"\n== {algo} @ 50% client participation ==")
-        for t in range(rounds):
-            masks, _ = round_masks(state.rng, cfg)   # who trains this round?
-            cmask = np.asarray(masks.client)
-            batches = sample_round_batches(train.x, train.y, idx, data_rng,
-                                           E, H, batch_size=32,
-                                           client_mask=cmask)
-            state, m = step(state, jax.tree.map(jnp.asarray, batches))
-            if (t + 1) % 5 == 0:
-                # Evaluate a replica that received the last dissemination.
-                g_a, k_a = np.argwhere(cmask > 0)[0]
-                params = as_tree(jax.tree.map(lambda x: x[g_a, k_a], state.params))
-                acc = accuracy(apply, params, jnp.asarray(test.x), test.y)
-                print(f"round {t+1:3d}  active {int(cmask.sum()):2d}/{G*K}  "
-                      f"loss {float(np.mean(m.loss)):.4f}  test acc {acc:.4f}  "
-                      f"||z||^2 {float(m.z_norm):.3e}  "
-                      f"||y||^2 {float(m.y_norm):.3e}")
+        for i, r in enumerate(hz.eval_rounds):
+            active = int(round(float(hz.metrics.participation[r-1]) * G * K))
+            print(f"round {r:3d}  active {active:2d}/{G*K}  "
+                  f"loss {float(hz.metrics.loss[r-1].mean()):.4f}  "
+                  f"test acc {float(hz.evals['acc'][i]):.4f}  "
+                  f"||z||^2 {float(hz.metrics.z_norm[r-1]):.3e}  "
+                  f"||y||^2 {float(hz.metrics.y_norm[r-1]):.3e}")
 
 
 if __name__ == "__main__":

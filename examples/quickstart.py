@@ -4,16 +4,28 @@ Builds a 4-group x 5-client hierarchy with Dirichlet(0.1) label skew at
 both levels, then trains the paper's MLP with MTGC and with hierarchical
 FedAvg on the identical batch stream -- watch the drift corrections win.
 
+Training runs through the compiled horizon driver (core/driver.py): the
+partitioned dataset is packed per client and uploaded once, all 15 rounds
+execute as a single donated scan dispatch with batches gathered on device,
+and test accuracy is evaluated every 5 rounds inside the compiled program.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HFLConfig, global_model, hfl_init, make_global_round
-from repro.data.partition import partition, sample_round_batches
+from repro.core import (
+    HFLConfig,
+    as_tree,
+    hfl_init,
+    make_global_round,
+    pack_client_shards,
+    run_rounds,
+)
+from repro.data.partition import partition
 from repro.data.synthetic import make_classification, train_test_split
-from repro.models.small import accuracy, make_loss, mlp
+from repro.models.small import jit_accuracy, make_loss, mlp
 
 
 def main():
@@ -25,24 +37,33 @@ def main():
 
     init, apply = mlp(10, 32, hidden=64)
     loss_fn = make_loss(apply)
+    acc_of = jit_accuracy(apply, jnp.asarray(test.x), jnp.asarray(test.y))
+
+    def eval_fn(prev, state):
+        # All clients hold the global model between full-participation rounds.
+        params = as_tree(jax.tree.map(lambda v: v[0, 0], state.params))
+        return {"acc": acc_of(params)}
 
     for algo in ("mtgc", "hfedavg"):
         cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
                         group_rounds=E, lr=0.1, algorithm=algo)
         state = hfl_init(init(jax.random.PRNGKey(0)), cfg)
-        step = jax.jit(make_global_round(loss_fn, cfg))
-        data_rng = np.random.default_rng(1)  # same stream for both algos
+        # Same packing rng + selection key for both algos -> identical
+        # batch streams, like the old host loop's shared data rng.
+        data = pack_client_shards({"x": train.x, "y": train.y}, idx,
+                                  group_rounds=E, local_steps=H,
+                                  batch_size=32, shards=8,
+                                  rng=np.random.default_rng(1),
+                                  key=jax.random.PRNGKey(1))
+        state, data, hz = run_rounds(make_global_round(loss_fn, cfg), state,
+                                     data, rounds, eval_every=5,
+                                     eval_fn=eval_fn)
         print(f"\n== {algo} ==")
-        for t in range(rounds):
-            batches = sample_round_batches(train.x, train.y, idx, data_rng,
-                                           E, H, batch_size=32)
-            state, m = step(state, jax.tree.map(jnp.asarray, batches))
-            if (t + 1) % 5 == 0:
-                acc = accuracy(apply, global_model(state),
-                               jnp.asarray(test.x), test.y)
-                print(f"round {t+1:3d}  loss {float(np.mean(m.loss)):.4f}  "
-                      f"test acc {acc:.4f}  ||z||^2 {float(m.z_norm):.3e}  "
-                      f"||y||^2 {float(m.y_norm):.3e}")
+        for i, r in enumerate(hz.eval_rounds):
+            print(f"round {r:3d}  loss {float(hz.metrics.loss[r-1].mean()):.4f}  "
+                  f"test acc {float(hz.evals['acc'][i]):.4f}  "
+                  f"||z||^2 {float(hz.metrics.z_norm[r-1]):.3e}  "
+                  f"||y||^2 {float(hz.metrics.y_norm[r-1]):.3e}")
 
 
 if __name__ == "__main__":

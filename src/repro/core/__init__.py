@@ -5,8 +5,18 @@ Public API:
   ScaffoldState, scaffold_init, make_scaffold_round
   MultiLevelState, multilevel_init, make_multilevel_round
   Packer, FlatBuffers, make_packer, as_tree (flat-state plumbing)
+  PackedBatches, run_rounds, make_round_step (compiled horizon driver)
 """
 from repro.core.config import HFLConfig
+from repro.core.driver import (
+    Horizon,
+    PackedBatches,
+    make_round_step,
+    pack_client_shards,
+    pack_lm_shards,
+    run_rounds,
+    select_round,
+)
 from repro.core.engine import HFLState, RoundMetrics, global_model, hfl_init, make_global_round
 from repro.core.multilevel import (
     MultiLevelState,
@@ -36,6 +46,13 @@ __all__ = [
     "global_model",
     "hfl_init",
     "make_global_round",
+    "Horizon",
+    "PackedBatches",
+    "make_round_step",
+    "pack_client_shards",
+    "pack_lm_shards",
+    "run_rounds",
+    "select_round",
     "MultiLevelState",
     "make_multilevel_round",
     "multilevel_global_model",

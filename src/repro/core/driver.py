@@ -1,0 +1,341 @@
+"""Whole-horizon compiled training: scan-over-rounds with donated buffers.
+
+``core.engine`` (and ``launch.train``) compile *one global round* into a
+single XLA program; every entry point then drives it from a Python host
+loop -- one dispatch per round with host-side batch packing in between. At
+paper scale (T = 100 global rounds, G*K = 100 clients) that loop pays
+per-round dispatch latency, a host->device transfer of every batch, and a
+host sync for the metrics of every round; and without donation each round
+briefly holds two copies of the parameter-sized state buffers.
+
+This module lifts the loop onto the device:
+
+* **Packed dataset** (:class:`PackedBatches`): for every client, ``shards``
+  pre-formed blocks of ``steps = H * max(A, 1)`` step-batches are sampled
+  once on the host and uploaded once -- leaves ``[G, K, S, steps, B, ...]``.
+  Each round then draws ``[E, G, K]`` shard indices from a dedicated data
+  PRNG key and gathers its batches *on device* (:func:`select_round`); the
+  host never packs or transfers batches again.
+* **Compiled horizon** (:func:`run_rounds`): ``chunk`` global rounds run as
+  one ``jax.lax.scan`` inside a single ``jax.jit`` with the state argument
+  donated (``donate_argnums``), so the round-to-round state hand-off reuses
+  the input buffers instead of holding two parameter-sized copies, and T
+  rounds cost ceil(T / chunk) dispatches. Per-round metrics come back
+  stacked, one transfer per chunk. Scan lowers to a while loop, so compile
+  time is independent of ``chunk``; chunking exists to bound how much work
+  a single dispatch commits to (progress visibility, interruptibility) --
+  the remainder chunk triggers at most one extra compile.
+* **Per-round fallback** (:func:`make_round_step`): the same select + round
+  step as a single donated dispatch, for host loops that need per-round
+  control. ``run_rounds`` over the same :class:`PackedBatches` is bit-exact
+  against this loop (gated by tests/test_driver.py).
+
+Evaluation stays compiled: ``eval_fn(prev_state, state)`` runs inside the
+scan under ``jax.lax.cond``, gated by a per-round boolean mask computed on
+the host from ``eval_every`` (plus the final round), so eval work is only
+spent on the rounds that report. ``prev_state`` is the pre-round state --
+under partial participation its ``rng`` re-derives the round's masks (see
+``core.participation``), e.g. to pick an active replica to evaluate.
+
+The driver is layout- and engine-agnostic: ``round_fn`` may be any
+``(state, batches) -> (state, metrics)`` function (simulator engine, tree
+or flat state, or the sharded production round -- set ``microbatches`` for
+its ``[E, H, A, G, K, ...]`` batch layout), and the participation RNG stays
+where it always was, inside the engine state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+class PackedBatches:
+    """A once-uploaded, device-resident training dataset for the driver.
+
+    arrays: pytree whose leaves are ``[G, K, S, steps, ...]`` -- ``S``
+        pre-sampled blocks per client, each holding ``steps`` step-batches
+        (``steps = local_steps * max(microbatches, 1)``).
+    rng: PRNG key advanced one split per round for shard selection.
+    group_rounds / local_steps / microbatches: static layout of one round.
+        ``microbatches=None`` emits engine-layout batches ``[E, H, G, K,
+        ...]``; an integer emits the sharded microbatched layout
+        ``[E, H, A, G, K, ...]``.
+
+    Registered as a pytree (children: arrays + rng; the layout is static
+    aux data), so it can cross ``jit`` boundaries whole.
+    """
+
+    __slots__ = ("arrays", "rng", "group_rounds", "local_steps", "microbatches")
+
+    def __init__(self, arrays: PyTree, rng: jax.Array, group_rounds: int,
+                 local_steps: int, microbatches: int | None = None):
+        self.arrays = arrays
+        self.rng = rng
+        self.group_rounds = int(group_rounds)
+        self.local_steps = int(local_steps)
+        self.microbatches = None if microbatches is None else int(microbatches)
+
+    @property
+    def num_shards(self) -> int:
+        return jax.tree.leaves(self.arrays)[0].shape[2]
+
+    def replace_rng(self, rng: jax.Array) -> "PackedBatches":
+        return PackedBatches(self.arrays, rng, self.group_rounds,
+                             self.local_steps, self.microbatches)
+
+    def __repr__(self) -> str:
+        shapes = [tuple(x.shape) for x in jax.tree.leaves(self.arrays)]
+        return (f"PackedBatches(E={self.group_rounds}, H={self.local_steps}, "
+                f"A={self.microbatches}, leaves={shapes})")
+
+
+def _packed_flatten(pb: PackedBatches):
+    return ((pb.arrays, pb.rng),
+            (pb.group_rounds, pb.local_steps, pb.microbatches))
+
+
+def _packed_unflatten(aux, children) -> PackedBatches:
+    arrays, rng = children
+    return PackedBatches(arrays, rng, *aux)
+
+
+jax.tree_util.register_pytree_node(PackedBatches, _packed_flatten,
+                                   _packed_unflatten)
+
+
+def select_round(data: PackedBatches, key: jax.Array) -> PyTree:
+    """Gather one global round of batches from the packed shards, on device.
+
+    Draws one shard index per (group round, client) -- ``[E, G, K]`` -- and
+    gathers the corresponding blocks, so a round's batch tensor never exists
+    on the host. Returns leaves ``[E, H, G, K, ...]`` (``microbatches is
+    None``) or ``[E, H, A, G, K, ...]``.
+    """
+    E, H, A = data.group_rounds, data.local_steps, data.microbatches
+    G, K, S = jax.tree.leaves(data.arrays)[0].shape[:3]
+    sid = jax.random.randint(key, (E, G, K), 0, S)
+    gi = jnp.arange(G)[None, :, None]
+    ki = jnp.arange(K)[None, None, :]
+
+    def gather(leaf):
+        sel = jnp.moveaxis(leaf[gi, ki, sid], 3, 1)  # [E, steps, G, K, ...]
+        if A is None:
+            return sel                               # steps == H
+        return sel.reshape((E, H, A) + sel.shape[2:])
+
+    return jax.tree.map(gather, data.arrays)
+
+
+def pack_client_shards(
+    data_arrays: dict[str, np.ndarray],
+    indices: list[list[np.ndarray]],
+    *,
+    group_rounds: int,
+    local_steps: int,
+    batch_size: int,
+    shards: int = 16,
+    microbatches: int | None = None,
+    rng: np.random.Generator,
+    key: jax.Array,
+) -> PackedBatches:
+    """Pack a partitioned array dataset (``data.partition``) for the driver.
+
+    For every client, pre-samples ``shards`` blocks of ``steps x batch``
+    examples (with replacement, like ``sample_round_batches``) from its
+    index pool -- once, on the host -- and uploads the gathered features as
+    ``[G, K, S, steps, B, ...]`` device arrays. Per-round batch variety then
+    comes from on-device shard selection: each group round draws one of the
+    ``S`` blocks per client, so ``shards`` bounds how many distinct blocks a
+    client can see across the horizon (host memory scales with it; 16 is
+    plenty for the paper's schedules).
+    """
+    G, K = len(indices), len(indices[0])
+    steps = local_steps * (microbatches or 1)
+    sel = np.stack([
+        np.stack([
+            rng.choice(indices[g][k], size=(shards, steps, batch_size),
+                       replace=True)
+            for k in range(K)
+        ]) for g in range(G)
+    ])                                               # [G, K, S, steps, B]
+    arrays = {name: jnp.asarray(arr[sel]) for name, arr in data_arrays.items()}
+    return PackedBatches(arrays, key, group_rounds, local_steps, microbatches)
+
+
+def pack_lm_shards(
+    tokens: np.ndarray,
+    *,
+    num_groups: int,
+    clients_per_group: int,
+    group_rounds: int,
+    local_steps: int,
+    batch_size: int,
+    seq_len: int,
+    shards: int = 8,
+    microbatches: int | None = None,
+    rng: np.random.Generator,
+    key: jax.Array,
+) -> PackedBatches:
+    """Pack a token stream (``data.lm``) for the driver.
+
+    Samples random ``seq_len`` windows (next-token targets shifted by one,
+    exactly like ``lm_batches``) into ``{"tokens", "targets"}`` blocks of
+    shape ``[G, K, S, steps, B, seq_len]``, uploaded once.
+    """
+    G, K = num_groups, clients_per_group
+    steps = local_steps * (microbatches or 1)
+    starts = rng.integers(0, len(tokens) - seq_len - 1,
+                          size=(G, K, shards, steps, batch_size))
+    win = starts[..., None] + np.arange(seq_len)
+    arrays = {
+        "tokens": jnp.asarray(tokens[win].astype(np.int32)),
+        "targets": jnp.asarray(tokens[win + 1].astype(np.int32)),
+    }
+    return PackedBatches(arrays, key, group_rounds, local_steps, microbatches)
+
+
+RoundFn = Callable[[PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def make_round_step(round_fn: RoundFn, *, donate: bool = True):
+    """One (on-device select + global round) as a single jitted dispatch.
+
+    Returns ``step(state, data) -> (state, data, metrics)``. With ``donate``
+    (default) the state argument's buffers are donated to the call, so the
+    loop never holds two copies of the ``[G, K, N]`` state -- the caller
+    must not reuse the state object it passed in. The per-round driver:
+    what ``run_rounds`` compiles into its scan, kept as the host-loop
+    building block (and the parity baseline for the compiled horizon).
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
+    def _step(state, data: PackedBatches):
+        key, rng = jax.random.split(data.rng)
+        state, metrics = round_fn(state, select_round(data, key))
+        return state, rng, metrics
+
+    def step(state, data: PackedBatches):
+        state, rng, metrics = _step(state, data)
+        return state, data.replace_rng(rng), metrics
+
+    return step
+
+
+class Horizon(NamedTuple):
+    """Stacked results of a multi-round driver run.
+
+    metrics: the round function's metrics, stacked -- leaves ``[T, ...]``.
+    evals: ``eval_fn`` outputs at the evaluated rounds -- leaves
+        ``[len(eval_rounds), ...]`` -- or None when no ``eval_fn`` was given.
+    eval_rounds: 1-based global round indices that were evaluated
+        (multiples of ``eval_every`` plus the final round).
+    """
+
+    metrics: Any
+    evals: Any | None
+    eval_rounds: np.ndarray
+
+
+@functools.lru_cache(maxsize=8)
+def _chunk_runner(round_fn: RoundFn, eval_fn, donate: bool):
+    """Build (and cache) the jitted scan-over-rounds chunk executor.
+
+    Cached on (round_fn, eval_fn, donate) identity so repeated
+    ``run_rounds`` calls with the same functions (chunked horizons,
+    benchmark reps) reuse the compiled executable instead of re-tracing.
+    Callers that build fresh closures per run (e.g. a benchmark sweep)
+    always miss, so the LRU also bounds how many dead executables (and
+    whatever arrays their closures captured) stay pinned.
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
+    def run_chunk(state, data: PackedBatches, eval_mask: jax.Array):
+        def body(carry, do_eval):
+            state, rng = carry
+            key, rng = jax.random.split(rng)
+            prev = state
+            state, metrics = round_fn(state, select_round(data, key))
+            if eval_fn is None:
+                return (state, rng), (metrics,)
+            shapes = jax.eval_shape(eval_fn, prev, state)
+            zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+            ev = jax.lax.cond(do_eval, eval_fn, lambda p, s: zeros, prev, state)
+            return (state, rng), (metrics, ev)
+
+        (state, rng), outs = jax.lax.scan(body, (state, data.rng), eval_mask)
+        return (state, rng) + outs
+
+    return run_chunk
+
+
+def run_rounds(
+    round_fn: RoundFn,
+    state: PyTree,
+    data: PackedBatches,
+    T: int,
+    *,
+    chunk: int | None = None,
+    eval_every: int = 1,
+    eval_fn: Callable[[PyTree, PyTree], PyTree] | None = None,
+    donate: bool = True,
+) -> tuple[PyTree, PackedBatches, Horizon]:
+    """Run ``T`` global rounds as ceil(T / chunk) compiled dispatches.
+
+    Each dispatch scans ``chunk`` rounds of (on-device batch selection +
+    ``round_fn``) with the state buffers donated, and returns that chunk's
+    metrics stacked -- one device->host transfer per chunk instead of per
+    round. ``chunk=None`` (or 0) compiles the whole horizon into a single
+    dispatch; a remainder ``T % chunk`` costs at most one extra compile
+    (scan lowers to a while loop, so compile time does not grow with
+    ``chunk``).
+
+    ``eval_fn(prev_state, state) -> pytree`` runs inside the scan under
+    ``lax.cond`` at rounds ``eval_every, 2*eval_every, ..., T`` --
+    ``prev_state`` is the pre-round state, whose ``rng`` re-derives the
+    round's participation masks when a caller needs them for evaluation.
+
+    With ``donate`` (default) the caller's ``state`` (and each intermediate
+    chunk state) is consumed: its buffers are invalidated and reused for
+    the output state, halving driver peak state memory. Pass
+    ``donate=False`` to keep the input alive.
+
+    Returns ``(state, data, Horizon)`` -- ``data`` carries the advanced
+    selection rng so horizons can be continued.
+    """
+    assert T >= 1 and eval_every >= 1
+    if chunk is not None and chunk < 0:
+        raise ValueError(f"chunk must be None or >= 0, got {chunk}")
+    chunk = T if not chunk else min(int(chunk), T)
+    runner = _chunk_runner(round_fn, eval_fn, donate)
+
+    mets, evs, masks = [], [], []
+    done = 0
+    while done < T:
+        n = min(chunk, T - done)
+        mask = np.array([(done + i + 1) % eval_every == 0
+                         or done + i + 1 == T for i in range(n)])
+        out = runner(state, data, jnp.asarray(mask))
+        state, rng = out[0], out[1]
+        data = data.replace_rng(rng)
+        mets.append(out[2])
+        if eval_fn is not None:
+            evs.append(out[3])
+        masks.append(mask)
+        done += n
+
+    def _cat(*xs):
+        return np.concatenate([np.asarray(x) for x in xs])
+
+    metrics = jax.tree.map(_cat, *mets)
+    mask_all = np.concatenate(masks)
+    eval_rounds = np.nonzero(mask_all)[0] + 1
+    evals = None
+    if eval_fn is not None:
+        evals = jax.tree.map(lambda *xs: _cat(*xs)[mask_all], *evs)
+    return state, data, Horizon(metrics, evals, eval_rounds)

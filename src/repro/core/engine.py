@@ -1,6 +1,10 @@
 """The hierarchical-FL round engine (paper Algorithm 1, generalized).
 
-One *global round* ``t`` is a single jittable program:
+One *global round* ``t`` is the engine's unit of work -- a single jittable
+program (though no longer the largest one: ``core/driver.py`` lifts whole
+training horizons over this round function into one compiled
+scan-over-rounds with donated state buffers and on-device batch
+selection; the round function itself is driver-agnostic):
 
     for e in range(E):                 # lax.scan over group rounds
         for h in range(H):             # lax.scan over local steps
@@ -35,9 +39,10 @@ layout at trace time from the state itself. Every aggregation, correction
 update, drift norm and dissemination then runs as a single whole-model op
 instead of per-leaf dispatch. The gradient hot loop still consumes tree
 views -- ``packer.unflatten`` produces them once per *local phase* (not per
-step, so the hot loop pays no repack traffic), the phase's correction sum
-``z + y`` collapses into one precomputed tensor, and the participation
-``where`` folds into the same fused update expression. With
+step, so the hot loop pays no repack traffic), the phase constants z and y
+unpack once at the phase boundary (y deliberately kept ``[G, N]``, a
+factor K smaller than the replicas, broadcasting per step), and the
+participation ``where`` folds into the same fused update expression. With
 ``use_fused_update`` the local step becomes a single batched Pallas call
 over the entire flat model (mask folded in, ``y`` broadcast by the kernel's
 index map; kernels/mtgc_update.py) -- the TPU path. Flat/tree parity is
@@ -227,10 +232,12 @@ def make_global_round(
         def local_phase_flat(x, z, y, dyn, anchor, batches_eh):
             """Flat local phase: repack at the phase boundary, never per step.
 
-            z and y are constant for the whole phase, so their sum collapses
-            into one precomputed correction tensor; the participation gate
-            folds into the same fused update expression (no separate
-            parameter-sized ``tree_select`` pass).
+            z and y are constant for the whole phase, so they unpack once
+            here (y kept at its [G, ...] shape -- a factor K smaller than
+            the replicas -- and broadcast per step, unlike the sharded
+            round which pre-sums z + y at full [G, K] size); the
+            participation gate folds into the same fused update expression
+            (no separate parameter-sized ``tree_select`` pass).
             """
             if use_fused:
                 # One batched Pallas call over the entire flat model per

@@ -30,9 +30,19 @@ schedule; local steps generate zero cross-client traffic.
 
 Also used as the lowering target of the train_4k dry-run.
 
+The CLI drives training through ``core/driver.py``: the token stream is
+packed into per-client shard blocks and uploaded once, every round's
+batches are gathered on device, and the state buffers are donated through
+each dispatch (tree and flat layouts alike). ``--chunk N`` compiles N
+global rounds into a single scan dispatch (``run_rounds``); ``--chunk 0``
+(default) keeps one donated dispatch per round. Chunking does not change
+numerics (driver parity is gated in tests/test_driver.py) -- it bounds how
+much work one dispatch commits to while amortizing dispatch overhead and
+returning metrics one transfer per chunk.
+
 CLI (example, small-enough-for-CPU config):
     PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
-        --smoke --rounds 2
+        --smoke --rounds 2 --chunk 2
 """
 from __future__ import annotations
 
@@ -282,12 +292,20 @@ def main() -> None:
                     help="flat-buffer state (core/packer.py)")
     ap.add_argument("--fused", action="store_true",
                     help="fused Pallas mtgc_update local step")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="global rounds per compiled scan dispatch "
+                         "(core/driver.py run_rounds); 0 = one donated "
+                         "dispatch per round")
+    ap.add_argument("--shards", type=int, default=8,
+                    help="packed batch blocks per client uploaded once "
+                         "(on-device batch selection)")
     args = ap.parse_args()
 
     import numpy as np
 
     from repro.configs import get_arch
-    from repro.data.lm import lm_batches, make_lm_tokens
+    from repro.core.driver import make_round_step, pack_lm_shards, run_rounds
+    from repro.data.lm import make_lm_tokens
     from repro.models.transformer import build_model
 
     cfg = get_arch(args.arch)
@@ -302,14 +320,30 @@ def main() -> None:
 
     G, K, E, H = args.groups, args.clients, args.E, args.H
     state = sharded_init(params, G, K, use_flat_state=args.flat)
-    round_fn = jax.jit(make_sharded_round(
+    round_fn = make_sharded_round(
         bundle.loss, E=E, H=H, lr=args.lr, algorithm=args.algorithm,
-        use_fused_update=args.fused))
-    for t in range(args.rounds):
-        batch = lm_batches(toks, rng, (E, H, 1, G, K, args.batch), args.seq)
-        state, m = round_fn(state, batch)
-        print(f"round {t}: loss {float(m.loss.mean()):.4f} "
-              f"z^2 {float(m.z_norm):.3e} y^2 {float(m.y_norm):.3e}")
+        use_fused_update=args.fused)
+    data = pack_lm_shards(
+        toks, num_groups=G, clients_per_group=K, group_rounds=E,
+        local_steps=H, microbatches=1, batch_size=args.batch,
+        seq_len=args.seq, shards=args.shards, rng=rng,
+        key=jax.random.PRNGKey(args.seed + 1))
+
+    def report(t, loss, z_norm, y_norm):
+        print(f"round {t}: loss {float(loss.mean()):.4f} "
+              f"z^2 {float(z_norm):.3e} y^2 {float(y_norm):.3e}")
+
+    if args.chunk:
+        state, data, hz = run_rounds(round_fn, state, data, args.rounds,
+                                     chunk=args.chunk)
+        for t in range(args.rounds):
+            report(t, hz.metrics.loss[t], hz.metrics.z_norm[t],
+                   hz.metrics.y_norm[t])
+    else:
+        step = make_round_step(round_fn)    # donated single-round dispatch
+        for t in range(args.rounds):
+            state, data, m = step(state, data)
+            report(t, m.loss, m.z_norm, m.y_norm)
 
 
 if __name__ == "__main__":

@@ -231,6 +231,24 @@ def make_loss(apply: Apply) -> Callable[[dict, dict], jax.Array]:
     return loss
 
 
+def jit_accuracy(apply: Apply, x: jax.Array, y: jax.Array):
+    """Jit-traceable eval accuracy over the full (x, y) set: ``params ->
+    scalar``.
+
+    The traceable counterpart of :func:`accuracy` (which streams batches on
+    the host and cannot be jitted): meant to be traced *inside* an already
+    jitted program, e.g. the horizon driver's ``eval_fn`` (core/driver.py).
+    Standalone callers should wrap it in ``jax.jit`` themselves and need
+    the whole eval set to fit in one forward pass.
+    """
+
+    def acc(params) -> jax.Array:
+        pred = jnp.argmax(apply(params, x), axis=-1)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+    return acc
+
+
 def accuracy(apply: Apply, params, x, y, batch: int = 512) -> float:
     """Streaming eval accuracy."""
     n = x.shape[0]
