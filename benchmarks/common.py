@@ -75,6 +75,7 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
                   client_participation: float = 1.0,
                   group_participation: float = 1.0,
                   participation_mode: str = "uniform",
+                  participation_weighting: str = "none",
                   chunk: int | None = None):
     """Train one algorithm; returns dict(acc=[...], loss=[...], rounds=[...]).
 
@@ -109,7 +110,8 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
                     prox_mu=0.01, feddyn_alpha=0.1,
                     client_participation=client_participation,
                     group_participation=group_participation,
-                    participation_mode=participation_mode)
+                    participation_mode=participation_mode,
+                    participation_weighting=participation_weighting)
     state = hfl_init(init(jax.random.PRNGKey(seed)), cfg)
     round_fn = make_global_round(loss_fn, cfg)
     data = pack_client_shards({"x": train.x, "y": train.y}, idx,

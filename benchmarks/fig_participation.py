@@ -10,14 +10,214 @@ is the scenario axis the reproduction adds.
 Also sweeps group participation at C_g in {0.5, 1.0} for MTGC vs HFedAvg:
 whole groups sitting out rounds is the hierarchical-specific failure mode
 (async/offline aggregators, Wang & Wang 2022).
+
+Bias/variance section (``--bias-bench``, also run by CI's non-blocking
+bench job -> ``benchmarks/results/BENCH_participation.json``): a
+Monte-Carlo study of the participation-weighting estimators under Bernoulli
+(``uniform``) sampling. R independent trajectories -- identical data and
+init, different mask streams -- run *simultaneously* through the compiled
+horizon driver (the round function vmapped over the trajectory axis, one
+``run_rounds`` scan per weighting), and each round's disseminated global
+aggregate is read out inside the compiled program by an eval_fn that
+re-derives the trajectory's mask from its pre-round rng. Two sections,
+each against the full-participation reference on the same data:
+
+* ``one_round`` (E=1, a single group round per global round): here
+  inverse-probability weighting is *exactly* unbiased -- every client's
+  local trajectory is mask-independent, so its measured bias is pure MC
+  noise (~1/sqrt(R); the claim checks it sits within a few noise floors).
+  The realized-count estimator is also unbiased in this single-timescale
+  setting (subset symmetry), which is exactly why the distinction only
+  shows up when aggregates feed back across timescales;
+* ``compounded`` (E=2 group rounds, T=4 global rounds of MTGC): the
+  realized-count denominator noise feeds the z/y corrections across both
+  timescales and accumulates into a systematic offset many sigma above
+  the noise, which inverse_prob cuts by ~3x -- at the price of a larger
+  per-round aggregate variance (the ``std`` column).
+
+The same MC harness (``mc_participation_aggregates`` /
+``full_participation_reference`` below) backs the hard statistical gates
+in tests/test_weighting.py, so the published artifact and the test gate
+measure the same estimator readout by construction.
+
+    PYTHONPATH=src python -m benchmarks.fig_participation
+    PYTHONPATH=src python -m benchmarks.fig_participation --bias-bench
 """
 from __future__ import annotations
 
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 from benchmarks.common import BenchSetup, report, run_algorithm
+from repro.core import (
+    HFLConfig,
+    PackedBatches,
+    hfl_init,
+    make_global_round,
+    round_masks,
+    run_rounds,
+)
+
+RESULTS = Path(__file__).parent / "results"
 
 ALGOS = ("hfedavg", "local_corr", "group_corr", "mtgc")
 CLIENT_FRACS = (0.25, 0.5, 1.0)
 GROUP_FRACS = (0.5, 1.0)
+
+
+# ------------------------------------------------- bias/variance MC harness
+
+# Topology of the MC study: heterogeneous quadratics in the
+# slow-contraction regime where the count-noise of realized-count
+# weighting visibly compounds (curvature a^2 ~ chi^2 + 0.3, lr * curvature
+# well below 1, per-client optima spread ~2 sigma apart).
+MC_G, MC_K, MC_D = 3, 8, 6
+
+
+def _quad_loss(params, batch):
+    r = batch["a"] * params["w"] - batch["b"]
+    return 0.5 * jnp.sum(r * r)
+
+
+def _mc_data(E, H, seed=0):
+    """Deterministic per-client quadratic data: same batches every round,
+    so the full-participation trajectory is an exact reference and the
+    only randomness across trajectories is the mask stream."""
+    G, K, D = MC_G, MC_K, MC_D
+    rng = np.random.default_rng(seed)
+    curv = rng.normal(size=(G, K, D)) ** 2 + 0.3
+    targ = rng.normal(size=(G, K, D)) * 2.0
+    a = np.broadcast_to(np.sqrt(curv)[:, :, None, None], (G, K, 1, H, D))
+    b = np.broadcast_to((targ / np.sqrt(curv))[:, :, None, None],
+                        (G, K, 1, H, D))
+    arrays = {"a": jnp.asarray(a, jnp.float32),
+              "b": jnp.asarray(b, jnp.float32)}
+    return PackedBatches(arrays, jax.random.PRNGKey(1), E, H, None)
+
+
+def mc_participation_aggregates(weighting: str, *, E: int, H: int, T: int,
+                                R: int, frac: float = 0.5, lr: float = 0.1,
+                                seed: int = 0, traj_key: int = 2):
+    """R MTGC trajectories with independent mask streams, one compiled
+    horizon: the round function vmapped over the trajectory axis through
+    ``run_rounds``, each round's disseminated global aggregate read out by
+    an in-scan eval_fn from an active replica (mask re-derived from the
+    trajectory's pre-round rng). Returns ``(agg [T, R, D], ok [T, R])``
+    -- ``ok`` flags rounds with at least one active client; all-empty
+    rounds hold a stale readout and are dropped by callers.
+
+    Shared between the BENCH_participation.json artifact and the
+    statistical gates in tests/test_weighting.py so both measure the same
+    estimator readout.
+    """
+    K = MC_K
+    cfg = HFLConfig(
+        num_groups=MC_G, clients_per_group=K, local_steps=H, group_rounds=E,
+        lr=lr, algorithm="mtgc", client_participation=frac,
+        participation_mode="uniform", participation_weighting=weighting,
+        use_flat_state=False)
+    round_fn = jax.vmap(make_global_round(_quad_loss, cfg), in_axes=(0, None))
+
+    def eval_one(prev, state):
+        cmask = round_masks(prev.rng, cfg)[0].client
+        i = jnp.argmax(cmask.reshape(-1))
+        return {"agg": state.params["w"][i // K, i % K],
+                "n_active": jnp.sum(cmask)}
+
+    keys = jax.random.split(jax.random.PRNGKey(traj_key), R)
+    states = jax.vmap(
+        lambda k: hfl_init({"w": jnp.zeros(MC_D)}, cfg, rng=k))(keys)
+    _, _, hz = run_rounds(round_fn, states, _mc_data(E, H, seed), T,
+                          eval_every=1, eval_fn=jax.vmap(eval_one))
+    return (np.asarray(hz.evals["agg"]),          # [T, R, D]
+            np.asarray(hz.evals["n_active"]) > 0)  # [T, R]
+
+
+def full_participation_reference(*, E: int, H: int, T: int, lr: float = 0.1,
+                                 seed: int = 0):
+    """[T, D] exact full-participation aggregates on the same data."""
+    cfg = HFLConfig(
+        num_groups=MC_G, clients_per_group=MC_K, local_steps=H,
+        group_rounds=E, lr=lr, algorithm="mtgc", use_flat_state=False)
+    _, _, hz = run_rounds(
+        make_global_round(_quad_loss, cfg),
+        hfl_init({"w": jnp.zeros(MC_D)}, cfg), _mc_data(E, H, seed), T,
+        eval_every=1,
+        eval_fn=lambda prev, state: {"agg": state.params["w"][0, 0]})
+    return np.asarray(hz.evals["agg"])
+
+
+def _mc_stats(weighting, full, *, E, H, T, R, report_rounds):
+    agg, ok = mc_participation_aggregates(weighting, E=E, H=H, T=T, R=R)
+    rounds = {}
+    for t in report_rounds:
+        a = agg[t][ok[t]]
+        rounds[f"round_{t + 1}"] = {
+            "n": int(ok[t].sum()),
+            "bias": float(np.linalg.norm(a.mean(axis=0) - full[t])),
+            # MC noise floor of the bias norm: sqrt(sum_d var_d / n).
+            "mc_se": float(np.sqrt((a.var(axis=0) / len(a)).sum())),
+            "std": float(a.std(axis=0).mean()),
+        }
+    return rounds
+
+
+def bias_variance_bench(quick: bool = True) -> dict:
+    """MC bias/variance of none vs inverse_prob weighting vs the exact
+    full-participation reference; see the module docstring for the two
+    sections. Emits BENCH_participation.json."""
+    R = 512 if quick else 2048
+    out = {
+        "config": {"G": MC_G, "K": MC_K, "D": MC_D, "lr": 0.1,
+                   "client_participation": 0.5, "mode": "uniform",
+                   "algorithm": "mtgc", "R": R,
+                   "one_round": {"E": 1, "H": 2, "T": 1},
+                   "compounded": {"E": 2, "H": 2, "T": 4}},
+        "one_round": {},
+        "compounded": {},
+    }
+    full1 = full_participation_reference(E=1, H=2, T=1)
+    for w in ("none", "inverse_prob"):
+        out["one_round"][w] = _mc_stats(w, full1, E=1, H=2, T=1, R=R,
+                                        report_rounds=(0,))
+    fullT = full_participation_reference(E=2, H=2, T=4)
+    for w in ("none", "inverse_prob"):
+        out["compounded"][w] = _mc_stats(w, fullT, E=2, H=2, T=4, R=R,
+                                         report_rounds=(0, 3))
+
+    one = out["one_round"]["inverse_prob"]["round_1"]
+    b_none = out["compounded"]["none"]["round_4"]
+    b_ht = out["compounded"]["inverse_prob"]["round_4"]
+    out["claims"] = {
+        # Exact unbiasedness at the single timescale: within a few noise
+        # floors (the hard 1/sqrt(R) gate lives in tests/test_weighting.py).
+        "one_round_inverse_prob_unbiased": bool(
+            one["bias"] < 4.0 * one["mc_se"]),
+        "none_bias_measurable_at_T": bool(
+            b_none["bias"] > 5 * b_none["mc_se"]),
+        "inverse_prob_reduces_compounded_bias": bool(
+            b_ht["bias"] < 0.67 * b_none["bias"]),
+    }
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / "BENCH_participation.json"
+    path.write_text(json.dumps(out, indent=2))
+    print(f"[fig_participation] bias/variance -> {path}")
+    for section in ("one_round", "compounded"):
+        for w, rounds in out[section].items():
+            for rnd, s in rounds.items():
+                print(f"  {section:10s} {w:13s} {rnd}: bias={s['bias']:.5f} "
+                      f"mc_se={s['mc_se']:.5f} std={s['std']:.5f} "
+                      f"(n={s['n']})")
+    print(f"[fig_participation] claims: {out['claims']}")
+    return out
+
+
+# ------------------------------------------------------ accuracy sweep
 
 
 def main(quick: bool = True) -> None:
@@ -58,7 +258,13 @@ def main(quick: bool = True) -> None:
     print(f"[fig_participation] claim checks: monotone-ish={mono} "
           f"mtgc-best-at-full={best}")
 
+    bias_variance_bench(quick=quick)
+
 
 if __name__ == "__main__":
     import sys
-    main(quick="--full" not in sys.argv)
+    quick = "--full" not in sys.argv
+    if "--bias-bench" in sys.argv:
+        bias_variance_bench(quick=quick)
+    else:
+        main(quick=quick)

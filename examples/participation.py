@@ -76,6 +76,55 @@ def main():
                   f"||z||^2 {float(hz.metrics.z_norm[r-1]):.3e}  "
                   f"||y||^2 {float(hz.metrics.y_norm[r-1]):.3e}")
 
+    # Bernoulli availability: under 'uniform' sampling the realized count
+    # fluctuates round to round, and cfg.participation_weighting picks the
+    # aggregation estimator -- 'none' renormalizes by whoever showed up,
+    # 'inverse_prob' divides by the expected count (Horvitz-Thompson) so the
+    # aggregates MTGC's z/y corrections track stay unbiased (under 'fixed'
+    # sampling, above, the two coincide). The price is variance: the
+    # disseminated aggregate is scaled by (realized / expected) count, so
+    # the unbiased estimator wants enough clients per group (here K=10 at
+    # 80% availability; at K=5 / 50% the multiplicative noise can blow up a
+    # nonlinear model). See benchmarks/fig_participation --bias-bench for
+    # the bias/variance numbers on the quadratic objective.
+    Gw, Kw, Ew = 4, 10, 2
+    rng_w = np.random.default_rng(2)
+    ds_w = make_classification(rng_w, num_samples=12000, num_classes=10,
+                               dim=32)
+    train_w, test_w = train_test_split(ds_w, rng_w)
+    idx_w = partition(train_w.y, Gw, Kw, mode="both_noniid", alpha=0.3,
+                      seed=2)
+    acc_w = jit_accuracy(apply, jnp.asarray(test_w.x), jnp.asarray(test_w.y))
+    for weighting in ("none", "inverse_prob"):
+        cfg = HFLConfig(num_groups=Gw, clients_per_group=Kw, local_steps=H,
+                        group_rounds=Ew, lr=0.1, algorithm="mtgc",
+                        client_participation=0.8,
+                        participation_mode="uniform",
+                        participation_weighting=weighting)
+
+        def eval_fn(prev, state, cfg=cfg):
+            cmask = round_masks(prev.rng, cfg)[0].client
+            i = jnp.argmax(cmask.reshape(-1))
+            params = as_tree(jax.tree.map(lambda v: v[i // Kw, i % Kw],
+                                          state.params))
+            return {"acc": acc_w(params)}
+
+        state = hfl_init(init(jax.random.PRNGKey(0)), cfg)
+        data = pack_client_shards({"x": train_w.x, "y": train_w.y}, idx_w,
+                                  group_rounds=Ew, local_steps=H,
+                                  batch_size=32, shards=8,
+                                  rng=np.random.default_rng(3),
+                                  key=jax.random.PRNGKey(3))
+        state, data, hz = run_rounds(make_global_round(loss_fn, cfg), state,
+                                     data, rounds, eval_every=5,
+                                     eval_fn=eval_fn)
+        print(f"\n== mtgc @ Bernoulli 80%, weighting={weighting} ==")
+        for i, r in enumerate(hz.eval_rounds):
+            active = int(round(float(hz.metrics.participation[r-1]) * Gw * Kw))
+            print(f"round {r:3d}  active {active:2d}/{Gw*Kw}  "
+                  f"loss {float(hz.metrics.loss[r-1].mean()):.4f}  "
+                  f"test acc {float(hz.evals['acc'][i]):.4f}")
+
 
 if __name__ == "__main__":
     main()

@@ -30,8 +30,20 @@ class HFLConfig:
                          round; a skipped group freezes all of its clients
                          and its y_j for the round.
       participation_mode: 'uniform' (independent Bernoulli draws) or 'fixed'
-                         (exactly max(1, round(C * n)) participants, sampled
-                         without replacement).
+                         (exactly the nearest count max(1, floor(C*n + 0.5))
+                         participants -- half-up, never banker's rounding;
+                         see participation.fixed_count -- sampled without
+                         replacement).
+      participation_weighting: 'none' divides masked aggregations by the
+                         *realized* participant count; 'inverse_prob'
+                         divides by the *expected* count (Horvitz-Thompson:
+                         ``inclusion_prob * n`` per level, the group level
+                         composing ``group_participation``), which keeps the
+                         group/global aggregates -- and the averages the
+                         z/y corrections track -- unbiased under Bernoulli
+                         sampling at the cost of variance. The two coincide
+                         under 'fixed' sampling and at full participation
+                         (see core/participation.py).
       use_fused_update:  route the MTGC local step through the fused Pallas
                          kernel (kernels/mtgc_update.py); interpret-mode off
                          TPU. Only valid for algorithm='mtgc'. Combined with
@@ -61,6 +73,7 @@ class HFLConfig:
     client_participation: float = 1.0
     group_participation: float = 1.0
     participation_mode: str = "uniform"
+    participation_weighting: str = "none"
     use_fused_update: bool = False
     use_flat_state: bool = True
 
@@ -79,6 +92,7 @@ class HFLConfig:
         assert 0.0 < self.client_participation <= 1.0
         assert 0.0 < self.group_participation <= 1.0
         assert self.participation_mode in ("uniform", "fixed")
+        assert self.participation_weighting in ("none", "inverse_prob")
         assert not (self.use_fused_update and self.algorithm != "mtgc"), (
             "use_fused_update fuses exactly g + z + y: mtgc only")
         return self

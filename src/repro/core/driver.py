@@ -242,17 +242,11 @@ class Horizon(NamedTuple):
     eval_rounds: np.ndarray
 
 
-@functools.lru_cache(maxsize=8)
-def _chunk_runner(round_fn: RoundFn, eval_fn, donate: bool):
-    """Build (and cache) the jitted scan-over-rounds chunk executor.
+_RUNNERS_PER_FN = 8
 
-    Cached on (round_fn, eval_fn, donate) identity so repeated
-    ``run_rounds`` calls with the same functions (chunked horizons,
-    benchmark reps) reuse the compiled executable instead of re-tracing.
-    Callers that build fresh closures per run (e.g. a benchmark sweep)
-    always miss, so the LRU also bounds how many dead executables (and
-    whatever arrays their closures captured) stay pinned.
-    """
+
+def _build_chunk_runner(round_fn: RoundFn, eval_fn, donate: bool):
+    """Build the jitted scan-over-rounds chunk executor."""
 
     @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
     def run_chunk(state, data: PackedBatches, eval_mask: jax.Array):
@@ -272,6 +266,45 @@ def _chunk_runner(round_fn: RoundFn, eval_fn, donate: bool):
         return (state, rng) + outs
 
     return run_chunk
+
+
+def _chunk_runner(round_fn: RoundFn, eval_fn, donate: bool):
+    """Fetch (or build) the chunk executor for this (round_fn, eval_fn).
+
+    The runner is cached *on the round function object itself*, so its
+    lifetime is exactly the round function's: repeated ``run_rounds`` calls
+    with the same functions (chunked horizons, benchmark reps) reuse the
+    compiled executable instead of re-tracing, and when the caller drops
+    the round function (e.g. a benchmark sweep building one per combo) the
+    executable -- and whatever arrays its closures captured -- become
+    collectable with it. A global cache keyed on identity (the previous
+    ``lru_cache``) instead kept up to ``maxsize`` dead round functions and
+    their executables pinned; keying on a semantic config signature would
+    alias distinct closures (two round fns with equal configs but different
+    captured loss/eval state must not share a runner).
+
+    Within one round function, runners are keyed by ``(id(eval_fn),
+    donate)``; the runner strongly references its ``eval_fn``, so the id
+    cannot be recycled while the entry lives. The per-fn cache is bounded
+    (FIFO eviction at ``_RUNNERS_PER_FN``) so a long-lived round function
+    driven with fresh eval closures per call cannot accumulate executables
+    without limit. Callables that reject attribute assignment (e.g. bound
+    methods) just get a fresh runner per call -- correct, merely uncached.
+    """
+    try:
+        cache = round_fn.__chunk_runners__
+    except AttributeError:
+        try:
+            round_fn.__chunk_runners__ = cache = {}
+        except AttributeError:
+            return _build_chunk_runner(round_fn, eval_fn, donate)
+    key = (None if eval_fn is None else id(eval_fn), bool(donate))
+    runner = cache.get(key)
+    if runner is None:
+        while len(cache) >= _RUNNERS_PER_FN:
+            cache.pop(next(iter(cache)))
+        cache[key] = runner = _build_chunk_runner(round_fn, eval_fn, donate)
+    return runner
 
 
 def run_rounds(

@@ -32,6 +32,19 @@ structure -- the scans and the jitted program shape are unchanged. With
 full participation the masked machinery is compiled out entirely, so the
 default path is bit-for-bit the paper engine.
 
+``cfg.participation_weighting`` picks the masked-mean estimator:
+``"none"`` divides by the realized participant count (the subpopulation
+mean), ``"inverse_prob"`` divides by the expected count (Horvitz-Thompson
+-- group client-means by ``inclusion_prob(C_k) * K``, the global
+group-mean by ``inclusion_prob(C_g) * G`` over *reachable* groups, with a
+reachable-but-empty group legitimately contributing zero). The same
+denominators flow into the z/y control-variable updates and the
+``correction_init='gradient'`` means, so the averages the corrections
+track stay unbiased under Bernoulli sampling instead of compounding the
+count randomness across both timescales (tests/test_weighting.py). State
+gating is weighting-independent: frozen replicas stay frozen, y updates
+still fire only for groups with at least one active client.
+
 Flat state (``cfg.use_flat_state``, default on): ``hfl_init`` packs params,
 ``z`` and ``dyn`` into contiguous ``[G, K, N]`` buffers (one per dtype) and
 ``y`` into ``[G, N]`` (see ``core.packer``); the round function detects the
@@ -58,7 +71,7 @@ import jax.numpy as jnp
 from repro.core import tree as tu
 from repro.core.config import HFLConfig
 from repro.core.packer import FlatBuffers, as_tree, is_flat, make_packer
-from repro.core.participation import round_masks
+from repro.core.participation import inclusion_prob, round_masks
 
 PyTree = Any
 
@@ -165,6 +178,13 @@ def make_global_round(
     G, K, H, E = cfg.num_groups, cfg.clients_per_group, cfg.local_steps, cfg.group_rounds
     lr = cfg.lr
     partial = not cfg.full_participation
+    # Horvitz-Thompson denominators (expected active counts per level);
+    # None = realized-count weighting.
+    ht = partial and cfg.participation_weighting == "inverse_prob"
+    cdenom = (inclusion_prob(cfg.client_participation, K,
+                             cfg.participation_mode) * K if ht else None)
+    gdenom = (inclusion_prob(cfg.group_participation, G,
+                             cfg.participation_mode) * G if ht else None)
     use_fused = cfg.use_fused_update
     if use_fused:
         from repro.kernels import ops as kops
@@ -178,6 +198,7 @@ def make_global_round(
         if partial:
             masks, rng = round_masks(state.rng, cfg)
             cmask = masks.client                              # [G, K]
+            gmask = masks.group                               # [G]
             n_active = jnp.maximum(jnp.sum(cmask), 1.0)
         else:
             cmask = None
@@ -301,9 +322,11 @@ def make_global_round(
             x, z, y, dyn, anchor = carry
             x_end, losses = local_phase(x, z, y, dyn, anchor, batches_eh)
 
-            # Group aggregation (line 8): xbar_j = mean over (active) clients.
+            # Group aggregation (line 8): xbar_j = mean over (active) clients
+            # (realized-count or expected-count denominator per weighting).
             if partial:
-                xbar = tu.tree_masked_mean(x_end, cmask, axis=1)    # [G, ...]
+                xbar = tu.tree_masked_mean(x_end, cmask, axis=1,
+                                           denom=cdenom)            # [G, ...]
             else:
                 xbar = tu.tree_mean(x_end, axis=1)                  # [G, ...]
             xbar_b = tu.tree_broadcast_to_axis(xbar, 1, K)          # [G, K, ...]
@@ -343,7 +366,8 @@ def make_global_round(
                     g0 = packer.flatten(g0)
                 if partial:
                     g0m = tu.tree_broadcast_to_axis(
-                        tu.tree_masked_mean(g0, cmask, axis=1), 1, K)
+                        tu.tree_masked_mean(g0, cmask, axis=1, denom=cdenom),
+                        1, K)
                     z = tu.tree_select(cmask, tu.tree_sub(g0m, g0), z)
                 else:
                     g0m = tu.tree_broadcast_to_axis(tu.tree_mean(g0, axis=1), 1, K)
@@ -363,8 +387,11 @@ def make_global_round(
                 if flat:
                     g0 = packer.flatten(g0)
                 if partial:
-                    gj = tu.tree_masked_mean(g0, cmask, axis=1)    # [G, ...]
-                    gg = tu.tree_masked_mean(gj, gact0, axis=0)    # [...]
+                    gj = tu.tree_masked_mean(g0, cmask, axis=1,
+                                             denom=cdenom)         # [G, ...]
+                    gg = (tu.tree_masked_mean(gj, gmask, axis=0, denom=gdenom)
+                          if ht else
+                          tu.tree_masked_mean(gj, gact0, axis=0))  # [...]
                 else:
                     gj = tu.tree_mean(g0, axis=1)                  # [G, ...]
                     gg = tu.tree_mean(gj, axis=0)                  # [...]
@@ -400,11 +427,14 @@ def make_global_round(
 
         # --- Global aggregation (line 10) --------------------------------
         if partial:
-            # A group with zero sampled clients contributes nothing: its
-            # activity indicator gates it out of the mean and the y update.
-            gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)  # [G]
-            xbar_j = tu.tree_masked_mean(x, cmask, axis=1)           # [G, ...]
-            xbar = tu.tree_masked_mean(xbar_j, gact, axis=0)         # [...]
+            # A group with zero sampled clients never feeds the y update or
+            # dissemination of its own replicas (gact gating). Under
+            # realized-count weighting it is also renormalized out of the
+            # global mean; under inverse_prob every *reachable* group enters
+            # the Horvitz-Thompson sum, an empty one contributing zero --
+            # see tree_group_global_mean for the recovery/estimation split.
+            xbar_j, xbar, gact = tu.tree_group_global_mean(
+                x, cmask, gmask if ht else None, gdenom)
             gdrift = tu.tree_masked_sq_norm(
                 tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G)), gact
             ) / jnp.maximum(jnp.sum(gact), 1.0)

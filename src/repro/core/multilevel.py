@@ -27,6 +27,15 @@ re-initializations fire only where an active leaf exists. Masks are data --
 the nested scans are unchanged, and with full participation the masked
 machinery is compiled out.
 
+``participation_weighting="inverse_prob"`` swaps every level's
+realized-count mean for the Horvitz-Thompson estimator: the level-m
+aggregation divides the chain-masked sum over its children by the
+*expected* live-child count ``inclusion_prob(participation[m]) * dims[m]``
+(a chain-live node whose subtree came up empty contributing a legitimate
+zero), mirroring the two-level engine's ``cfg.participation_weighting``.
+State gating (frozen subtrees, nu updates only where an active leaf
+exists) is weighting-independent.
+
 Flat state (``multilevel_init(..., use_flat_state=True)``): params and
 every nu level are packed into contiguous ``[*lead, N]`` buffers
 (core/packer.py) and the round adapts at trace time, mirroring the
@@ -46,7 +55,7 @@ import jax.numpy as jnp
 
 from repro.core import tree as tu
 from repro.core.packer import FlatBuffers, as_tree, is_flat, make_packer
-from repro.core.participation import sample_axis_mask
+from repro.core.participation import inclusion_prob, sample_axis_mask
 
 PyTree = Any
 
@@ -122,6 +131,41 @@ def _masked_levels(x: PyTree, leaf_act: jax.Array, to_level: int, dims: tuple):
     return vals, acts
 
 
+def _masked_levels_ht(x: PyTree, chains: tuple, leaf_act: jax.Array,
+                      to_level: int, dims: tuple, denoms: tuple):
+    """Horvitz-Thompson variant of :func:`_masked_levels`.
+
+    Only the *outermost* step (axis ``to_level``) of an aggregation event
+    is estimation: the level-(to_level+1) node values diverged since their
+    own deeper aggregations, so their chain-masked sum (``chains[m]``
+    marks nodes whose whole uplink chain to the root is live) divides by
+    the fixed expected live-child count ``denoms[to_level]``, a node with
+    no active leaf contributing an exact zero. Every deeper axis is
+    *recovery*: all active leaves below a level-(to_level+1) node hold
+    that node's identical disseminated value -- whose own weighting was
+    already applied when it was produced -- so realized-count means read
+    it back exactly; re-applying the fixed denominator there would rescale
+    the recovered value by realized/expected count (the same
+    recovery-vs-estimation split as the two-level engine's global step).
+    For the deepest block (``to_level == M-1``) the single step aggregates
+    leaves fresh out of a local phase -- pure estimation.
+
+    Activity gating (``acts``) is identical to the realized-count variant
+    so state updates freeze the same replicas under either weighting.
+    """
+    vals, acts = _masked_levels(x, leaf_act, to_level + 1, dims)
+    top, act_top = vals[to_level + 1], acts[to_level + 1]
+    # Subtrees with no active leaf contribute an exact zero to the HT sum
+    # (where, not multiplication: the recovery fallback is an unmasked
+    # mean that may include non-finite frozen replicas).
+    top0 = jax.tree.map(
+        lambda v: jnp.where(tu.expand_mask(act_top, v) != 0, v, 0), top)
+    vals[to_level] = tu.tree_masked_mean(
+        top0, chains[to_level], axis=to_level, denom=denoms[to_level])
+    acts[to_level] = (jnp.sum(act_top, axis=to_level) > 0).astype(jnp.float32)
+    return vals, acts
+
+
 def make_multilevel_round(
     loss_fn: Callable[[PyTree, PyTree], jax.Array],
     dims: Sequence[int],
@@ -130,12 +174,15 @@ def make_multilevel_round(
     *,
     participation: Sequence[float] | None = None,
     participation_mode: str = "uniform",
+    participation_weighting: str = "none",
 ) -> Callable[[MultiLevelState, PyTree], tuple[MultiLevelState, jax.Array]]:
     """Build one *global round* (= P_1 local iterations) as a jittable fn.
 
     batches leaves: [P_1, *dims, ...] -- one batch per local step per client.
     ``participation[m]`` (optional, one per level) is the per-round fraction
-    of live level-(m+1) uplinks. Returns (state, losses[P_1]).
+    of live level-(m+1) uplinks; ``participation_weighting`` selects the
+    realized-count ('none') or Horvitz-Thompson ('inverse_prob') masked
+    aggregation (see module docstring). Returns (state, losses[P_1]).
     """
     dims = tuple(dims)
     periods = tuple(periods)
@@ -143,11 +190,16 @@ def make_multilevel_round(
     assert len(periods) == M, "one period per level"
     for a, b in zip(periods, periods[1:]):
         assert a > b and a % b == 0, f"periods must nest: {periods}"
+    assert participation_weighting in ("none", "inverse_prob")
     if participation is not None:
         participation = tuple(float(p) for p in participation)
         assert len(participation) == M, "one participation fraction per level"
         assert all(0.0 < p <= 1.0 for p in participation), participation
     partial = participation is not None and any(p < 1.0 for p in participation)
+    ht = partial and participation_weighting == "inverse_prob"
+    denoms = (tuple(
+        inclusion_prob(participation[m], dims[m], participation_mode) * dims[m]
+        for m in range(M)) if ht else None)
 
     # Block ratios: level-m block = ratios[m-1] repetitions of level-(m+1)
     # block; the innermost block is P_M local steps.
@@ -159,7 +211,7 @@ def make_multilevel_round(
         vg = jax.vmap(vg)
 
     def local_step(carry, batch):
-        x, nus, act = carry
+        x, nus, act, chains = carry
         loss, g = vg(x, batch)
         d = g
         for m in range(M):
@@ -172,7 +224,7 @@ def make_multilevel_round(
         else:
             x = x_new
             lmean = jnp.mean(loss)
-        return (x, nus, act), lmean
+        return (x, nus, act, chains), lmean
 
     def _flat_local_phase(x, nus, act, batches_block):
         """Innermost P_M steps on a flat state: repack at the block boundary.
@@ -212,10 +264,10 @@ def make_multilevel_round(
         """Block of P_level steps followed by the level-``level`` aggregation."""
         if level == M:
             def run_inner(carry, batches_block):
-                x, nus, act = carry
+                x, nus, act, chains = carry
                 if is_flat(x):
                     x, losses = _flat_local_phase(x, nus, act, batches_block)
-                    return (x, nus, act), losses
+                    return (x, nus, act, chains), losses
                 return jax.lax.scan(local_step, carry, batches_block)
         else:
             inner = make_block(level + 1)
@@ -225,12 +277,18 @@ def make_multilevel_round(
 
         def block(carry, batches_block):
             carry, losses = run_inner(carry, batches_block)
-            x, nus, act = carry
+            x, nus, act, chains = carry
             nus = list(nus)
             if partial:
                 # Masked aggregation: child means at ``level`` and parent
-                # means at ``level - 1`` over active subtrees only.
-                vals, acts = _masked_levels(x, act, level - 1, dims)
+                # means at ``level - 1`` -- over active subtrees only
+                # (realized count) or chain-masked Horvitz-Thompson sums
+                # over expected counts (inverse_prob).
+                if ht:
+                    vals, acts = _masked_levels_ht(
+                        x, chains, act, level - 1, dims, denoms)
+                else:
+                    vals, acts = _masked_levels(x, act, level - 1, dims)
                 s, a_val = vals[level], vals[level - 1]
                 a_to_s = (_broadcast_back(a_val, dims[:level], level - 1)
                           if level >= 1 else a_val)
@@ -261,7 +319,7 @@ def make_multilevel_round(
                     nus[m] = tu.tree_zeros_like(nus[m])
                 # Dissemination: every client under a parent restarts from it.
                 x = _broadcast_back(a, dims, level - 1)
-            return (x, tuple(nus), act), losses
+            return (x, tuple(nus), act, chains), losses
 
         return block
 
@@ -271,14 +329,17 @@ def make_multilevel_round(
         if partial:
             mkey, rng = jax.random.split(state.rng)
             keys = jax.random.split(mkey, M)
-            leaf_act = None
+            leaf_act, chains = None, []
             for m in range(M):
                 mask = sample_axis_mask(
                     keys[m], dims[: m + 1], participation[m], participation_mode)
                 leaf_act = mask if leaf_act is None else (
                     leaf_act.reshape(leaf_act.shape + (1,)) * mask)
+                # chains[m]: level-(m+1) node's whole uplink chain is live.
+                chains.append(leaf_act)
+            chains = tuple(chains)
         else:
-            leaf_act = None
+            leaf_act, chains = None, ()
             rng = state.rng
 
         # Reshape flat [P_1, ...] leading axis into the nested block shape.
@@ -289,8 +350,9 @@ def make_multilevel_round(
 
         nested = jax.tree.map(_reshape, batches)
         # The top block's scan consumes axis 0 (ratio r_1); feed it whole.
-        (carry, losses) = top((state.params, state.nus, leaf_act), nested)
-        x, nus, _ = carry
+        (carry, losses) = top(
+            (state.params, state.nus, leaf_act, chains), nested)
+        x, nus, _, _ = carry
         return MultiLevelState(params=x, nus=nus, rng=rng), losses.reshape(-1)
 
     return round_fn

@@ -11,6 +11,24 @@ Masks are drawn from the engine state's PRNG key, so a host data pipeline
 can call :func:`round_masks` with ``state.rng`` *before* the round to skip
 packing batches for inactive clients -- it reproduces exactly the masks the
 jitted round function derives internally.
+
+Weighting (``cfg.participation_weighting``): masked aggregations can either
+divide by the *realized* participant count (``"none"``, the historical
+behaviour) or by the *expected* count ``inclusion_prob * n``
+(``"inverse_prob"``, a Horvitz-Thompson estimator). Under Bernoulli
+(``uniform``) sampling the realized-count mean is unbiased only for a
+single aggregation of mask-independent values; once the aggregate feeds
+back into the next timescale (E group rounds per global round, the z / y
+control-variable updates) its count randomness compounds into a systematic
+bias of the tracked group/global averages. ``inverse_prob`` replaces the
+random denominator with the fixed expected count: the one-shot aggregate
+becomes exactly unbiased (empty draws legitimately contribute zero instead
+of renormalizing), and the MTGC corrections absorb -- rather than compound
+-- the remaining dissemination noise (gated by tests/test_weighting.py).
+Under ``fixed`` sampling the realized count *is* the expected count, so the
+two weightings coincide there. The price of ``inverse_prob`` is variance: a
+round with fewer participants than expected disseminates a down-scaled
+aggregate (see the bias/variance section of benchmarks/fig_participation).
 """
 from __future__ import annotations
 
@@ -20,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 MODES = ("uniform", "fixed")
+WEIGHTINGS = ("none", "inverse_prob")
 
 
 class ParticipationMasks(NamedTuple):
@@ -34,8 +53,31 @@ class ParticipationMasks(NamedTuple):
 
 
 def fixed_count(frac: float, n: int) -> int:
-    """Participants per parent under 'fixed' sampling: never zero."""
-    return max(1, int(round(frac * n)))
+    """Participants per parent under 'fixed' sampling: never zero.
+
+    Nearest count with half-up tie-breaking: Python's ``round`` is
+    banker's rounding (``round(2.5) == 2``), which would give 2 of 5
+    participants at ``frac=0.5`` instead of the documented nearest count 3.
+    """
+    return max(1, int(frac * n + 0.5))
+
+
+def inclusion_prob(frac: float, n: int, mode: str) -> float:
+    """Per-unit inclusion probability of :func:`sample_axis_mask`.
+
+    'uniform' draws each unit independently with probability ``frac``;
+    'fixed' includes exactly ``fixed_count(frac, n)`` of ``n`` units, so
+    each unit is included with probability ``fixed_count / n`` (and the
+    realized count always equals the expected count -- inverse-probability
+    weighting coincides with realized-count weighting in that mode).
+    """
+    if frac >= 1.0:
+        return 1.0
+    if mode == "uniform":
+        return float(frac)
+    if mode == "fixed":
+        return fixed_count(frac, n) / n
+    raise ValueError(f"unknown participation mode {mode!r}")
 
 
 def sample_axis_mask(key: jax.Array, shape: tuple, frac: float, mode: str) -> jax.Array:

@@ -56,27 +56,80 @@ def tree_select(mask: jax.Array, a: PyTree, b: PyTree) -> PyTree:
     )
 
 
-def tree_masked_mean(a: PyTree, mask: jax.Array, axis: int) -> PyTree:
+def tree_masked_mean(a: PyTree, mask: jax.Array, axis: int,
+                     denom: float | None = None) -> PyTree:
     """Mean over ``axis`` counting only entries with mask != 0.
 
-    ``mask`` spans the leading topology axes of every leaf. Slices with no
-    active entries fall back to the unmasked mean -- callers gate those
-    slices out downstream (their activity indicator is zero), so the
-    fallback value is never observed, it just keeps the program NaN-free.
-    Masked-out entries go through ``where`` (not multiplication) so non-finite
-    values in frozen replicas cannot poison the aggregate.
+    ``mask`` spans the leading topology axes of every leaf.
+
+    With ``denom=None`` (realized-count weighting) the masked sum is
+    divided by the number of active entries; slices with no active entries
+    fall back to the unmasked mean -- callers gate those slices out
+    downstream (their activity indicator is zero), so the fallback value is
+    never observed, it just keeps the program NaN-free (gated by the
+    all-empty-group freeze tests in tests/test_weighting.py).
+
+    With a fixed ``denom`` (inverse-probability weighting: the *expected*
+    active count ``inclusion_prob * axis_size``, see
+    ``participation.inclusion_prob``) the masked sum is divided by that
+    constant instead: the Horvitz-Thompson estimator of the full mean. No
+    fallback is needed -- an all-empty slice legitimately estimates zero
+    (its realizations are part of what makes the estimator unbiased), and
+    callers still gate state updates on the activity indicator.
+
+    Masked-out entries go through ``where`` (not multiplication) either
+    way, so non-finite values in frozen replicas cannot poison the
+    aggregate.
     """
+    if denom is not None:
+        def _ht(x):
+            w = expand_mask(mask, x) != 0
+            return jnp.sum(jnp.where(w, x, 0), axis=axis) / denom
+
+        return jax.tree.map(_ht, a)
+
     cnt = jnp.sum(mask, axis=axis)
     has = cnt != 0
-    denom = jnp.maximum(cnt, 1)
+    dn = jnp.maximum(cnt, 1)
 
     def _m(x):
         w = expand_mask(mask, x) != 0
         s = jnp.sum(jnp.where(w, x, 0), axis=axis)
-        mm = s / expand_mask(denom, s)
+        mm = s / expand_mask(dn, s)
         return jnp.where(expand_mask(has, mm), mm, jnp.mean(x, axis=axis))
 
     return jax.tree.map(_m, a)
+
+
+def tree_group_global_mean(x: PyTree, cmask: jax.Array,
+                           gmask: jax.Array | None = None,
+                           gdenom: float | None = None):
+    """Global aggregate of disseminated ``[G, K, ...]`` replicas under
+    partial participation (Alg. 1 line 10 as both round engines compute it).
+
+    Axis 1 is *recovery*, not estimation: every active replica of group j
+    holds the identical disseminated xbar_j (whose own weighting was
+    applied when it was produced at the last group aggregation), so the
+    realized-count mean reads it back exactly under either weighting --
+    a fixed denominator here would double-scale. Axis 0 is estimation:
+    with ``gdenom=None`` the realized-count mean over groups with at least
+    one active client; with a fixed ``gdenom`` (inverse-probability
+    weighting: expected reachable-group count) the Horvitz-Thompson sum
+    over the *reachable*-group mask ``gmask``, an empty reachable group
+    contributing an exact zero (``where``, not multiplication -- the
+    recovery fallback is an unmasked mean that may include non-finite
+    frozen replicas).
+
+    Returns ``(xbar_j [G, ...], xbar [...], gact [G])``.
+    """
+    gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
+    xbar_j = tree_masked_mean(x, cmask, axis=1)
+    if gdenom is None:
+        return xbar_j, tree_masked_mean(xbar_j, gact, axis=0), gact
+    xbar_j0 = jax.tree.map(
+        lambda v: jnp.where(expand_mask(gact, v) != 0, v, 0), xbar_j)
+    xbar = tree_masked_mean(xbar_j0, gmask, axis=0, denom=gdenom)
+    return xbar_j, xbar, gact
 
 
 def tree_masked_sq_norm(a: PyTree, mask: jax.Array):

@@ -25,6 +25,22 @@ oracle), but with
   the entire flat model. Flat states require params and corrections in one
   dtype (no ``correction_dtype``).
 
+Partial participation (``client_participation`` / ``group_participation``
+on :func:`make_sharded_round`) threads the same per-round ``[G]`` / ``[G,
+K]`` masks as the simulator engine through the production round: masks are
+drawn from ``state.rng`` exactly like ``core.participation.round_masks``
+(host pipelines and the jitted round agree on who participates), inactive
+replicas keep their params/z frozen via the same ``where`` gating the
+fused Pallas kernel applies in-register, aggregations become masked means
+with the engine's weighting semantics (``participation_weighting="none" |
+"inverse_prob"``; see core/participation.py), and y updates fire only for
+groups with an active client. Masks are data: the program shape -- and
+under GSPMD the collective schedule -- is unchanged, inactive clients'
+contributions folding to no-ops inside the same all-reduces, and with
+full participation (the default) the masked machinery is compiled out
+bit-for-bit. Parity with the simulator engine under partial participation
+is gated in tests/test_weighting.py.
+
 Under GSPMD this lowers to exactly the paper's two-timescale collective
 schedule; local steps generate zero cross-client traffic.
 
@@ -54,6 +70,7 @@ import jax.numpy as jnp
 
 from repro.core import tree as tu
 from repro.core.packer import FlatBuffers, is_flat, make_packer
+from repro.core.participation import inclusion_prob, sample_hfl_masks
 
 PyTree = Any
 
@@ -62,23 +79,27 @@ class ShardedHFLState(NamedTuple):
     params: PyTree   # [G, K, ...] per-client replicas
     z: PyTree        # [G, K, ...] client->group corrections
     y: PyTree        # [G, ...]    group->global corrections
+    rng: jax.Array | None = None  # participation sampling key (None = full)
 
 
 class ShardedMetrics(NamedTuple):
-    loss: jax.Array          # [E, H] mean loss per local step
+    loss: jax.Array          # [E, H] mean loss per local step (active clients)
     grad_norm: jax.Array     # scalar, last step
     z_norm: jax.Array
     y_norm: jax.Array
+    participation: jax.Array  # fraction of clients active this round
 
 
 def sharded_init(params0: PyTree, G: int, K: int,
                  *, use_flat_state: bool = False,
-                 correction_dtype=None) -> ShardedHFLState:
+                 correction_dtype=None,
+                 rng: jax.Array | None = None) -> ShardedHFLState:
     """Stacked per-client state. ``correction_dtype`` stores z/y in a
     narrower dtype (bf16) -- a beyond-paper memory optimization; the update
     math still runs in the params' dtype. Incompatible with flat states
     (one contiguous buffer per dtype requires params and corrections to
-    share it)."""
+    share it). ``rng`` seeds per-round participation sampling; required by
+    rounds built with partial participation, ignored otherwise."""
     if use_flat_state:
         assert correction_dtype is None, \
             "flat state packs params and corrections into one buffer per dtype"
@@ -89,13 +110,14 @@ def sharded_init(params0: PyTree, G: int, K: int,
             packer,
         )
         return ShardedHFLState(
-            params=stacked, z=packer.zeros((G, K)), y=packer.zeros((G,))
+            params=stacked, z=packer.zeros((G, K)), y=packer.zeros((G,)),
+            rng=rng,
         )
     stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0)
     cdt = correction_dtype
     z0 = jax.tree.map(lambda x: jnp.zeros(x.shape, cdt or x.dtype), stacked)
     y0 = jax.tree.map(lambda x: jnp.zeros((G,) + x.shape, cdt or x.dtype), params0)
-    return ShardedHFLState(params=stacked, z=z0, y=y0)
+    return ShardedHFLState(params=stacked, z=z0, y=y0, rng=rng)
 
 
 def make_sharded_round(
@@ -103,6 +125,10 @@ def make_sharded_round(
     *, E: int, H: int, lr: float, algorithm: str = "mtgc",
     use_fused_update: bool = False,
     fused_mode: str | None = None,
+    client_participation: float = 1.0,
+    group_participation: float = 1.0,
+    participation_mode: str = "uniform",
+    participation_weighting: str = "none",
 ) -> Callable[[ShardedHFLState, PyTree], tuple[ShardedHFLState, ShardedMetrics]]:
     """One MTGC global round. batches: leaves [E, H, A, G, K, chunk, ...].
 
@@ -115,86 +141,148 @@ def make_sharded_round(
     adapts at trace time to flat or pytree states (``sharded_init``'s
     ``use_flat_state``); narrow corrections (``sharded_init``'s
     ``correction_dtype``) are cast to f32 inside the update either way.
+
+    ``client_participation`` / ``group_participation`` < 1 enable the
+    engine's partial-participation semantics on the production round:
+    per-round masks drawn from ``state.rng`` (``sharded_init(...,
+    rng=...)``; same key schedule as ``core.participation.round_masks``),
+    frozen inactive replicas, masked aggregations under
+    ``participation_weighting`` ("none" realized-count | "inverse_prob"
+    Horvitz-Thompson), and gated z/y updates -- matching ``core.engine``
+    state-for-state (tests/test_weighting.py). The participation mask rides
+    into the fused Pallas kernel in-register.
     """
     use_corr = algorithm == "mtgc"
     assert not (use_fused_update and not use_corr), \
         "use_fused_update fuses exactly g/A + z + y: mtgc only"
+    assert participation_mode in ("uniform", "fixed")
+    assert participation_weighting in ("none", "inverse_prob")
+    assert 0.0 < client_participation <= 1.0
+    assert 0.0 < group_participation <= 1.0
     if use_fused_update:
         from repro.kernels import ops as kops
     fmode = fused_mode or "auto"
+    partial = client_participation < 1.0 or group_participation < 1.0
+    ht = partial and participation_weighting == "inverse_prob"
     vg = jax.vmap(jax.vmap(jax.value_and_grad(loss_fn)))  # over [G, K]
 
     def round_fn(state: ShardedHFLState, batches: PyTree):
-        x, z, y = state
+        x, z, y = state.params, state.z, state.y
         flat = is_flat(x)
         packer = x.packer if flat else None
+        G, K = jax.tree.leaves(x)[0].shape[:2]
+
+        if partial:
+            if state.rng is None:
+                raise ValueError(
+                    "partial participation draws per-round masks from the "
+                    "state: build it with sharded_init(..., rng=key)")
+            # Identical key schedule to core.participation.round_masks, so
+            # host pipelines and the simulator engine agree on the masks.
+            mkey, rng = jax.random.split(state.rng)
+            masks = sample_hfl_masks(
+                mkey, G, K, client_participation, group_participation,
+                participation_mode)
+            cmask, gmask = masks.client, masks.group       # [G, K], [G]
+            n_active = jnp.maximum(jnp.sum(cmask), 1.0)
+            cdenom = (inclusion_prob(client_participation, K,
+                                     participation_mode) * K if ht else None)
+            gdenom = (inclusion_prob(group_participation, G,
+                                     participation_mode) * G if ht else None)
+        else:
+            cmask = None
+            rng = state.rng
+
         if use_corr:
             # Alg. 1 line 3 (with the experimental zero init of footnote 2):
-            # the client-group correction restarts every global round; only
-            # y persists across rounds.
-            z = tu.tree_zeros_like(z)
+            # the client-group correction restarts every global round --
+            # for participants only; frozen clients keep their z. Only y
+            # persists across rounds.
+            z0 = tu.tree_zeros_like(z)
+            z = tu.tree_select(cmask, z0, z) if partial else z0
+
+        def step_loss_mean(lsum_gk, inv_a):
+            """Scalar step loss from the per-client sums over A chunks."""
+            lpc = lsum_gk * inv_a
+            if partial:
+                return jnp.sum(jnp.where(cmask != 0, lpc, 0)) / n_active
+            return jnp.mean(lpc)
+
+        def step_grad_norm(g, inv_a):
+            if partial:
+                return tu.tree_masked_sq_norm(g, cmask) * inv_a * inv_a
+            return tu.tree_sq_norm(g) * inv_a * inv_a
 
         def accum_grads(x_t, batch_h):
-            """Mean loss + summed grads over the A microbatch chunks."""
+            """Per-client summed loss [G, K] + summed grads over the A
+            microbatch chunks."""
             def accum(acc, batch_a):
                 gsum, lsum = acc
                 loss, g = vg(x_t, batch_a)
-                return (tu.tree_add(gsum, g), lsum + jnp.mean(loss)), None
+                return (tu.tree_add(gsum, g), lsum + loss), None
 
             A = jax.tree.leaves(batch_h)[0].shape[0]
             (g, lsum), _ = jax.lax.scan(
-                accum, (tu.tree_zeros_like(x_t), jnp.zeros((), jnp.float32)), batch_h
+                accum,
+                (tu.tree_zeros_like(x_t), jnp.zeros((G, K), jnp.float32)),
+                batch_h,
             )
-            return g, lsum / A, 1.0 / A
+            return g, lsum, 1.0 / A
 
         def local_step(carry, batch_h):
             # batch_h leaves: [A, G, K, chunk, ...]
             x, z, y = carry
-            g, lmean, inv_a = accum_grads(x, batch_h)
+            g, lsum, inv_a = accum_grads(x, batch_h)
             if use_corr and use_fused_update:
                 # Fused AXPY through VMEM: g/A + z + y and the update in one
                 # pass (kernels/mtgc_update.py). The [G, K, n]-layout kernel
                 # broadcasts y across clients via its block index map, so y
-                # is never materialized per client even per leaf.
+                # is never materialized per client even per leaf -- and the
+                # participation mask gates frozen replicas in-register.
                 def fused_leaf(xi, gi, zi, yi):
                     Gl, Kl = xi.shape[:2]
                     out = kops.mtgc_update_flat(
                         xi.reshape(Gl, Kl, -1), gi.reshape(Gl, Kl, -1),
                         zi.reshape(Gl, Kl, -1), yi.reshape(Gl, -1),
-                        lr=lr, g_scale=inv_a, mode=fmode)
+                        cmask, lr=lr, g_scale=inv_a, mode=fmode)
                     return out.reshape(xi.shape)
 
                 x = jax.tree.map(fused_leaf, x, g, z, y)
             elif use_corr:
-                x = jax.tree.map(
+                x_new = jax.tree.map(
                     lambda xi, gi, zi, yi: xi - lr * (
                         gi * inv_a + zi.astype(gi.dtype) + yi[:, None].astype(gi.dtype)
                     ),
                     x, g, z, y,
                 )
+                x = tu.tree_select(cmask, x_new, x) if partial else x_new
             else:
-                x = jax.tree.map(lambda xi, gi: xi - lr * gi * inv_a, x, g)
-            return (x, z, y), (lmean, tu.tree_sq_norm(g) * inv_a * inv_a)
+                x_new = jax.tree.map(lambda xi, gi: xi - lr * gi * inv_a, x, g)
+                x = tu.tree_select(cmask, x_new, x) if partial else x_new
+            return (x, z, y), (step_loss_mean(lsum, inv_a),
+                               step_grad_norm(g, inv_a))
 
         def local_phase_flat(x, z, y, batch_e):
             """H local steps on a flat state, repacking at the phase edge.
 
             z/y are constant inside the phase: their sum collapses into one
             precomputed correction tensor (non-fused) or feeds the single
-            batched Pallas call over the whole flat model (fused).
+            batched Pallas call over the whole flat model (fused); the
+            participation gate folds into the same expression.
             """
             if use_corr and use_fused_update:
                 def step(xf, batch_h):
-                    g, lmean, inv_a = accum_grads(packer.unflatten(xf), batch_h)
+                    g, lsum, inv_a = accum_grads(packer.unflatten(xf), batch_h)
                     gf = packer.flatten(g)
                     xf = FlatBuffers(
                         {k: kops.mtgc_update_flat(
                             xf.bufs[k], gf.bufs[k], z.bufs[k], y.bufs[k],
-                            lr=lr, g_scale=inv_a, mode=fmode)
+                            cmask, lr=lr, g_scale=inv_a, mode=fmode)
                          for k in xf.bufs},
                         packer,
                     )
-                    return xf, (lmean, tu.tree_sq_norm(gf) * inv_a * inv_a)
+                    return xf, (step_loss_mean(lsum, inv_a),
+                                step_grad_norm(gf, inv_a))
 
                 return jax.lax.scan(step, x, batch_e)
 
@@ -203,15 +291,23 @@ def make_sharded_round(
                 if use_corr else None)
 
             def step(x_t, batch_h):
-                g, lmean, inv_a = accum_grads(x_t, batch_h)
+                g, lsum, inv_a = accum_grads(x_t, batch_h)
                 if use_corr:
-                    x_t = jax.tree.map(
+                    x_new = jax.tree.map(
                         lambda xi, gi, ci: xi - lr * (gi * inv_a + ci),
                         x_t, g, corr_t)
                 else:
-                    x_t = jax.tree.map(
+                    x_new = jax.tree.map(
                         lambda xi, gi: xi - lr * gi * inv_a, x_t, g)
-                return x_t, (lmean, tu.tree_sq_norm(g) * inv_a * inv_a)
+                if partial:
+                    x_t = jax.tree.map(
+                        lambda xn, xi: jnp.where(
+                            tu.expand_mask(cmask, xn) != 0, xn, xi),
+                        x_new, x_t)
+                else:
+                    x_t = x_new
+                return x_t, (step_loss_mean(lsum, inv_a),
+                             step_grad_norm(g, inv_a))
 
             x_t, out = jax.lax.scan(step, packer.unflatten(x), batch_e)
             return packer.flatten(x_t), out
@@ -225,47 +321,64 @@ def make_sharded_round(
                 (x, z, y), (losses, gnorm) = jax.lax.scan(
                     local_step, (x, z, y), batch_e)
             with jax.named_scope("group_agg"):
-                xbar = tu.tree_mean(x, axis=1)                   # [G, ...]
+                # Group aggregation: mean over (active) clients; under
+                # inverse_prob the masked sum divides by the expected count.
+                xbar = (tu.tree_masked_mean(x, cmask, axis=1, denom=cdenom)
+                        if partial else tu.tree_mean(x, axis=1))  # [G, ...]
             if use_corr:
                 # z_i += (x_{i,H} - xbar_j) / (H * lr)   (Alg. 1 line 9)
-                z = jax.tree.map(
+                z_new = jax.tree.map(
                     lambda zi, xe, xb: (
                         zi.astype(jnp.float32)
                         + (xe.astype(jnp.float32) - xb[:, None].astype(jnp.float32)) / (H * lr)
                     ).astype(zi.dtype),
                     z, x, xbar,
                 )
-            # dissemination: every client restarts from its group model
-            x = jax.tree.map(
+                z = tu.tree_select(cmask, z_new, z) if partial else z_new
+            # dissemination: every active client restarts from its group
+            # model; frozen clients keep their params.
+            xbar_b = jax.tree.map(
                 lambda xb, xi: jnp.broadcast_to(xb[:, None], xi.shape), xbar, x
             )
+            x = tu.tree_select(cmask, xbar_b, x) if partial else xbar_b
             return (x, z, y), (losses, gnorm)
 
         (x, z, y), (losses, gnorms) = jax.lax.scan(group_round, (x, z, y), batches)
 
         # --- global aggregation + y update (Alg. 1 lines 10-11) ----------
-        xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)            # clients equal
-        with jax.named_scope("global_agg"):
-            xbar = tu.tree_mean(xbar_j, axis=0)
+        if partial:
+            with jax.named_scope("global_agg"):
+                # Same recovery-then-estimate aggregate as the simulator
+                # engine (tree_group_global_mean), keeping the two round
+                # builders in lockstep for the parity gates.
+                xbar_j, xbar, gact = tu.tree_group_global_mean(
+                    x, cmask, gmask if ht else None, gdenom)
+        else:
+            xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)    # clients equal
+            with jax.named_scope("global_agg"):
+                xbar = tu.tree_mean(xbar_j, axis=0)
         if use_corr:
-            y = jax.tree.map(
+            y_new = jax.tree.map(
                 lambda yj, xj, xg: (
                     yj.astype(jnp.float32)
                     + (xj.astype(jnp.float32) - xg.astype(jnp.float32)) / (H * E * lr)
                 ).astype(yj.dtype),
                 y, xbar_j, xbar,
             )
-        G, K = jax.tree.leaves(x)[0].shape[:2]
-        x = jax.tree.map(
+            y = tu.tree_select(gact, y_new, y) if partial else y_new
+        x_glob = jax.tree.map(
             lambda xg: jnp.broadcast_to(xg, (G, K) + xg.shape), xbar
         )
+        x = tu.tree_select(cmask, x_glob, x) if partial else x_glob
         metrics = ShardedMetrics(
             loss=losses,
             grad_norm=gnorms[-1, -1],
             z_norm=tu.tree_sq_norm(z) / (G * K),
             y_norm=tu.tree_sq_norm(y) / G,
+            participation=(jnp.sum(cmask) / (G * K)) if partial
+            else jnp.ones((), jnp.float32),
         )
-        return ShardedHFLState(params=x, z=z, y=y), metrics
+        return ShardedHFLState(params=x, z=z, y=y, rng=rng), metrics
 
     return round_fn
 
@@ -292,6 +405,16 @@ def main() -> None:
                     help="flat-buffer state (core/packer.py)")
     ap.add_argument("--fused", action="store_true",
                     help="fused Pallas mtgc_update local step")
+    ap.add_argument("--client-participation", type=float, default=1.0,
+                    help="fraction of each group's clients sampled per round")
+    ap.add_argument("--group-participation", type=float, default=1.0,
+                    help="fraction of groups reachable per round")
+    ap.add_argument("--participation-mode", default="uniform",
+                    choices=("uniform", "fixed"))
+    ap.add_argument("--weighting", default="none",
+                    choices=("none", "inverse_prob"),
+                    help="masked-aggregation weighting: realized count or "
+                         "inverse inclusion probability (Horvitz-Thompson)")
     ap.add_argument("--chunk", type=int, default=0,
                     help="global rounds per compiled scan dispatch "
                          "(core/driver.py run_rounds); 0 = one donated "
@@ -319,10 +442,17 @@ def main() -> None:
     print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M algo={args.algorithm}")
 
     G, K, E, H = args.groups, args.clients, args.E, args.H
-    state = sharded_init(params, G, K, use_flat_state=args.flat)
+    partial = args.client_participation < 1.0 or args.group_participation < 1.0
+    state = sharded_init(
+        params, G, K, use_flat_state=args.flat,
+        rng=jax.random.PRNGKey(args.seed + 2) if partial else None)
     round_fn = make_sharded_round(
         bundle.loss, E=E, H=H, lr=args.lr, algorithm=args.algorithm,
-        use_fused_update=args.fused)
+        use_fused_update=args.fused,
+        client_participation=args.client_participation,
+        group_participation=args.group_participation,
+        participation_mode=args.participation_mode,
+        participation_weighting=args.weighting)
     data = pack_lm_shards(
         toks, num_groups=G, clients_per_group=K, group_rounds=E,
         local_steps=H, microbatches=1, batch_size=args.batch,

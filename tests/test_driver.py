@@ -260,6 +260,67 @@ def test_packed_batches_is_a_pytree():
         (E, H, None)
 
 
+# --------------------------------------------------- chunk-runner caching
+
+
+def test_chunk_runner_cached_per_round_fn_and_collectable():
+    """Repeated run_rounds with the same round function reuse one compiled
+    runner (no retrace); dropping the round function releases the runner
+    (the old identity-keyed lru_cache kept dead executables pinned)."""
+    import gc
+    import weakref
+
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.05, algorithm="mtgc")
+    base = make_global_round(quad_loss, cfg)
+    traces = []
+
+    def rf(state, batches):
+        traces.append(1)
+        return base(state, batches)
+
+    run_rounds(rf, hfl_init({"w": jnp.zeros(D)}, cfg), make_data(), 2,
+               donate=False)
+    assert len(traces) == 1 and len(rf.__chunk_runners__) == 1
+    runner = rf.__chunk_runners__[(None, False)]
+    run_rounds(rf, hfl_init({"w": jnp.zeros(D)}, cfg), make_data(), 2,
+               donate=False)
+    # Cache hit: same runner object, no second trace.
+    assert len(traces) == 1
+    assert rf.__chunk_runners__[(None, False)] is runner
+
+    ref = weakref.ref(runner)
+    del runner, rf
+    gc.collect()
+    assert ref() is None, "dead round fn still pins its compiled runner"
+
+
+def test_chunk_runner_distinct_eval_fns_get_distinct_runners():
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.05, algorithm="mtgc")
+    rf = make_global_round(quad_loss, cfg)
+
+    def ev1(prev, state):
+        return {"v": state.round}
+
+    def ev2(prev, state):
+        return {"v": state.round + 1}
+
+    for ev in (ev1, ev2, ev1):
+        run_rounds(rf, hfl_init({"w": jnp.zeros(D)}, cfg), make_data(), 2,
+                   eval_fn=ev, donate=False)
+    assert len(rf.__chunk_runners__) == 2
+
+    # Fresh eval closures per call must not grow the cache without bound.
+    from repro.core.driver import _RUNNERS_PER_FN
+    evs = []  # keep ids alive so every closure is a distinct live key
+    for _ in range(_RUNNERS_PER_FN + 3):
+        evs.append(lambda prev, state: {"v": state.round})
+        run_rounds(rf, hfl_init({"w": jnp.zeros(D)}, cfg), make_data(), 2,
+                   eval_fn=evs[-1], donate=False)
+    assert len(rf.__chunk_runners__) <= _RUNNERS_PER_FN
+
+
 # --------------------------------------------------- sharded round parity
 
 

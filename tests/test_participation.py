@@ -73,6 +73,69 @@ def test_tree_select_keeps_frozen_bits():
 # ----------------------------------------------------------- mask sampling
 
 
+def test_fixed_count_is_nearest_half_up():
+    """Nearest-count semantics: half-up tie-break, never banker's rounding
+    (round(0.5 * 5) == 2 would under-sample), never zero."""
+    assert pp.fixed_count(0.5, 5) == 3      # the banker's-rounding trap
+    assert pp.fixed_count(0.5, 13) == 7
+    assert pp.fixed_count(0.5, 4) == 2
+    assert pp.fixed_count(0.5, 2) == 1
+    assert pp.fixed_count(0.3, 5) == 2      # 1.5 rounds up
+    assert pp.fixed_count(0.7, 5) == 4      # 3.5 rounds up
+    assert pp.fixed_count(0.1, 5) == 1
+    assert pp.fixed_count(0.01, 3) == 1     # never zero
+    assert pp.fixed_count(1.0, 7) == 7
+    assert pp.fixed_count(1.0 - 1e-9, 7) == 7
+
+
+def test_inclusion_prob_modes():
+    assert pp.inclusion_prob(0.5, 4, "uniform") == 0.5
+    assert pp.inclusion_prob(1.0, 4, "uniform") == 1.0
+    assert pp.inclusion_prob(0.5, 5, "fixed") == pytest.approx(3 / 5)
+    assert pp.inclusion_prob(1.0, 5, "fixed") == 1.0
+    with pytest.raises(ValueError):
+        pp.inclusion_prob(0.5, 4, "bogus")
+
+
+def test_sample_axis_mask_frac_one_vs_almost_one():
+    """frac=1.0 short-circuits to ones without consuming randomness; an
+    epsilon below 1.0 must still produce all-ones masks in both modes
+    (fixed: fixed_count == n; uniform: the f32 threshold rounds to 1.0)."""
+    key = jax.random.PRNGKey(0)
+    shape = (3, 5)
+    exact = pp.sample_axis_mask(key, shape, 1.0, "fixed")
+    np.testing.assert_array_equal(np.asarray(exact), 1.0)
+    for mode in ("uniform", "fixed"):
+        almost = pp.sample_axis_mask(key, shape, 1.0 - 1e-9, mode)
+        np.testing.assert_array_equal(np.asarray(almost), 1.0, err_msg=mode)
+
+
+def test_host_and_engine_masks_agree_under_weighting():
+    """round_masks host/device agreement survives the weighting config
+    field: the host-derived mask still names exactly the frozen replicas
+    of an inverse_prob uniform-sampling round."""
+    G, K, E, H = 3, 4, 2, 2
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.05, algorithm="mtgc",
+                    client_participation=0.5, group_participation=0.75,
+                    participation_mode="uniform",
+                    participation_weighting="inverse_prob")
+    _, _, batches = make_batches(G, K, E, H, seed=33)
+    state = hfl_init({"w": jnp.zeros(D)}, cfg)
+    rf = jax.jit(make_global_round(quad_loss, cfg))
+    for _ in range(3):
+        masks, _ = round_masks(state.rng, cfg)
+        cm = np.asarray(masks.client)
+        prev = np.asarray(as_tree(state.params)["w"])
+        state, m = rf(state, jax.tree.map(jnp.asarray, batches))
+        cur = np.asarray(as_tree(state.params)["w"])
+        np.testing.assert_array_equal(cur[cm == 0], prev[cm == 0])
+        if cm.sum():
+            assert not np.allclose(cur[cm == 1], prev[cm == 1])
+        np.testing.assert_allclose(float(m.participation), cm.mean(),
+                                   rtol=1e-6)
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 1000), g=st.integers(1, 5), k=st.integers(1, 6),
        frac=st.sampled_from([0.25, 0.5, 0.75]))
