@@ -24,15 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    HFLConfig,
-    as_tree,
-    hfl_init,
-    make_global_round,
-    pack_client_shards,
-    round_masks,
-    run_rounds,
-)
+from repro.api import ExperimentSpec, RoundSchedule, build, fit
+from repro.core import as_tree
 from repro.data.partition import partition
 from repro.data.synthetic import make_classification, train_test_split
 from repro.models.small import jit_accuracy, make_loss, mlp
@@ -79,13 +72,15 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
                   chunk: int | None = None):
     """Train one algorithm; returns dict(acc=[...], loss=[...], rounds=[...]).
 
-    The whole horizon runs through ``core.driver.run_rounds``: batches are
-    gathered on device from the once-uploaded packed partition, the state
-    buffers are donated round to round, and accuracy is evaluated inside
-    the compiled scan. Under partial participation the evaluated replica is
-    the first active client of the round (re-derived from the pre-round
-    ``state.rng``, exactly the masks the engine uses); on the rare
-    empty round under 'uniform' sampling this falls back to replica (0, 0).
+    Construction goes through the unified front door (``repro.api``): one
+    ``ExperimentSpec`` declares the experiment, ``build``/``fit`` compose
+    the engine with the compiled horizon driver -- batches gathered on
+    device from the once-uploaded packed partition, state buffers donated
+    round to round, accuracy evaluated inside the compiled scan. Under
+    partial participation the evaluated replica is the first active client
+    of the round (re-derived from the pre-round ``state.rng``, exactly the
+    masks the engine uses); on the rare empty round under 'uniform'
+    sampling this falls back to replica (0, 0).
     """
     G = G or setup.num_groups
     K = K or setup.clients_per_group
@@ -105,37 +100,39 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
 
     init, apply = mlp(setup.num_classes, setup.dim, hidden=setup.hidden)
     loss_fn = make_loss(apply)
-    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
-                    group_rounds=E, lr=setup.lr, algorithm=algorithm,
-                    prox_mu=0.01, feddyn_alpha=0.1,
-                    client_participation=client_participation,
-                    group_participation=group_participation,
-                    participation_mode=participation_mode,
-                    participation_weighting=participation_weighting)
-    state = hfl_init(init(jax.random.PRNGKey(seed)), cfg)
-    round_fn = make_global_round(loss_fn, cfg)
-    data = pack_client_shards({"x": train.x, "y": train.y}, idx,
-                              group_rounds=E, local_steps=H,
+    spec = ExperimentSpec(
+        levels=(G, K),
+        schedule=RoundSchedule(group_rounds=E, local_steps=H),
+        algorithm=algorithm, lr=setup.lr,
+        prox_mu=0.01 if algorithm == "fedprox" else 0.0,
+        feddyn_alpha=0.1 if algorithm == "feddyn" else 0.0,
+        client_participation=client_participation,
+        group_participation=group_participation,
+        participation_mode=participation_mode,
+        participation_weighting=participation_weighting)
+    engine = build(spec, loss_fn)
+    data = engine.pack_arrays({"x": train.x, "y": train.y}, idx,
                               batch_size=setup.batch, shards=setup.shards,
                               rng=rng, key=jax.random.PRNGKey(seed + 1))
     acc_of = jit_accuracy(apply, jnp.asarray(test.x), jnp.asarray(test.y))
 
     def eval_fn(prev, state):
-        if cfg.full_participation:
-            params = as_tree(jax.tree.map(lambda v: v[0, 0], state.params))
+        if spec.full_participation:
+            params = engine.global_model(state)
         else:
             # Frozen replicas hold stale params: evaluate the first client
             # that received this round's dissemination (argmax of the
             # round's mask, re-derived from the pre-round rng).
-            cmask = round_masks(prev.rng, cfg)[0].client
+            cmask = engine.participation_masks(prev.rng)[0].client
             i = jnp.argmax(cmask.reshape(-1))
             params = as_tree(jax.tree.map(lambda v: v[i // K, i % K],
                                           state.params))
         return {"acc": acc_of(params)}
 
-    state, data, hz = run_rounds(round_fn, state, data, rounds,
-                                 chunk=chunk or setup.chunk,
-                                 eval_every=eval_every, eval_fn=eval_fn)
+    state, hz = fit(engine, data, rounds,
+                    params=init(jax.random.PRNGKey(seed)),
+                    chunk=chunk or setup.chunk,
+                    eval_every=eval_every, eval_fn=eval_fn)
     loss_t = np.asarray(hz.metrics.loss).reshape(rounds, -1).mean(axis=1)
     return {"round": [int(r) for r in hz.eval_rounds],
             "acc": [float(a) for a in hz.evals["acc"]],

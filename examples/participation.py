@@ -2,13 +2,13 @@
 
 Same hierarchy and non-i.i.d. data as the quickstart, but each global round
 samples 50% of every group's clients ('fixed' mode: exactly half). The
-whole run is one compiled scan (core/driver.py): participation masks are
-drawn from the engine state's PRNG *inside* the program, batches come from
-on-device selection out of the once-uploaded packed dataset (no host
-packing at all -- the old loop's host-side mask mirroring is gone), and
+experiment is declared once as an ``ExperimentSpec`` and the whole run is
+one compiled scan (``repro.api.fit`` over core/driver.py): participation
+masks are drawn from the engine state's PRNG *inside* the program, batches
+come from on-device selection out of the once-uploaded packed dataset, and
 evaluation picks an active replica each eval round by re-deriving the
-round's mask from the pre-round rng (``round_masks``), all under the same
-jit. MTGC's corrections keep helping under sampling -- compare against
+round's mask from the pre-round rng (``engine.participation_masks``), all
+under the same jit. MTGC's corrections keep helping under sampling -- compare against
 hierarchical FedAvg on the same mask/batch stream.
 
     PYTHONPATH=src python examples/participation.py
@@ -17,15 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    HFLConfig,
-    as_tree,
-    hfl_init,
-    make_global_round,
-    pack_client_shards,
-    round_masks,
-    run_rounds,
-)
+from repro.api import ExperimentSpec, RoundSchedule, build, fit
+from repro.core import as_tree
 from repro.data.partition import partition
 from repro.data.synthetic import make_classification, train_test_split
 from repro.models.small import jit_accuracy, make_loss, mlp
@@ -43,30 +36,31 @@ def main():
     acc_of = jit_accuracy(apply, jnp.asarray(test.x), jnp.asarray(test.y))
 
     for algo in ("mtgc", "hfedavg"):
-        cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
-                        group_rounds=E, lr=0.1, algorithm=algo,
-                        client_participation=0.5, participation_mode="fixed")
+        spec = ExperimentSpec(
+            levels=(G, K),
+            schedule=RoundSchedule(group_rounds=E, local_steps=H),
+            algorithm=algo, lr=0.1,
+            client_participation=0.5, participation_mode="fixed")
+        engine = build(spec, loss_fn)
 
-        def eval_fn(prev, state, cfg=cfg):
+        def eval_fn(prev, state, engine=engine):
             # Frozen replicas hold stale params: evaluate a client that
             # received this round's dissemination. The round's mask is
             # re-derived from the pre-round rng -- exactly the draw the
             # engine used inside the round.
-            cmask = round_masks(prev.rng, cfg)[0].client
+            cmask = engine.participation_masks(prev.rng)[0].client
             i = jnp.argmax(cmask.reshape(-1))
             params = as_tree(jax.tree.map(lambda v: v[i // K, i % K],
                                           state.params))
             return {"acc": acc_of(params)}
 
-        state = hfl_init(init(jax.random.PRNGKey(0)), cfg)
-        data = pack_client_shards({"x": train.x, "y": train.y}, idx,
-                                  group_rounds=E, local_steps=H,
+        data = engine.pack_arrays({"x": train.x, "y": train.y}, idx,
                                   batch_size=32, shards=8,
                                   rng=np.random.default_rng(1),
                                   key=jax.random.PRNGKey(1))
-        state, data, hz = run_rounds(make_global_round(loss_fn, cfg), state,
-                                     data, rounds, eval_every=5,
-                                     eval_fn=eval_fn)
+        state, hz = fit(engine, data, rounds,
+                        params=init(jax.random.PRNGKey(0)),
+                        eval_every=5, eval_fn=eval_fn)
         print(f"\n== {algo} @ 50% client participation ==")
         for i, r in enumerate(hz.eval_rounds):
             active = int(round(float(hz.metrics.participation[r-1]) * G * K))
@@ -77,7 +71,7 @@ def main():
                   f"||y||^2 {float(hz.metrics.y_norm[r-1]):.3e}")
 
     # Bernoulli availability: under 'uniform' sampling the realized count
-    # fluctuates round to round, and cfg.participation_weighting picks the
+    # fluctuates round to round, and spec.participation_weighting picks the
     # aggregation estimator -- 'none' renormalizes by whoever showed up,
     # 'inverse_prob' divides by the expected count (Horvitz-Thompson) so the
     # aggregates MTGC's z/y corrections track stay unbiased (under 'fixed'
@@ -96,28 +90,29 @@ def main():
                       seed=2)
     acc_w = jit_accuracy(apply, jnp.asarray(test_w.x), jnp.asarray(test_w.y))
     for weighting in ("none", "inverse_prob"):
-        cfg = HFLConfig(num_groups=Gw, clients_per_group=Kw, local_steps=H,
-                        group_rounds=Ew, lr=0.1, algorithm="mtgc",
-                        client_participation=0.8,
-                        participation_mode="uniform",
-                        participation_weighting=weighting)
+        spec = ExperimentSpec(
+            levels=(Gw, Kw),
+            schedule=RoundSchedule(group_rounds=Ew, local_steps=H),
+            algorithm="mtgc", lr=0.1,
+            client_participation=0.8,
+            participation_mode="uniform",
+            participation_weighting=weighting)
+        engine = build(spec, loss_fn)
 
-        def eval_fn(prev, state, cfg=cfg):
-            cmask = round_masks(prev.rng, cfg)[0].client
+        def eval_fn(prev, state, engine=engine):
+            cmask = engine.participation_masks(prev.rng)[0].client
             i = jnp.argmax(cmask.reshape(-1))
             params = as_tree(jax.tree.map(lambda v: v[i // Kw, i % Kw],
                                           state.params))
             return {"acc": acc_w(params)}
 
-        state = hfl_init(init(jax.random.PRNGKey(0)), cfg)
-        data = pack_client_shards({"x": train_w.x, "y": train_w.y}, idx_w,
-                                  group_rounds=Ew, local_steps=H,
+        data = engine.pack_arrays({"x": train_w.x, "y": train_w.y}, idx_w,
                                   batch_size=32, shards=8,
                                   rng=np.random.default_rng(3),
                                   key=jax.random.PRNGKey(3))
-        state, data, hz = run_rounds(make_global_round(loss_fn, cfg), state,
-                                     data, rounds, eval_every=5,
-                                     eval_fn=eval_fn)
+        state, hz = fit(engine, data, rounds,
+                        params=init(jax.random.PRNGKey(0)),
+                        eval_every=5, eval_fn=eval_fn)
         print(f"\n== mtgc @ Bernoulli 80%, weighting={weighting} ==")
         for i, r in enumerate(hz.eval_rounds):
             active = int(round(float(hz.metrics.participation[r-1]) * Gw * Kw))

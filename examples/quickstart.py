@@ -4,10 +4,12 @@ Builds a 4-group x 5-client hierarchy with Dirichlet(0.1) label skew at
 both levels, then trains the paper's MLP with MTGC and with hierarchical
 FedAvg on the identical batch stream -- watch the drift corrections win.
 
-Training runs through the compiled horizon driver (core/driver.py): the
-partitioned dataset is packed per client and uploaded once, all 15 rounds
-execute as a single donated scan dispatch with batches gathered on device,
-and test accuracy is evaluated every 5 rounds inside the compiled program.
+Everything goes through the unified front door (``repro.api``): one
+``ExperimentSpec`` declares the experiment, ``build`` adapts it onto the
+round engine, ``engine.pack_arrays`` uploads the partitioned dataset once,
+and ``fit`` runs all 15 rounds as a single donated scan dispatch with
+batches gathered on device and test accuracy evaluated every 5 rounds
+inside the compiled program (core/driver.py underneath).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,14 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    HFLConfig,
-    as_tree,
-    hfl_init,
-    make_global_round,
-    pack_client_shards,
-    run_rounds,
-)
+from repro.api import ExperimentSpec, RoundSchedule, build, fit
 from repro.data.partition import partition
 from repro.data.synthetic import make_classification, train_test_split
 from repro.models.small import jit_accuracy, make_loss, mlp
@@ -39,25 +34,27 @@ def main():
     loss_fn = make_loss(apply)
     acc_of = jit_accuracy(apply, jnp.asarray(test.x), jnp.asarray(test.y))
 
-    def eval_fn(prev, state):
-        # All clients hold the global model between full-participation rounds.
-        params = as_tree(jax.tree.map(lambda v: v[0, 0], state.params))
-        return {"acc": acc_of(params)}
-
     for algo in ("mtgc", "hfedavg"):
-        cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
-                        group_rounds=E, lr=0.1, algorithm=algo)
-        state = hfl_init(init(jax.random.PRNGKey(0)), cfg)
+        spec = ExperimentSpec(
+            levels=(G, K),
+            schedule=RoundSchedule(group_rounds=E, local_steps=H),
+            algorithm=algo, lr=0.1)
+        engine = build(spec, loss_fn)
+
+        def eval_fn(prev, state, engine=engine):
+            # All clients hold the global model between full-participation
+            # rounds.
+            return {"acc": acc_of(engine.global_model(state))}
+
         # Same packing rng + selection key for both algos -> identical
         # batch streams, like the old host loop's shared data rng.
-        data = pack_client_shards({"x": train.x, "y": train.y}, idx,
-                                  group_rounds=E, local_steps=H,
+        data = engine.pack_arrays({"x": train.x, "y": train.y}, idx,
                                   batch_size=32, shards=8,
                                   rng=np.random.default_rng(1),
                                   key=jax.random.PRNGKey(1))
-        state, data, hz = run_rounds(make_global_round(loss_fn, cfg), state,
-                                     data, rounds, eval_every=5,
-                                     eval_fn=eval_fn)
+        state, hz = fit(engine, data, rounds,
+                        params=init(jax.random.PRNGKey(0)),
+                        eval_every=5, eval_fn=eval_fn)
         print(f"\n== {algo} ==")
         for i, r in enumerate(hz.eval_rounds):
             print(f"round {r:3d}  loss {float(hz.metrics.loss[r-1].mean()):.4f}  "

@@ -4,6 +4,11 @@ Runs three architecture families (dense GQA, attention-free RWKV6, hybrid
 Hymba) through the same prefill/decode_step API the dry-run lowers at
 32k/524k context on the production mesh.
 
+Standalone by design: serving is not federated, so this demo deliberately
+does not go through ``repro.api`` (the HFL experiment front door) -- it
+exercises only the model bundles' prefill/decode surface. Training
+examples all construct via ``repro.api.build``/``fit``.
+
     PYTHONPATH=src python examples/serve_decode.py --gen 24
 """
 import argparse

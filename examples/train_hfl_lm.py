@@ -7,19 +7,24 @@ Defaults train a ~7M-param glm4-family model for 50 global rounds x E2 x H2
 the 100M regime on real hardware (the same script is what the dry-run
 lowers at 26B scale on the production mesh).
 
+The experiment is declared once through ``repro.api`` (backend="sharded")
+and trained in checkpoint-sized segments of ``fit``: each segment is a
+compiled donated horizon over a freshly packed set of per-client
+domain-skewed shard blocks, and the state (params + corrections + rng)
+carries across segments and into ``repro.checkpoint``.
+
     PYTHONPATH=src python examples/train_hfl_lm.py --rounds 50
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExperimentSpec, RoundSchedule, build, fit
 from repro.checkpoint import save
 from repro.configs import get_arch
 from repro.data.lm import make_lm_tokens
-from repro.launch.train import make_sharded_round, sharded_init
 from repro.models.transformer import build_model
 
 
@@ -37,6 +42,8 @@ def main():
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--ckpt", default="/tmp/mtgc_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25,
+                    help="rounds per fit segment / checkpoint cadence")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced(
@@ -53,40 +60,38 @@ def main():
     rng = np.random.default_rng(0)
     toks, doms = make_lm_tokens(rng, cfg.vocab_size, 400_000, num_domains=8)
     G, K = args.groups, args.clients
-    shard_tokens = []
-    for g in range(G):
-        row = []
-        for k in range(K):
-            dsel = (doms % (G * K)) == (g * K + k)   # crude domain skew
-            row.append(toks[dsel])
-        shard_tokens.append(row)
+    shard_tokens = [
+        [toks[(doms % (G * K)) == (g * K + k)] for k in range(K)]  # crude skew
+        for g in range(G)
+    ]
 
-    state = sharded_init(params, G, K)
-    step = jax.jit(make_sharded_round(bundle.loss, E=args.E, H=args.H,
-                                      lr=args.lr))
+    spec = ExperimentSpec(
+        levels=(G, K),
+        schedule=RoundSchedule(group_rounds=args.E, local_steps=args.H,
+                               microbatches=1),
+        algorithm="mtgc", lr=args.lr, backend="sharded", state_layout="tree")
+    engine = build(spec, bundle.loss)
+    state = engine.init(params)
+
     t0 = time.time()
-    for t in range(args.rounds):
-        b = np.zeros((args.E, args.H, 1, G, K, args.batch, args.seq), np.int32)
-        y = np.zeros_like(b)
-        for g in range(G):
-            for k in range(K):
-                sh = shard_tokens[g][k]
-                st = rng.integers(0, len(sh) - args.seq - 1,
-                                  (args.E, args.H, 1, args.batch))
-                for e in range(args.E):
-                    for h in range(args.H):
-                        for i in range(args.batch):
-                            s = st[e, h, 0, i]
-                            b[e, h, 0, g, k, i] = sh[s:s + args.seq]
-                            y[e, h, 0, g, k, i] = sh[s + 1:s + args.seq + 1]
-        state, m = step(state, {"tokens": jnp.asarray(b), "targets": jnp.asarray(y)})
-        if (t + 1) % 10 == 0 or t == 0:
-            print(f"round {t+1:4d}  loss {float(m.loss.mean()):.4f}  "
-                  f"||z||^2 {float(m.z_norm):.2e}  ||y||^2 {float(m.y_norm):.2e}  "
-                  f"({time.time()-t0:.1f}s)")
-        if (t + 1) % 25 == 0:
-            save(args.ckpt, t + 1, state._asdict())
-            print(f"  checkpoint -> {args.ckpt}")
+    done = 0
+    while done < args.rounds:
+        seg = min(args.ckpt_every, args.rounds - done)
+        # Fresh shard blocks per segment (the np rng advances), one upload.
+        data = engine.pack_tokens(shard_tokens, batch_size=args.batch,
+                                  seq_len=args.seq, rng=rng,
+                                  key=jax.random.PRNGKey(done + 1))
+        state, hz = fit(engine, data, seg, state=state)
+        for t in range(seg):
+            r = done + t + 1
+            if r % 10 == 0 or r == 1:
+                print(f"round {r:4d}  loss {float(hz.metrics.loss[t].mean()):.4f}  "
+                      f"||z||^2 {float(hz.metrics.z_norm[t]):.2e}  "
+                      f"||y||^2 {float(hz.metrics.y_norm[t]):.2e}  "
+                      f"({time.time()-t0:.1f}s)")
+        done += seg
+        save(args.ckpt, done, state._asdict())
+        print(f"  checkpoint @ round {done} -> {args.ckpt}")
 
 
 if __name__ == "__main__":

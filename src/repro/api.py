@@ -1,0 +1,13 @@
+"""``repro.api`` -- the unified experiment surface (see ``repro.core.api``).
+
+One import gives the whole front door::
+
+    from repro import api
+    engine = api.build(api.ExperimentSpec(levels=(4, 5)), loss_fn)
+    state, horizon = api.fit(engine, data, T=30, params=params)
+
+Everything here is re-exported from :mod:`repro.core.api`, which holds the
+implementation next to the engines it adapts.
+"""
+from repro.core.api import *  # noqa: F401,F403
+from repro.core.api import __all__  # noqa: F401

@@ -1,8 +1,15 @@
 """Step-tagged pytree checkpoints as .npz (flattened key paths) + metadata.
 
 Good enough for CPU-scale runs and round-trips arbitrary nested
-dict/tuple/NamedTuple pytrees of arrays. Sharded production checkpoints
-would swap in tensorstore under the same API.
+dict/tuple/NamedTuple pytrees of arrays -- including the engines' states:
+flat-buffer states (``core.packer.FlatBuffers`` registers key paths, so
+the contiguous ``[G, K, N]`` buffers round-trip losslessly into a ``like``
+state built from the same template) and ``ShardedHFLState.rng`` /
+``HFLState.rng`` PRNG keys (saved as their raw uint32 words; a ``None``
+rng is structure, not a leaf, and survives untouched). Gated by
+tests/test_checkpoint.py's save -> restore -> one-round bit-exactness.
+Sharded production checkpoints would swap in tensorstore under the same
+API.
 """
 from __future__ import annotations
 
@@ -59,7 +66,14 @@ def restore(directory: str, step: int, like: PyTree) -> PyTree:
     leaves = []
     for keypath, leaf in paths:
         key = _SEP.join(str(p) for p in keypath)
+        if key not in data:
+            raise ValueError(
+                f"checkpoint {path} has no leaf {key!r}; was it saved from "
+                "a state with a different structure?")
         arr = data[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {arr.shape}, but the "
+                f"`like` state expects {tuple(leaf.shape)}")
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,5 +1,11 @@
 """repro.core -- the paper's contribution: MTGC and its HFL baselines.
 
+New code should construct experiments through the unified front door,
+``repro.api`` (``ExperimentSpec`` -> ``build`` -> ``fit``); the
+constructors below remain the stable low-level surface (the three
+``make_*_round`` entry points are delegating shims over the api
+adapters).
+
 Public API:
   HFLConfig, HFLState, hfl_init, make_global_round, global_model
   ScaffoldState, scaffold_init, make_scaffold_round

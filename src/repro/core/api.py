@@ -1,0 +1,776 @@
+"""One front door for every experiment: ``repro.api``.
+
+The paper's MTGC algorithm is one algorithm, but this repo grew three
+divergent constructor stacks for it -- ``make_global_round`` (the
+simulator engine), ``make_multilevel_round`` (Appendix E, M levels) and
+``make_sharded_round`` (the production microbatched round) -- each with
+its own init, state type and kwarg sprawl. :class:`ExperimentSpec` is the
+single declarative surface over all of them: topology, schedule,
+algorithm, participation, state layout, fusion and backend in one frozen
+dataclass; :func:`build` turns a spec into an :class:`Engine` (a uniform
+``init`` / ``round_fn`` / ``global_model`` / packing adapter over the
+existing engines) and :func:`fit` drives any engine through the compiled
+horizon driver (``core.driver``) without the caller ever touching packing
+internals.
+
+Quickstart (the 60-second version; see examples/quickstart.py)::
+
+    from repro import api
+    spec = api.ExperimentSpec(
+        levels=(4, 5), algorithm="mtgc", lr=0.1,
+        schedule=api.RoundSchedule(group_rounds=4, local_steps=5))
+    engine = api.build(spec, loss_fn)
+    data = engine.pack_arrays({"x": X, "y": Y}, client_index_pools,
+                              batch_size=32, rng=np.random.default_rng(0),
+                              key=jax.random.PRNGKey(1))
+    state, horizon = api.fit(engine, data, 30, params=model_params,
+                             eval_every=5, eval_fn=my_eval_fn)
+    model = engine.global_model(state)
+
+Backends share semantics, not just shape: ``build(spec)`` for the same
+algorithm/topology/participation is state-for-state identical to the
+legacy constructors (tests/test_api_conformance.py), and the legacy
+constructors themselves are now thin shims over this module, so every
+pre-existing parity/oracle test gates the redesign.
+
+:class:`RoundSchedule` is deliberately forward-looking: ``group_rounds``
+accepts a per-group tuple -- today it must be uniform (a ``ValueError``
+otherwise), reserving the declared slot where async group rounds
+(stale-``y`` handling, Wang & Wang 2022) will land without another
+constructor fork.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import HFLConfig
+from repro.core.driver import (
+    Horizon,
+    PackedBatches,
+    pack_client_shards,
+    pack_lm_shards,
+    run_rounds,
+)
+from repro.core.packer import as_tree
+
+PyTree = Any
+
+ALGORITHMS = ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox", "feddyn")
+BACKENDS = ("simulator", "multilevel", "sharded")
+LAYOUTS = ("tree", "flat")
+FUSIONS = ("none", "fused")
+
+# Which algorithms each backend implements (the simulator engine is the
+# paper's full baseline zoo; the production round keeps the two deployed
+# ones; the M-level engine is MTGC by construction).
+BACKEND_ALGORITHMS = {
+    "simulator": ALGORITHMS,
+    "multilevel": ("mtgc",),
+    "sharded": ("mtgc", "hfedavg"),
+}
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSchedule:
+    """When each timescale fires, declared once for every backend.
+
+    group_rounds: E -- group aggregations per global round. A scalar, or a
+        per-group tuple (length ``levels[0]``); per-group values must
+        currently be uniform -- the non-uniform case is the declared hook
+        where async group rounds (stale-``y`` handling) will land.
+    local_steps: H -- local SGD steps per group round.
+    microbatches: A -- gradient-accumulation chunks per local step; only
+        meaningful on the sharded backend (None elsewhere).
+    periods: explicit M-level aggregation periods ``(P_1 > ... > P_M)``
+        for the multilevel backend; for a two-level topology they default
+        to ``(E * H, H)``.
+    """
+
+    group_rounds: int | tuple[int, ...] = 2
+    local_steps: int = 5
+    microbatches: int | None = None
+    periods: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if isinstance(self.group_rounds, (list, tuple)):
+            object.__setattr__(self, "group_rounds",
+                               tuple(int(e) for e in self.group_rounds))
+        if self.periods is not None:
+            object.__setattr__(self, "periods",
+                               tuple(int(p) for p in self.periods))
+
+    @property
+    def uniform_group_rounds(self) -> int:
+        """E as a scalar; raises for (future) non-uniform schedules."""
+        if isinstance(self.group_rounds, tuple):
+            first = self.group_rounds[0]
+            _require(all(e == first for e in self.group_rounds),
+                     "async (non-uniform) per-group round schedules are not "
+                     f"supported yet: {self.group_rounds}")
+            return first
+        return int(self.group_rounds)
+
+    def level_periods(self, num_levels: int) -> tuple[int, ...]:
+        """Aggregation periods for an ``num_levels``-deep topology."""
+        if self.periods is not None:
+            return self.periods
+        E, H = self.uniform_group_rounds, self.local_steps
+        _require(num_levels == 2,
+                 f"a {num_levels}-level topology needs explicit "
+                 "schedule.periods (group_rounds/local_steps only define "
+                 "the two-level schedule)")
+        return (E * H, H)
+
+    def validate(self, levels: tuple[int, ...]) -> "RoundSchedule":
+        gr = self.group_rounds
+        if isinstance(gr, tuple):
+            _require(len(gr) == levels[0],
+                     f"per-group group_rounds needs one entry per group: "
+                     f"{len(gr)} entries for {levels[0]} groups")
+            _require(all(e >= 1 for e in gr), f"group_rounds must be >= 1: {gr}")
+        else:
+            _require(gr >= 1, f"group_rounds must be >= 1, got {gr}")
+        self.uniform_group_rounds  # raises on non-uniform schedules
+        _require(self.local_steps >= 1,
+                 f"local_steps must be >= 1, got {self.local_steps}")
+        _require(self.microbatches is None or self.microbatches >= 1,
+                 f"microbatches must be None or >= 1, got {self.microbatches}")
+        if self.periods is not None:
+            _require(len(self.periods) == len(levels),
+                     f"one period per level: {len(self.periods)} periods for "
+                     f"{len(levels)} levels")
+            for a, b in zip(self.periods, self.periods[1:]):
+                _require(a > b and a % b == 0,
+                         f"periods must nest (P_m > P_m+1, divisible): "
+                         f"{self.periods}")
+            # periods are authoritative: an explicitly different E/H would
+            # be silently ignored, so reject the conflict. Field defaults
+            # count as "unset" (you can't declare periods without them).
+            derived = (self.periods[0] // self.periods[-1], self.periods[-1])
+            given = (self.uniform_group_rounds, self.local_steps)
+            defaults = (RoundSchedule.group_rounds, RoundSchedule.local_steps)
+            _require(given == derived or given == defaults,
+                     f"schedule.periods={self.periods} implies "
+                     f"(group_rounds, local_steps)={derived}, which "
+                     f"conflicts with the explicit {given}; set periods "
+                     "alone or keep them consistent")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Everything that defines one HFL experiment, in one place.
+
+    levels: topology dims -- ``(G, K)`` for the two-level engines, or the
+        full ``(N_1, ..., N_M)`` tree for the multilevel backend.
+    schedule: the :class:`RoundSchedule` (E / H / microbatches / periods).
+    algorithm: one of :data:`ALGORITHMS` (backend support varies; see
+        :data:`BACKEND_ALGORITHMS`).
+    backend: "simulator" (``core.engine``), "multilevel"
+        (``core.multilevel``) or "sharded" (``launch.train``).
+    state_layout: "flat" packs state into contiguous ``[*dims, N]``
+        buffers (``core.packer``); "tree" keeps model pytrees.
+    fusion: "fused" routes the MTGC local step through the Pallas kernel.
+    fused_mode: sharded-backend kernel dispatch override
+        ("auto" | "pallas" | "interpret"); None = backend default.
+    correction_dtype: narrow (e.g. "bfloat16") z/y storage -- sharded
+        backend, tree layout only.
+    client_participation / group_participation / participation_mode /
+    participation_weighting: exactly ``HFLConfig``'s semantics.
+    level_participation: per-level live-uplink fractions for M-level
+        topologies (overrides the two scalar fractions there).
+    """
+
+    levels: tuple[int, ...] = (2, 2)
+    schedule: RoundSchedule = RoundSchedule()
+    algorithm: str = "mtgc"
+    lr: float = 0.1
+    backend: str = "simulator"
+    state_layout: str = "flat"
+    fusion: str = "none"
+    fused_mode: str | None = None
+    correction_init: str = "zero"
+    prox_mu: float = 0.0
+    feddyn_alpha: float = 0.0
+    server_lr: float = 1.0
+    client_participation: float = 1.0
+    group_participation: float = 1.0
+    level_participation: tuple[float, ...] | None = None
+    participation_mode: str = "uniform"
+    participation_weighting: str = "none"
+    correction_dtype: str | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "levels", tuple(int(n) for n in self.levels))
+        if self.level_participation is not None:
+            object.__setattr__(self, "level_participation",
+                               tuple(float(p) for p in self.level_participation))
+
+    # ------------------------------------------------------------ checks
+
+    def validate(self) -> "ExperimentSpec":
+        _require(len(self.levels) >= 2,
+                 f"levels needs at least (groups, clients), got {self.levels}")
+        _require(all(n >= 1 for n in self.levels),
+                 f"every topology dim must be >= 1: {self.levels}")
+        _require(self.backend in BACKENDS,
+                 f"unknown backend {self.backend!r} (choose from {BACKENDS})")
+        _require(self.algorithm in ALGORITHMS,
+                 f"unknown algorithm {self.algorithm!r} "
+                 f"(choose from {ALGORITHMS})")
+        _require(self.algorithm in BACKEND_ALGORITHMS[self.backend],
+                 f"algorithm {self.algorithm!r} is not implemented by the "
+                 f"{self.backend!r} backend "
+                 f"(supported: {BACKEND_ALGORITHMS[self.backend]})")
+        _require(len(self.levels) == 2 or self.backend == "multilevel",
+                 f"{len(self.levels)}-level topologies need "
+                 f"backend='multilevel', got {self.backend!r}")
+        self.schedule.validate(self.levels)
+        _require(self.schedule.microbatches is None
+                 or self.backend == "sharded",
+                 "schedule.microbatches is a sharded-backend knob")
+        if self.backend == "multilevel":
+            self.schedule.level_periods(len(self.levels))
+
+        _require(self.state_layout in LAYOUTS,
+                 f"unknown state_layout {self.state_layout!r} "
+                 f"(choose from {LAYOUTS})")
+        _require(self.fusion in FUSIONS,
+                 f"unknown fusion {self.fusion!r} (choose from {FUSIONS})")
+        _require(self.fusion == "none" or self.algorithm == "mtgc",
+                 "fusion='fused' fuses exactly g + z + y: mtgc only")
+        _require(self.fusion == "none" or self.backend != "multilevel",
+                 "the multilevel backend has no fused-kernel path")
+        _require(self.fused_mode is None or self.backend == "sharded",
+                 "fused_mode overrides the sharded backend's kernel dispatch")
+        _require(self.correction_dtype is None
+                 or (self.backend == "sharded" and self.state_layout == "tree"),
+                 "correction_dtype (narrow z/y storage) exists only on the "
+                 "sharded backend's tree layout")
+
+        _require(self.correction_init in ("zero", "gradient"),
+                 f"correction_init must be 'zero' or 'gradient', "
+                 f"got {self.correction_init!r}")
+        _require(self.correction_init == "zero" or self.backend == "simulator",
+                 "correction_init='gradient' is a simulator-engine feature")
+        for name in ("prox_mu", "feddyn_alpha"):
+            _require(getattr(self, name) == 0.0 or self.backend == "simulator",
+                     f"{name} only affects the simulator engine's "
+                     "fedprox/feddyn algorithms")
+        _require(self.server_lr == 1.0 or self.backend == "simulator",
+                 "server_lr is a simulator-engine knob")
+
+        for name in ("client_participation", "group_participation"):
+            frac = getattr(self, name)
+            _require(0.0 < frac <= 1.0,
+                     f"{name} must be in (0, 1], got {frac}")
+        _require(self.participation_mode in ("uniform", "fixed"),
+                 f"participation_mode must be 'uniform' or 'fixed', "
+                 f"got {self.participation_mode!r}")
+        _require(self.participation_weighting in ("none", "inverse_prob"),
+                 f"participation_weighting must be 'none' or 'inverse_prob', "
+                 f"got {self.participation_weighting!r}")
+        if self.level_participation is not None:
+            _require(self.backend == "multilevel",
+                     "level_participation is a multilevel-backend knob; "
+                     "two-level backends use client_/group_participation")
+            _require(len(self.level_participation) == len(self.levels),
+                     "one participation fraction per level: "
+                     f"{len(self.level_participation)} for "
+                     f"{len(self.levels)} levels")
+            _require(all(0.0 < p <= 1.0 for p in self.level_participation),
+                     f"participation fractions must be in (0, 1]: "
+                     f"{self.level_participation}")
+        return self
+
+    # ------------------------------------------------- config conversion
+
+    @property
+    def full_participation(self) -> bool:
+        if self.level_participation is not None:
+            return all(p >= 1.0 for p in self.level_participation)
+        return (self.client_participation >= 1.0
+                and self.group_participation >= 1.0)
+
+    def participation_by_level(self) -> tuple[float, ...]:
+        """Per-level live-uplink fractions for the multilevel engine."""
+        if self.level_participation is not None:
+            return self.level_participation
+        # Two-level semantics: level 0 = group uplinks, deepest = clients.
+        return ((self.group_participation,)
+                + (1.0,) * (len(self.levels) - 2)
+                + (self.client_participation,))
+
+    def to_hfl_config(self) -> HFLConfig:
+        """The equivalent two-level ``HFLConfig`` (simulator engine)."""
+        _require(len(self.levels) == 2,
+                 f"HFLConfig is two-level; spec has levels={self.levels}")
+        return HFLConfig(
+            num_groups=self.levels[0],
+            clients_per_group=self.levels[1],
+            local_steps=self.schedule.local_steps,
+            group_rounds=self.schedule.uniform_group_rounds,
+            lr=self.lr,
+            algorithm=self.algorithm,
+            correction_init=self.correction_init,
+            prox_mu=self.prox_mu,
+            feddyn_alpha=self.feddyn_alpha,
+            server_lr=self.server_lr,
+            client_participation=self.client_participation,
+            group_participation=self.group_participation,
+            participation_mode=self.participation_mode,
+            participation_weighting=self.participation_weighting,
+            use_fused_update=self.fusion == "fused",
+            use_flat_state=self.state_layout == "flat",
+        )
+
+    @classmethod
+    def from_hfl_config(cls, cfg: HFLConfig,
+                        backend: str = "simulator") -> "ExperimentSpec":
+        return cls(
+            levels=(cfg.num_groups, cfg.clients_per_group),
+            schedule=RoundSchedule(group_rounds=cfg.group_rounds,
+                                   local_steps=cfg.local_steps),
+            algorithm=cfg.algorithm,
+            lr=cfg.lr,
+            backend=backend,
+            state_layout="flat" if cfg.use_flat_state else "tree",
+            fusion="fused" if cfg.use_fused_update else "none",
+            correction_init=cfg.correction_init,
+            prox_mu=cfg.prox_mu,
+            feddyn_alpha=cfg.feddyn_alpha,
+            server_lr=cfg.server_lr,
+            client_participation=cfg.client_participation,
+            group_participation=cfg.group_participation,
+            participation_mode=cfg.participation_mode,
+            participation_weighting=cfg.participation_weighting,
+        )
+
+
+# ------------------------------------------------------------------ engine
+
+
+LossFn = Callable[[PyTree, PyTree], jax.Array]
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What every backend looks like behind :func:`build`.
+
+    spec: the validated :class:`ExperimentSpec` this engine realizes.
+    round_fn: ``(state, batches) -> (state, metrics)`` consuming the
+        driver batch layout (what ``select_round`` emits for this spec);
+        jit-friendly and driver-ready.
+    metric_fields: names of the metrics NamedTuple fields ``round_fn``
+        returns -- always includes ``"loss"``.
+    """
+
+    spec: ExperimentSpec
+    round_fn: Callable[[PyTree, PyTree], tuple[PyTree, Any]]
+    metric_fields: tuple[str, ...]
+
+    def init(self, params: PyTree, rng: jax.Array | None = None) -> PyTree:
+        """Broadcast one model into this backend's round state."""
+        ...
+
+    def global_model(self, state: PyTree) -> PyTree:
+        """The current global model as a plain model pytree."""
+        ...
+
+
+class _EngineBase:
+    """Shared packing plumbing; subclasses adapt one legacy engine each."""
+
+    def __init__(self, spec: ExperimentSpec, loss_fn: LossFn):
+        self.spec = spec
+        self.loss_fn = loss_fn
+        self.round_fn = self._build_round_fn()
+
+    # Subclasses set these to the driver-layout (E, H) of one round.
+    @property
+    def _pack_rounds(self) -> int:
+        return self.spec.schedule.uniform_group_rounds
+
+    @property
+    def _pack_steps(self) -> int:
+        return self.spec.schedule.local_steps
+
+    @property
+    def _pack_microbatches(self) -> int | None:
+        return None
+
+    def pack_arrays(self, data_arrays: dict[str, np.ndarray], indices: list,
+                    *, batch_size: int, shards: int = 16,
+                    rng: np.random.Generator, key: jax.Array) -> PackedBatches:
+        """Pack a partitioned array dataset for :func:`fit` (uploads once)."""
+        _require(_index_depth(indices) == len(self.spec.levels),
+                 f"index nesting depth {_index_depth(indices)} does not "
+                 f"match levels={self.spec.levels}")
+        return pack_client_shards(
+            data_arrays, indices, group_rounds=self._pack_rounds,
+            local_steps=self._pack_steps, batch_size=batch_size,
+            shards=shards, microbatches=self._pack_microbatches,
+            rng=rng, key=key)
+
+    def pack_tokens(self, tokens: np.ndarray, *, batch_size: int,
+                    seq_len: int, shards: int = 8,
+                    rng: np.random.Generator, key: jax.Array) -> PackedBatches:
+        """Pack an LM token stream for :func:`fit` (two-level backends)."""
+        _require(len(self.spec.levels) == 2,
+                 "token packing is two-level; use pack_arrays with nested "
+                 "index pools for deeper trees")
+        G, K = self.spec.levels
+        return pack_lm_shards(
+            tokens, num_groups=G, clients_per_group=K,
+            group_rounds=self._pack_rounds, local_steps=self._pack_steps,
+            batch_size=batch_size, seq_len=seq_len, shards=shards,
+            microbatches=self._pack_microbatches, rng=rng, key=key)
+
+    def participation_masks(self, rng: jax.Array):
+        """(masks, next_rng) the round derives from a pre-round state rng.
+
+        Exactly the draw the two-level round functions make internally
+        (``core.participation.round_masks``' key schedule), so eval
+        closures can pick an active replica without rebuilding a legacy
+        ``HFLConfig`` from the spec.
+        """
+        from repro.core.participation import sample_hfl_masks
+
+        _require(len(self.spec.levels) == 2,
+                 "participation_masks is two-level; the multilevel backend "
+                 "draws hierarchical chain masks internally")
+        mkey, next_rng = jax.random.split(rng)
+        masks = sample_hfl_masks(
+            mkey, *self.spec.levels, self.spec.client_participation,
+            self.spec.group_participation, self.spec.participation_mode)
+        return masks, next_rng
+
+
+def _index_depth(indices) -> int:
+    depth = 0
+    node = indices
+    while isinstance(node, (list, tuple)):
+        depth += 1
+        node = node[0]
+    return depth
+
+
+class SimulatorEngine(_EngineBase):
+    """The paper engine (``core.engine``) behind the uniform surface."""
+
+    def _build_round_fn(self):
+        from repro.core import engine as _engine
+        self._cfg = self.spec.to_hfl_config().validate()
+        from repro.core.engine import RoundMetrics
+        self.metric_fields = RoundMetrics._fields
+        return _engine._build_global_round(self.loss_fn, self._cfg)
+
+    def init(self, params: PyTree, rng: jax.Array | None = None) -> PyTree:
+        from repro.core.engine import hfl_init
+        return hfl_init(params, self._cfg, rng)
+
+    def global_model(self, state: PyTree) -> PyTree:
+        from repro.core.engine import global_model
+        return global_model(state)
+
+
+class MultiLevelMetrics(NamedTuple):
+    """Metrics contract of the multilevel backend (losses only)."""
+
+    loss: jax.Array  # [P_1] mean training loss per local step
+
+
+class MultiLevelEngine(_EngineBase):
+    """Appendix E's M-level engine (``core.multilevel``) as an Engine.
+
+    ``round_fn`` consumes the driver layout ``[E, H, *dims, ...]`` (with
+    ``E * H = P_1``) and merges the two leading axes into the legacy
+    ``[P_1, *dims, ...]`` contract; the raw legacy-layout function stays
+    available as ``legacy_round_fn`` for the delegating shim.
+    """
+
+    def _build_round_fn(self):
+        from repro.core import multilevel as _ml
+        spec = self.spec
+        dims = spec.levels
+        periods = spec.schedule.level_periods(len(dims))
+        participation = (None if spec.full_participation
+                         else spec.participation_by_level())
+        self.legacy_round_fn = _ml._build_multilevel_round(
+            self.loss_fn, dims, periods, spec.lr,
+            participation=participation,
+            participation_mode=spec.participation_mode,
+            participation_weighting=spec.participation_weighting)
+        self.metric_fields = MultiLevelMetrics._fields
+        E, H = self._pack_rounds, self._pack_steps
+        raw = self.legacy_round_fn
+
+        def round_fn(state, batches):
+            merged = jax.tree.map(
+                lambda b: b.reshape((E * H,) + b.shape[2:]), batches)
+            state, losses = raw(state, merged)
+            return state, MultiLevelMetrics(loss=losses)
+
+        return round_fn
+
+    @property
+    def _pack_rounds(self) -> int:
+        periods = self.spec.schedule.level_periods(len(self.spec.levels))
+        return periods[0] // periods[-1]
+
+    @property
+    def _pack_steps(self) -> int:
+        return self.spec.schedule.level_periods(len(self.spec.levels))[-1]
+
+    def init(self, params: PyTree, rng: jax.Array | None = None) -> PyTree:
+        from repro.core.multilevel import multilevel_init
+        return multilevel_init(params, self.spec.levels, rng,
+                               use_flat_state=self.spec.state_layout == "flat")
+
+    def global_model(self, state: PyTree) -> PyTree:
+        from repro.core.multilevel import multilevel_global_model
+        return multilevel_global_model(state)
+
+
+class ShardedEngine(_EngineBase):
+    """The production microbatched round (``launch.train``) as an Engine."""
+
+    def _build_round_fn(self):
+        from repro.launch import train as _train
+        spec = self.spec
+        self.metric_fields = _train.ShardedMetrics._fields
+        return _train._build_sharded_round(
+            self.loss_fn, E=spec.schedule.uniform_group_rounds,
+            H=spec.schedule.local_steps, lr=spec.lr,
+            algorithm=spec.algorithm,
+            use_fused_update=spec.fusion == "fused",
+            fused_mode=spec.fused_mode,
+            client_participation=spec.client_participation,
+            group_participation=spec.group_participation,
+            participation_mode=spec.participation_mode,
+            participation_weighting=spec.participation_weighting)
+
+    @property
+    def _pack_microbatches(self) -> int:
+        return self.spec.schedule.microbatches or 1
+
+    def init(self, params: PyTree, rng: jax.Array | None = None) -> PyTree:
+        from repro.launch.train import sharded_init
+        G, K = self.spec.levels
+        if rng is None and not self.spec.full_participation:
+            rng = jax.random.PRNGKey(0)
+        dtype = (None if self.spec.correction_dtype is None
+                 else jnp.dtype(self.spec.correction_dtype))
+        return sharded_init(params, G, K,
+                            use_flat_state=self.spec.state_layout == "flat",
+                            correction_dtype=dtype, rng=rng)
+
+    def global_model(self, state: PyTree) -> PyTree:
+        return as_tree(jax.tree.map(lambda x: x[0, 0], state.params))
+
+
+_ENGINES = {
+    "simulator": SimulatorEngine,
+    "multilevel": MultiLevelEngine,
+    "sharded": ShardedEngine,
+}
+
+
+def build(spec: ExperimentSpec, loss_fn: LossFn) -> Engine:
+    """Validate ``spec`` and construct its backend :class:`Engine`.
+
+    ``loss_fn(params, batch) -> scalar`` is the single-client loss; every
+    backend vmaps it over its topology axes exactly as the legacy
+    constructors did.
+    """
+    spec = spec.validate()
+    return _ENGINES[spec.backend](spec, loss_fn)
+
+
+def fit(
+    engine: Engine,
+    data: PackedBatches,
+    T: int,
+    *,
+    state: PyTree | None = None,
+    params: PyTree | None = None,
+    rng: jax.Array | None = None,
+    chunk: int | None = None,
+    eval_every: int = 1,
+    eval_fn: Callable[[PyTree, PyTree], PyTree] | None = None,
+    donate: bool = True,
+) -> tuple[PyTree, Horizon]:
+    """Train ``T`` global rounds through the compiled horizon driver.
+
+    Pass either a ready ``state`` (to continue a run) or the initial model
+    ``params`` (plus an optional ``rng`` for participation sampling) --
+    :func:`fit` then composes ``engine.init`` + ``core.driver.run_rounds``
+    (donated chunked scans, on-device batch selection, in-scan eval at the
+    ``eval_every`` cadence) and returns the final state with the stacked
+    :class:`Horizon`. ``data`` comes from ``engine.pack_arrays`` /
+    ``engine.pack_tokens``; callers never touch packing internals.
+
+    To continue a horizon, pass the previous call's ``horizon.data`` (the
+    packed dataset with its selection rng advanced) together with
+    ``state=...`` -- reusing the original ``data`` object would replay the
+    finished horizon's shard draws::
+
+        state, hz = fit(engine, data, 10, params=params)
+        state, hz = fit(engine, hz.data, 10, state=state)   # rounds 11-20
+    """
+    if state is None:
+        _require(params is not None,
+                 "fit() needs either state=... or params=... to start from")
+        state = engine.init(params, rng)
+    state, _, horizon = run_rounds(
+        engine.round_fn, state, data, T, chunk=chunk,
+        eval_every=eval_every, eval_fn=eval_fn, donate=donate)
+    return state, horizon
+
+
+# ------------------------------------------------------------------- CLI
+
+
+@dataclasses.dataclass(frozen=True)
+class CliFlag:
+    """One row of the declarative spec<->argparse table."""
+
+    field: str                     # ExperimentSpec field ("schedule.x" ok)
+    flag: str                      # e.g. "--client-participation"
+    help: str
+    type: type = str
+    choices: tuple | None = None
+    nargs: str | None = None
+
+    @property
+    def dest(self) -> str:
+        return self.flag.lstrip("-").replace("-", "_")
+
+
+#: The one table the CLIs are generated from: every entry maps one
+#: ExperimentSpec (or RoundSchedule) field to one argparse flag. Adding a
+#: spec knob here surfaces it on every entry point at once.
+CLI_FLAGS: tuple[CliFlag, ...] = (
+    CliFlag("levels", "--levels", "topology dims, e.g. --levels 2 2 (G K)",
+            type=int, nargs="+"),
+    CliFlag("schedule.group_rounds", "--E",
+            "group aggregations per global round", type=int),
+    CliFlag("schedule.local_steps", "--H",
+            "local SGD steps per group round", type=int),
+    CliFlag("algorithm", "--algorithm", "HFL algorithm",
+            choices=ALGORITHMS),
+    CliFlag("lr", "--lr", "client learning rate", type=float),
+    CliFlag("backend", "--backend", "round engine implementation",
+            choices=BACKENDS),
+    CliFlag("state_layout", "--state-layout",
+            "state storage: contiguous flat buffers or model pytrees",
+            choices=LAYOUTS),
+    CliFlag("fusion", "--fusion",
+            "route the MTGC local step through the fused Pallas kernel",
+            choices=FUSIONS),
+    CliFlag("client_participation", "--client-participation",
+            "fraction of each group's clients sampled per round",
+            type=float),
+    CliFlag("group_participation", "--group-participation",
+            "fraction of groups reachable per round", type=float),
+    CliFlag("participation_mode", "--participation-mode",
+            "Bernoulli draws or exact counts", choices=("uniform", "fixed")),
+    CliFlag("participation_weighting", "--weighting",
+            "masked-aggregation weighting: realized count or inverse "
+            "inclusion probability (Horvitz-Thompson)",
+            choices=("none", "inverse_prob")),
+)
+
+
+def _spec_get(spec: ExperimentSpec, field: str):
+    obj = spec
+    for part in field.split("."):
+        obj = getattr(obj, part)
+    return obj
+
+
+def add_spec_args(parser, *, defaults: ExperimentSpec | None = None,
+                  exclude: tuple[str, ...] = ()) -> None:
+    """Generate argparse flags for :class:`ExperimentSpec` from the table.
+
+    ``defaults`` seeds each flag's default (so entry points can ship their
+    own baseline spec); ``exclude`` drops fields an entry point pins
+    (e.g. ``launch.train`` pins ``backend='sharded'``).
+    """
+    defaults = defaults or ExperimentSpec()
+    for row in CLI_FLAGS:
+        if row.field in exclude or row.flag in exclude:
+            continue
+        default = _spec_get(defaults, row.field)
+        kwargs = dict(help=f"{row.help} (default: {default})")
+        if row.choices is not None:
+            kwargs["choices"] = row.choices
+        else:
+            kwargs["type"] = row.type
+        if row.nargs is not None:
+            kwargs["nargs"] = row.nargs
+            kwargs["type"] = row.type
+        parser.add_argument(row.flag, default=default, dest=row.dest, **kwargs)
+
+
+def spec_from_args(args, *, defaults: ExperimentSpec | None = None,
+                   **overrides) -> ExperimentSpec:
+    """Build the :class:`ExperimentSpec` an argparse namespace describes.
+
+    ``overrides`` (field=value, including ``schedule_*`` shortcuts like
+    ``microbatches=1``) win over CLI values -- entry points use them to pin
+    backend-specific fields that are not exposed as flags.
+    """
+    defaults = defaults or ExperimentSpec()
+    spec_kw: dict[str, Any] = {}
+    sched_kw: dict[str, Any] = {}
+    for row in CLI_FLAGS:
+        if not hasattr(args, row.dest):
+            continue
+        value = getattr(args, row.dest)
+        target, _, sub = row.field.partition(".")
+        if target == "schedule":
+            sched_kw[sub] = value
+        else:
+            spec_kw[target] = value
+    for name, value in overrides.items():
+        if name in ("group_rounds", "local_steps", "microbatches", "periods"):
+            sched_kw[name] = value
+        else:
+            spec_kw[name] = value
+    schedule = dataclasses.replace(defaults.schedule, **sched_kw)
+    return dataclasses.replace(defaults, schedule=schedule, **spec_kw)
+
+
+__all__ = [
+    "ALGORITHMS",
+    "BACKENDS",
+    "BACKEND_ALGORITHMS",
+    "CLI_FLAGS",
+    "CliFlag",
+    "Engine",
+    "ExperimentSpec",
+    "FUSIONS",
+    "Horizon",
+    "LAYOUTS",
+    "MultiLevelEngine",
+    "MultiLevelMetrics",
+    "PackedBatches",
+    "RoundSchedule",
+    "ShardedEngine",
+    "SimulatorEngine",
+    "add_spec_args",
+    "build",
+    "fit",
+    "spec_from_args",
+]

@@ -86,13 +86,34 @@ class HFLConfig:
         return self.client_participation >= 1.0 and self.group_participation >= 1.0
 
     def validate(self) -> "HFLConfig":
-        assert self.num_groups >= 1 and self.clients_per_group >= 1
-        assert self.local_steps >= 1 and self.group_rounds >= 1
-        assert self.correction_init in ("zero", "gradient")
-        assert 0.0 < self.client_participation <= 1.0
-        assert 0.0 < self.group_participation <= 1.0
-        assert self.participation_mode in ("uniform", "fixed")
-        assert self.participation_weighting in ("none", "inverse_prob")
-        assert not (self.use_fused_update and self.algorithm != "mtgc"), (
-            "use_fused_update fuses exactly g + z + y: mtgc only")
+        """Raise ``ValueError`` on an invalid config (never ``assert``:
+        asserts vanish under ``python -O``, silently accepting bad configs;
+        ``ExperimentSpec.validate`` mirrors these checks)."""
+        def require(cond: bool, msg: str) -> None:
+            if not cond:
+                raise ValueError(msg)
+
+        require(self.num_groups >= 1 and self.clients_per_group >= 1,
+                f"topology dims must be >= 1, got G={self.num_groups} "
+                f"K={self.clients_per_group}")
+        require(self.local_steps >= 1 and self.group_rounds >= 1,
+                f"schedule must be >= 1 step/round, got H={self.local_steps} "
+                f"E={self.group_rounds}")
+        require(self.correction_init in ("zero", "gradient"),
+                f"correction_init must be 'zero' or 'gradient', "
+                f"got {self.correction_init!r}")
+        require(0.0 < self.client_participation <= 1.0,
+                f"client_participation must be in (0, 1], "
+                f"got {self.client_participation}")
+        require(0.0 < self.group_participation <= 1.0,
+                f"group_participation must be in (0, 1], "
+                f"got {self.group_participation}")
+        require(self.participation_mode in ("uniform", "fixed"),
+                f"participation_mode must be 'uniform' or 'fixed', "
+                f"got {self.participation_mode!r}")
+        require(self.participation_weighting in ("none", "inverse_prob"),
+                f"participation_weighting must be 'none' or 'inverse_prob', "
+                f"got {self.participation_weighting!r}")
+        require(not (self.use_fused_update and self.algorithm != "mtgc"),
+                "use_fused_update fuses exactly g + z + y: mtgc only")
         return self

@@ -60,34 +60,43 @@ class PackedBatches:
 
     arrays: pytree whose leaves are ``[G, K, S, steps, ...]`` -- ``S``
         pre-sampled blocks per client, each holding ``steps`` step-batches
-        (``steps = local_steps * max(microbatches, 1)``).
+        (``steps = local_steps * max(microbatches, 1)``). Deeper topologies
+        (the M-level engine) carry all their client axes up front:
+        ``[*dims, S, steps, ...]`` with ``topo_ndim = len(dims)``.
     rng: PRNG key advanced one split per round for shard selection.
     group_rounds / local_steps / microbatches: static layout of one round.
         ``microbatches=None`` emits engine-layout batches ``[E, H, G, K,
         ...]``; an integer emits the sharded microbatched layout
         ``[E, H, A, G, K, ...]``.
+    topo_ndim: how many leading leaf axes index the client topology
+        (2 for the two-level engines; M for an M-level tree, where the
+        selected batches come back ``[E, H, *dims, ...]``).
 
     Registered as a pytree (children: arrays + rng; the layout is static
     aux data), so it can cross ``jit`` boundaries whole.
     """
 
-    __slots__ = ("arrays", "rng", "group_rounds", "local_steps", "microbatches")
+    __slots__ = ("arrays", "rng", "group_rounds", "local_steps",
+                 "microbatches", "topo_ndim")
 
     def __init__(self, arrays: PyTree, rng: jax.Array, group_rounds: int,
-                 local_steps: int, microbatches: int | None = None):
+                 local_steps: int, microbatches: int | None = None,
+                 topo_ndim: int = 2):
         self.arrays = arrays
         self.rng = rng
         self.group_rounds = int(group_rounds)
         self.local_steps = int(local_steps)
         self.microbatches = None if microbatches is None else int(microbatches)
+        self.topo_ndim = int(topo_ndim)
 
     @property
     def num_shards(self) -> int:
-        return jax.tree.leaves(self.arrays)[0].shape[2]
+        return jax.tree.leaves(self.arrays)[0].shape[self.topo_ndim]
 
     def replace_rng(self, rng: jax.Array) -> "PackedBatches":
         return PackedBatches(self.arrays, rng, self.group_rounds,
-                             self.local_steps, self.microbatches)
+                             self.local_steps, self.microbatches,
+                             self.topo_ndim)
 
     def __repr__(self) -> str:
         shapes = [tuple(x.shape) for x in jax.tree.leaves(self.arrays)]
@@ -97,7 +106,7 @@ class PackedBatches:
 
 def _packed_flatten(pb: PackedBatches):
     return ((pb.arrays, pb.rng),
-            (pb.group_rounds, pb.local_steps, pb.microbatches))
+            (pb.group_rounds, pb.local_steps, pb.microbatches, pb.topo_ndim))
 
 
 def _packed_unflatten(aux, children) -> PackedBatches:
@@ -112,19 +121,26 @@ jax.tree_util.register_pytree_node(PackedBatches, _packed_flatten,
 def select_round(data: PackedBatches, key: jax.Array) -> PyTree:
     """Gather one global round of batches from the packed shards, on device.
 
-    Draws one shard index per (group round, client) -- ``[E, G, K]`` -- and
+    Draws one shard index per (group round, client) -- ``[E, *dims]`` -- and
     gathers the corresponding blocks, so a round's batch tensor never exists
-    on the host. Returns leaves ``[E, H, G, K, ...]`` (``microbatches is
-    None``) or ``[E, H, A, G, K, ...]``.
+    on the host. Returns leaves ``[E, H, *dims, ...]`` (``microbatches is
+    None``) or ``[E, H, A, *dims, ...]``; ``dims`` is ``(G, K)`` for the
+    two-level engines and the full topology for deeper trees
+    (``data.topo_ndim`` leading axes).
     """
     E, H, A = data.group_rounds, data.local_steps, data.microbatches
-    G, K, S = jax.tree.leaves(data.arrays)[0].shape[:3]
-    sid = jax.random.randint(key, (E, G, K), 0, S)
-    gi = jnp.arange(G)[None, :, None]
-    ki = jnp.arange(K)[None, None, :]
+    lead = jax.tree.leaves(data.arrays)[0].shape[:data.topo_ndim]
+    S = jax.tree.leaves(data.arrays)[0].shape[data.topo_ndim]
+    P = int(np.prod(lead))
+    # One draw per (round, client); the flat reshape leaves the bit stream
+    # identical to the historical [E, G, K] draw.
+    sid = jax.random.randint(key, (E,) + lead, 0, S).reshape(E, P)
 
     def gather(leaf):
-        sel = jnp.moveaxis(leaf[gi, ki, sid], 3, 1)  # [E, steps, G, K, ...]
+        flat = leaf.reshape((P,) + leaf.shape[data.topo_ndim:])
+        sel = flat[jnp.arange(P)[None, :], sid]      # [E, P, steps, ...]
+        sel = jnp.moveaxis(sel, 2, 1)                # [E, steps, P, ...]
+        sel = sel.reshape(sel.shape[:2] + lead + sel.shape[3:])
         if A is None:
             return sel                               # steps == H
         return sel.reshape((E, H, A) + sel.shape[2:])
@@ -134,7 +150,7 @@ def select_round(data: PackedBatches, key: jax.Array) -> PyTree:
 
 def pack_client_shards(
     data_arrays: dict[str, np.ndarray],
-    indices: list[list[np.ndarray]],
+    indices: list,
     *,
     group_rounds: int,
     local_steps: int,
@@ -154,22 +170,30 @@ def pack_client_shards(
     ``S`` blocks per client, so ``shards`` bounds how many distinct blocks a
     client can see across the horizon (host memory scales with it; 16 is
     plenty for the paper's schedules).
+
+    ``indices`` is the per-client index-pool nesting: ``[G][K]`` lists of
+    arrays for the two-level engines, or ``[N_1][N_2]...[N_M]`` for an
+    M-level topology -- the nesting depth becomes ``topo_ndim`` and the
+    packed leaves carry all topology axes up front (``[*dims, S, steps,
+    B, ...]``). Clients draw in row-major order either way, so the
+    two-level case is bit-identical to the historical packing.
     """
-    G, K = len(indices), len(indices[0])
     steps = local_steps * (microbatches or 1)
-    sel = np.stack([
-        np.stack([
-            rng.choice(indices[g][k], size=(shards, steps, batch_size),
-                       replace=True)
-            for k in range(K)
-        ]) for g in range(G)
-    ])                                               # [G, K, S, steps, B]
+
+    def draw(node):
+        if isinstance(node, (list, tuple)):
+            return np.stack([draw(child) for child in node])
+        return rng.choice(node, size=(shards, steps, batch_size), replace=True)
+
+    sel = draw(indices)                              # [*dims, S, steps, B]
+    topo_ndim = sel.ndim - 3
     arrays = {name: jnp.asarray(arr[sel]) for name, arr in data_arrays.items()}
-    return PackedBatches(arrays, key, group_rounds, local_steps, microbatches)
+    return PackedBatches(arrays, key, group_rounds, local_steps, microbatches,
+                         topo_ndim)
 
 
 def pack_lm_shards(
-    tokens: np.ndarray,
+    tokens: np.ndarray | list,
     *,
     num_groups: int,
     clients_per_group: int,
@@ -187,16 +211,31 @@ def pack_lm_shards(
     Samples random ``seq_len`` windows (next-token targets shifted by one,
     exactly like ``lm_batches``) into ``{"tokens", "targets"}`` blocks of
     shape ``[G, K, S, steps, B, seq_len]``, uploaded once.
+
+    ``tokens`` is either one shared stream (every client samples from it,
+    the historical behaviour, draw-for-draw identical) or a ``[G][K]``
+    nesting of per-client streams (e.g. domain-skewed shards) -- each
+    client then samples windows from its own stream.
     """
     G, K = num_groups, clients_per_group
     steps = local_steps * (microbatches or 1)
-    starts = rng.integers(0, len(tokens) - seq_len - 1,
-                          size=(G, K, shards, steps, batch_size))
-    win = starts[..., None] + np.arange(seq_len)
-    arrays = {
-        "tokens": jnp.asarray(tokens[win].astype(np.int32)),
-        "targets": jnp.asarray(tokens[win + 1].astype(np.int32)),
-    }
+
+    def windows(stream, size):
+        stream = np.asarray(stream)
+        starts = rng.integers(0, len(stream) - seq_len - 1, size=size)
+        win = starts[..., None] + np.arange(seq_len)
+        return stream[win].astype(np.int32), stream[win + 1].astype(np.int32)
+
+    if isinstance(tokens, np.ndarray):
+        toks, targs = windows(tokens, (G, K, shards, steps, batch_size))
+    else:
+        per_client = [[windows(tokens[g][k], (shards, steps, batch_size))
+                       for k in range(K)] for g in range(G)]
+        toks = np.stack([[per_client[g][k][0] for k in range(K)]
+                         for g in range(G)])
+        targs = np.stack([[per_client[g][k][1] for k in range(K)]
+                          for g in range(G)])
+    arrays = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(targs)}
     return PackedBatches(arrays, key, group_rounds, local_steps, microbatches)
 
 
@@ -235,11 +274,16 @@ class Horizon(NamedTuple):
         ``[len(eval_rounds), ...]`` -- or None when no ``eval_fn`` was given.
     eval_rounds: 1-based global round indices that were evaluated
         (multiples of ``eval_every`` plus the final round).
+    data: the :class:`PackedBatches` with its selection rng advanced past
+        this horizon -- continue training from it (``repro.api.fit`` hands
+        it back so a continued run draws fresh shard indices instead of
+        replaying the finished horizon's).
     """
 
     metrics: Any
     evals: Any | None
     eval_rounds: np.ndarray
+    data: Any | None = None
 
 
 _RUNNERS_PER_FN = 8
@@ -371,4 +415,4 @@ def run_rounds(
     evals = None
     if eval_fn is not None:
         evals = jax.tree.map(lambda *xs: _cat(*xs)[mask_all], *evs)
-    return state, data, Horizon(metrics, evals, eval_rounds)
+    return state, data, Horizon(metrics, evals, eval_rounds, data)

@@ -156,6 +156,12 @@ def make_global_round(
 ) -> Callable[[HFLState, PyTree], tuple[HFLState, RoundMetrics]]:
     """Build the jittable global-round function for ``cfg.algorithm``.
 
+    .. deprecated::
+        ``make_global_round`` is the legacy constructor; new code should
+        declare an ``ExperimentSpec(backend="simulator")`` and use
+        ``repro.api.build(spec, loss_fn)`` -- this shim delegates to that
+        adapter, so both paths are the same program.
+
     ``loss_fn(params, batch) -> scalar`` is a single-client loss; the engine
     vmaps it over the [G, K] axes. ``batches`` passed to the returned function
     must have leaves shaped ``[E, H, G, K, ...]`` (one batch per local step
@@ -166,6 +172,16 @@ def make_global_round(
     runs the flat hot path, a pytree state runs the per-leaf reference
     path; ``loss_fn`` always sees model pytrees.
     """
+    from repro.core.api import ExperimentSpec, build
+
+    return build(ExperimentSpec.from_hfl_config(cfg), loss_fn).round_fn
+
+
+def _build_global_round(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    cfg: HFLConfig,
+) -> Callable[[HFLState, PyTree], tuple[HFLState, RoundMetrics]]:
+    """The real round builder behind ``repro.api``'s simulator adapter."""
     cfg.validate()
     algo = cfg.algorithm
     use_z = algo in ("mtgc", "local_corr")

@@ -178,23 +178,71 @@ def make_multilevel_round(
 ) -> Callable[[MultiLevelState, PyTree], tuple[MultiLevelState, jax.Array]]:
     """Build one *global round* (= P_1 local iterations) as a jittable fn.
 
+    .. deprecated::
+        ``make_multilevel_round`` is the legacy constructor; new code
+        should declare an ``ExperimentSpec(backend="multilevel",
+        schedule=RoundSchedule(periods=...))`` and use
+        ``repro.api.build(spec, loss_fn)`` -- this shim delegates to that
+        adapter (its ``legacy_round_fn``, which keeps this function's
+        ``[P_1, *dims, ...]`` batch contract; the adapter's own
+        ``round_fn`` speaks the driver layout ``[E, H, *dims, ...]``).
+
     batches leaves: [P_1, *dims, ...] -- one batch per local step per client.
     ``participation[m]`` (optional, one per level) is the per-round fraction
     of live level-(m+1) uplinks; ``participation_weighting`` selects the
     realized-count ('none') or Horvitz-Thompson ('inverse_prob') masked
     aggregation (see module docstring). Returns (state, losses[P_1]).
     """
+    from repro.core.api import ExperimentSpec, RoundSchedule, build
+
+    dims = tuple(int(n) for n in dims)
+    periods = tuple(int(p) for p in periods)
+    spec = ExperimentSpec(
+        levels=dims,
+        schedule=RoundSchedule(group_rounds=max(periods[0] // periods[-1], 1),
+                               local_steps=periods[-1], periods=periods),
+        algorithm="mtgc",
+        lr=lr,
+        backend="multilevel",
+        state_layout="tree",  # the round adapts to the state at trace time
+        level_participation=(None if participation is None
+                             else tuple(float(p) for p in participation)),
+        participation_mode=participation_mode,
+        participation_weighting=participation_weighting,
+    )
+    return build(spec, loss_fn).legacy_round_fn
+
+
+def _build_multilevel_round(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    dims: Sequence[int],
+    periods: Sequence[int],
+    lr: float,
+    *,
+    participation: Sequence[float] | None = None,
+    participation_mode: str = "uniform",
+    participation_weighting: str = "none",
+) -> Callable[[MultiLevelState, PyTree], tuple[MultiLevelState, jax.Array]]:
+    """The real M-level round builder behind ``repro.api``'s adapter."""
     dims = tuple(dims)
     periods = tuple(periods)
     M = len(dims)
-    assert len(periods) == M, "one period per level"
+    if len(periods) != M:
+        raise ValueError(f"one period per level: {periods} for {M} levels")
     for a, b in zip(periods, periods[1:]):
-        assert a > b and a % b == 0, f"periods must nest: {periods}"
-    assert participation_weighting in ("none", "inverse_prob")
+        if not (a > b and a % b == 0):
+            raise ValueError(f"periods must nest: {periods}")
+    if participation_weighting not in ("none", "inverse_prob"):
+        raise ValueError(
+            f"unknown participation_weighting {participation_weighting!r}")
     if participation is not None:
         participation = tuple(float(p) for p in participation)
-        assert len(participation) == M, "one participation fraction per level"
-        assert all(0.0 < p <= 1.0 for p in participation), participation
+        if len(participation) != M:
+            raise ValueError("one participation fraction per level: "
+                             f"{participation} for {M} levels")
+        if not all(0.0 < p <= 1.0 for p in participation):
+            raise ValueError(
+                f"participation fractions must be in (0, 1]: {participation}")
     partial = participation is not None and any(p < 1.0 for p in participation)
     ht = partial and participation_weighting == "inverse_prob"
     denoms = (tuple(

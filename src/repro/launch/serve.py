@@ -7,7 +7,10 @@
 
 Serving is not federated -- params are a single copy sharded over the
 physical ("data", "model") axes (see sharding.specs.serve_param_specs);
-batch/cache shard over data (decode_32k) or sequence (long_500k).
+batch/cache shard over data (decode_32k) or sequence (long_500k). For the
+same reason this module is deliberately standalone from ``repro.api`` (the
+HFL *experiment* front door): it never touches round engines or their
+state constructors.
 
 CLI runs a small end-to-end batched-decode demo on the host:
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke

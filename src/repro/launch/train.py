@@ -46,15 +46,19 @@ schedule; local steps generate zero cross-client traffic.
 
 Also used as the lowering target of the train_4k dry-run.
 
-The CLI drives training through ``core/driver.py``: the token stream is
-packed into per-client shard blocks and uploaded once, every round's
-batches are gathered on device, and the state buffers are donated through
-each dispatch (tree and flat layouts alike). ``--chunk N`` compiles N
-global rounds into a single scan dispatch (``run_rounds``); ``--chunk 0``
-(default) keeps one donated dispatch per round. Chunking does not change
-numerics (driver parity is gated in tests/test_driver.py) -- it bounds how
-much work one dispatch commits to while amortizing dispatch overhead and
-returning metrics one transfer per chunk.
+The CLI is one ``repro.api`` client: its experiment flags are generated
+from the ``ExperimentSpec`` CLI table (``repro.api.add_spec_args``; this
+entry point pins ``backend="sharded"`` and ``microbatches=1``), and
+training runs through ``build``/``fit`` over ``core/driver.py``: the
+token stream is packed into per-client shard blocks and uploaded once,
+every round's batches are gathered on device, and the state buffers are
+donated through each dispatch (tree and flat layouts alike). ``--chunk
+N`` compiles N global rounds into a single scan dispatch (``run_rounds``;
+default 1 = one donated dispatch per round, 0 = the whole horizon as one
+dispatch). Chunking does not change numerics (driver parity is gated in
+tests/test_driver.py) -- it bounds how much work one dispatch commits to
+while amortizing dispatch overhead and returning metrics one transfer per
+chunk.
 
 CLI (example, small-enough-for-CPU config):
     PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
@@ -101,8 +105,10 @@ def sharded_init(params0: PyTree, G: int, K: int,
     share it). ``rng`` seeds per-round participation sampling; required by
     rounds built with partial participation, ignored otherwise."""
     if use_flat_state:
-        assert correction_dtype is None, \
-            "flat state packs params and corrections into one buffer per dtype"
+        if correction_dtype is not None:
+            raise ValueError(
+                "flat state packs params and corrections into one buffer "
+                "per dtype; correction_dtype needs the tree layout")
         packer = make_packer(params0)
         flat0 = packer.flatten(params0)
         stacked = FlatBuffers(
@@ -132,6 +138,14 @@ def make_sharded_round(
 ) -> Callable[[ShardedHFLState, PyTree], tuple[ShardedHFLState, ShardedMetrics]]:
     """One MTGC global round. batches: leaves [E, H, A, G, K, chunk, ...].
 
+    .. deprecated::
+        ``make_sharded_round`` is the legacy constructor; new code should
+        declare an ``ExperimentSpec(backend="sharded")`` and use
+        ``repro.api.build(spec, loss_fn)`` -- this shim delegates to that
+        adapter. (The returned round function reads ``(G, K)`` from the
+        state it is traced with, so the spec's ``levels`` do not shape
+        it -- only ``build().init`` consumes them.)
+
     ``algorithm``: "mtgc" | "hfedavg" (corrections off -> the paper's
     baseline, same schedule).  ``use_fused_update``
     routes the corrected step (mtgc only) through the fused Pallas kernel;
@@ -152,13 +166,54 @@ def make_sharded_round(
     state-for-state (tests/test_weighting.py). The participation mask rides
     into the fused Pallas kernel in-register.
     """
+    from repro.core.api import ExperimentSpec, RoundSchedule, build
+
+    spec = ExperimentSpec(
+        schedule=RoundSchedule(group_rounds=E, local_steps=H),
+        algorithm=algorithm,
+        lr=lr,
+        backend="sharded",
+        state_layout="tree",  # the round adapts to the state at trace time
+        fusion="fused" if use_fused_update else "none",
+        fused_mode=fused_mode,
+        client_participation=client_participation,
+        group_participation=group_participation,
+        participation_mode=participation_mode,
+        participation_weighting=participation_weighting,
+    )
+    return build(spec, loss_fn).round_fn
+
+
+def _build_sharded_round(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    *, E: int, H: int, lr: float, algorithm: str = "mtgc",
+    use_fused_update: bool = False,
+    fused_mode: str | None = None,
+    client_participation: float = 1.0,
+    group_participation: float = 1.0,
+    participation_mode: str = "uniform",
+    participation_weighting: str = "none",
+) -> Callable[[ShardedHFLState, PyTree], tuple[ShardedHFLState, ShardedMetrics]]:
+    """The real production-round builder behind ``repro.api``'s adapter.
+
+    See :func:`make_sharded_round` (the delegating shim) for the full
+    semantics; parameters and the returned contract are identical.
+    """
     use_corr = algorithm == "mtgc"
-    assert not (use_fused_update and not use_corr), \
-        "use_fused_update fuses exactly g/A + z + y: mtgc only"
-    assert participation_mode in ("uniform", "fixed")
-    assert participation_weighting in ("none", "inverse_prob")
-    assert 0.0 < client_participation <= 1.0
-    assert 0.0 < group_participation <= 1.0
+    if algorithm not in ("mtgc", "hfedavg"):
+        raise ValueError(f"unknown sharded algorithm {algorithm!r} "
+                         "(choose 'mtgc' or 'hfedavg')")
+    if use_fused_update and not use_corr:
+        raise ValueError("use_fused_update fuses exactly g/A + z + y: mtgc only")
+    if participation_mode not in ("uniform", "fixed"):
+        raise ValueError(f"unknown participation mode {participation_mode!r}")
+    if participation_weighting not in ("none", "inverse_prob"):
+        raise ValueError(
+            f"unknown participation weighting {participation_weighting!r}")
+    if not (0.0 < client_participation <= 1.0
+            and 0.0 < group_participation <= 1.0):
+        raise ValueError("participation fractions must be in (0, 1], got "
+                         f"{client_participation}/{group_participation}")
     if use_fused_update:
         from repro.kernels import ops as kops
     fmode = fused_mode or "auto"
@@ -387,38 +442,35 @@ def make_sharded_round(
 
 
 def main() -> None:
+    from repro.core.api import (
+        ExperimentSpec,
+        RoundSchedule,
+        add_spec_args,
+        build,
+        fit,
+        spec_from_args,
+    )
+
+    # Spec flags (--levels/--E/--H/--algorithm/--lr/--state-layout/...) are
+    # generated from repro.api's one declarative CLI table; this entry
+    # point pins backend="sharded" and microbatches=1 and only hand-keeps
+    # the flags that are not ExperimentSpec fields.
+    defaults = ExperimentSpec(
+        backend="sharded", lr=0.05, state_layout="tree",
+        schedule=RoundSchedule(group_rounds=2, local_steps=2, microbatches=1))
     ap = argparse.ArgumentParser(description=__doc__)
+    add_spec_args(ap, defaults=defaults, exclude=("backend",))
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config on the host CPU (2 layers, d<=512)")
     ap.add_argument("--rounds", type=int, default=2)
-    ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--algorithm", default="mtgc", choices=("mtgc", "hfedavg"))
-    ap.add_argument("--groups", type=int, default=2)
-    ap.add_argument("--clients", type=int, default=2)
-    ap.add_argument("--E", type=int, default=2)
-    ap.add_argument("--H", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--flat", action="store_true",
-                    help="flat-buffer state (core/packer.py)")
-    ap.add_argument("--fused", action="store_true",
-                    help="fused Pallas mtgc_update local step")
-    ap.add_argument("--client-participation", type=float, default=1.0,
-                    help="fraction of each group's clients sampled per round")
-    ap.add_argument("--group-participation", type=float, default=1.0,
-                    help="fraction of groups reachable per round")
-    ap.add_argument("--participation-mode", default="uniform",
-                    choices=("uniform", "fixed"))
-    ap.add_argument("--weighting", default="none",
-                    choices=("none", "inverse_prob"),
-                    help="masked-aggregation weighting: realized count or "
-                         "inverse inclusion probability (Horvitz-Thompson)")
-    ap.add_argument("--chunk", type=int, default=0,
+    ap.add_argument("--chunk", type=int, default=1,
                     help="global rounds per compiled scan dispatch "
-                         "(core/driver.py run_rounds); 0 = one donated "
-                         "dispatch per round")
+                         "(core/driver.py run_rounds); 0 = the whole "
+                         "horizon as one dispatch")
     ap.add_argument("--shards", type=int, default=8,
                     help="packed batch blocks per client uploaded once "
                          "(on-device batch selection)")
@@ -427,7 +479,6 @@ def main() -> None:
     import numpy as np
 
     from repro.configs import get_arch
-    from repro.core.driver import make_round_step, pack_lm_shards, run_rounds
     from repro.data.lm import make_lm_tokens
     from repro.models.transformer import build_model
 
@@ -439,41 +490,26 @@ def main() -> None:
     toks, _ = make_lm_tokens(rng, cfg.vocab_size, 200_000)
     params = bundle.init(jax.random.PRNGKey(args.seed))
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M algo={args.algorithm}")
 
-    G, K, E, H = args.groups, args.clients, args.E, args.H
-    partial = args.client_participation < 1.0 or args.group_participation < 1.0
-    state = sharded_init(
-        params, G, K, use_flat_state=args.flat,
-        rng=jax.random.PRNGKey(args.seed + 2) if partial else None)
-    round_fn = make_sharded_round(
-        bundle.loss, E=E, H=H, lr=args.lr, algorithm=args.algorithm,
-        use_fused_update=args.fused,
-        client_participation=args.client_participation,
-        group_participation=args.group_participation,
-        participation_mode=args.participation_mode,
-        participation_weighting=args.weighting)
-    data = pack_lm_shards(
-        toks, num_groups=G, clients_per_group=K, group_rounds=E,
-        local_steps=H, microbatches=1, batch_size=args.batch,
-        seq_len=args.seq, shards=args.shards, rng=rng,
-        key=jax.random.PRNGKey(args.seed + 1))
+    spec = spec_from_args(args, defaults=defaults, backend="sharded",
+                          microbatches=1)
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"algo={spec.algorithm}")
 
-    def report(t, loss, z_norm, y_norm):
-        print(f"round {t}: loss {float(loss.mean()):.4f} "
-              f"z^2 {float(z_norm):.3e} y^2 {float(y_norm):.3e}")
+    engine = build(spec, bundle.loss)
+    data = engine.pack_tokens(
+        toks, batch_size=args.batch, seq_len=args.seq, shards=args.shards,
+        rng=rng, key=jax.random.PRNGKey(args.seed + 1))
+    state, hz = fit(
+        engine, data, args.rounds, params=params,
+        rng=(jax.random.PRNGKey(args.seed + 2)
+             if not spec.full_participation else None),
+        chunk=args.chunk)
 
-    if args.chunk:
-        state, data, hz = run_rounds(round_fn, state, data, args.rounds,
-                                     chunk=args.chunk)
-        for t in range(args.rounds):
-            report(t, hz.metrics.loss[t], hz.metrics.z_norm[t],
-                   hz.metrics.y_norm[t])
-    else:
-        step = make_round_step(round_fn)    # donated single-round dispatch
-        for t in range(args.rounds):
-            state, data, m = step(state, data)
-            report(t, m.loss, m.z_norm, m.y_norm)
+    for t in range(args.rounds):
+        print(f"round {t}: loss {float(hz.metrics.loss[t].mean()):.4f} "
+              f"z^2 {float(hz.metrics.z_norm[t]):.3e} "
+              f"y^2 {float(hz.metrics.y_norm[t]):.3e}")
 
 
 if __name__ == "__main__":

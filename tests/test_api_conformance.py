@@ -1,0 +1,360 @@
+"""Cross-backend conformance of the unified front door (repro.api).
+
+``build(spec)`` must be *the same program* as the legacy constructors:
+for every algorithm x backend x state layout the adapter-built engine is
+driven over the identical packed dataset as the legacy
+``make_*_round`` path and must match state-for-state (bit-exact) after 2
+global rounds. Combinations a backend does not implement must be rejected
+by ``spec.validate()`` with a ``ValueError`` -- never built silently.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import (
+    ALGORITHMS,
+    HFLConfig,
+    PackedBatches,
+    hfl_init,
+    make_global_round,
+    make_multilevel_round,
+    multilevel_init,
+    run_rounds,
+    select_round,
+)
+from repro.launch.train import make_sharded_round, sharded_init
+
+from test_mtgc_engine import D, quad_loss
+
+G, K, E, H, T = 2, 3, 2, 2, 2
+
+
+def make_data(microbatches=None, seed=0, key=1):
+    rng = np.random.default_rng(seed)
+    steps = H * (microbatches or 1)
+    shape = (G, K, 4, steps, D)
+    arrays = {
+        "a": jnp.asarray(rng.normal(size=shape).astype(np.float32) + 2.0),
+        "b": jnp.asarray(rng.normal(size=shape).astype(np.float32)),
+    }
+    return PackedBatches(arrays, jax.random.PRNGKey(key), E, H, microbatches)
+
+
+def make_spec(algo, backend, layout, **kw):
+    return api.ExperimentSpec(
+        levels=(G, K),
+        schedule=api.RoundSchedule(
+            group_rounds=E, local_steps=H,
+            microbatches=1 if backend == "sharded" else None),
+        algorithm=algo, lr=0.05, backend=backend, state_layout=layout,
+        prox_mu=0.1 if algo == "fedprox" else 0.0,
+        feddyn_alpha=0.1 if algo == "feddyn" else 0.0,
+        **kw)
+
+
+def assert_states_equal(got, want, tag):
+    leaves_got = jax.tree.leaves(got)
+    leaves_want = jax.tree.leaves(want)
+    assert len(leaves_got) == len(leaves_want), tag
+    for i, (a, b) in enumerate(zip(leaves_got, leaves_want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{tag}[leaf {i}]")
+
+
+def run_legacy_multilevel(round_fn, state, data, rounds):
+    """Drive the legacy [P_1, *dims, ...] contract over the same packed
+    dataset / selection keys as the driver."""
+    rng = data.rng
+    for _ in range(rounds):
+        key, rng = jax.random.split(rng)
+        batches = select_round(data, key)
+        merged = jax.tree.map(lambda b: b.reshape((E * H,) + b.shape[2:]),
+                              batches)
+        state, _ = round_fn(state, merged)
+    return state
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("backend", api.BACKENDS)
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_build_matches_legacy_constructor(algo, backend, layout):
+    spec = make_spec(algo, backend, layout)
+    if algo not in api.BACKEND_ALGORITHMS[backend]:
+        with pytest.raises(ValueError):
+            api.build(spec, quad_loss)
+        return
+
+    engine = api.build(spec, quad_loss)
+    assert isinstance(engine, api.Engine)
+    assert "loss" in engine.metric_fields
+    params0 = {"w": jnp.zeros(D)}
+    tag = f"{algo}/{backend}/{layout}"
+
+    if backend == "simulator":
+        cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                        group_rounds=E, lr=0.05, algorithm=algo,
+                        prox_mu=spec.prox_mu, feddyn_alpha=spec.feddyn_alpha,
+                        use_flat_state=layout == "flat")
+        legacy_rf = make_global_round(quad_loss, cfg)
+        legacy_state, _, _ = run_rounds(
+            legacy_rf, hfl_init(params0, cfg), make_data(), T, donate=False)
+    elif backend == "sharded":
+        legacy_rf = make_sharded_round(quad_loss, E=E, H=H, lr=0.05,
+                                       algorithm=algo)
+        legacy_state, _, _ = run_rounds(
+            legacy_rf,
+            sharded_init(params0, G, K, use_flat_state=layout == "flat"),
+            make_data(microbatches=1), T, donate=False)
+    else:
+        legacy_rf = make_multilevel_round(quad_loss, (G, K), (E * H, H), 0.05)
+        legacy_state = run_legacy_multilevel(
+            jax.jit(legacy_rf),
+            multilevel_init(params0, (G, K), use_flat_state=layout == "flat"),
+            make_data(), T)
+
+    data = make_data(microbatches=1 if backend == "sharded" else None)
+    state, _ = api.fit(engine, data, T, params=params0, donate=False)
+    assert_states_equal(state, legacy_state, tag)
+
+    # The global model is readable through the uniform surface either way.
+    gm = engine.global_model(state)
+    assert np.asarray(gm["w"]).shape == (D,)
+
+
+@pytest.mark.parametrize("backend", ["simulator", "sharded"])
+@pytest.mark.parametrize("weighting", ["none", "inverse_prob"])
+def test_partial_participation_conformance(backend, weighting):
+    """Masks, weighting and rng advance identically through build() and the
+    legacy constructors (both levels partially sampled)."""
+    kw = dict(client_participation=0.5, group_participation=0.75,
+              participation_mode="uniform", participation_weighting=weighting)
+    spec = make_spec("mtgc", backend, "flat", **kw)
+    engine = api.build(spec, quad_loss)
+    params0 = {"w": jnp.zeros(D)}
+    rng0 = jax.random.PRNGKey(9)
+
+    if backend == "simulator":
+        cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                        group_rounds=E, lr=0.05, algorithm="mtgc",
+                        use_flat_state=True, **kw)
+        legacy_rf = make_global_round(quad_loss, cfg)
+        legacy_state = hfl_init(params0, cfg, rng0)
+        data = make_data()
+    else:
+        legacy_rf = make_sharded_round(quad_loss, E=E, H=H, lr=0.05, **kw)
+        legacy_state = sharded_init(params0, G, K, use_flat_state=True,
+                                    rng=rng0)
+        data = make_data(microbatches=1)
+    legacy_state, _, _ = run_rounds(legacy_rf, legacy_state, data, T,
+                                    donate=False)
+
+    data = make_data(microbatches=1 if backend == "sharded" else None)
+    state, _ = api.fit(engine, data, T, params=params0, rng=rng0,
+                       donate=False)
+    assert_states_equal(state, legacy_state, f"partial/{backend}/{weighting}")
+
+
+def test_multilevel_partial_participation_conformance():
+    spec = make_spec("mtgc", "multilevel", "tree",
+                     level_participation=(0.75, 0.5),
+                     participation_weighting="inverse_prob")
+    engine = api.build(spec, quad_loss)
+    params0 = {"w": jnp.zeros(D)}
+    rng0 = jax.random.PRNGKey(4)
+
+    legacy_rf = make_multilevel_round(
+        quad_loss, (G, K), (E * H, H), 0.05, participation=(0.75, 0.5),
+        participation_weighting="inverse_prob")
+    legacy_state = run_legacy_multilevel(
+        jax.jit(legacy_rf), multilevel_init(params0, (G, K), rng0),
+        make_data(), T)
+
+    state, _ = api.fit(engine, make_data(), T, params=params0, rng=rng0,
+                       donate=False)
+    assert_states_equal(state, legacy_state, "partial/multilevel")
+
+
+def test_sharded_correction_dtype_conformance():
+    spec = make_spec("mtgc", "sharded", "tree", correction_dtype="bfloat16")
+    engine = api.build(spec, quad_loss)
+    state = engine.init({"w": jnp.zeros(D)})
+    want = sharded_init({"w": jnp.zeros(D)}, G, K,
+                        correction_dtype=jnp.bfloat16)
+    assert state.z["w"].dtype == want.z["w"].dtype == jnp.bfloat16
+    state2, _ = api.fit(engine, make_data(microbatches=1), T, state=state,
+                        donate=False)
+    legacy_rf = make_sharded_round(quad_loss, E=E, H=H, lr=0.05)
+    want2, _, _ = run_rounds(legacy_rf, want, make_data(microbatches=1), T,
+                             donate=False)
+    assert_states_equal(state2, want2, "correction_dtype")
+
+
+def test_three_level_fit_runs_and_preserves_invariants():
+    """The generalized driver packing drives a 3-level topology end to end
+    through build()/fit(); level-1 corrections sum to zero over groups."""
+    dims, periods = (2, 2, 2), (4, 2, 1)
+    spec = api.ExperimentSpec(levels=dims, backend="multilevel", lr=0.05,
+                              schedule=api.RoundSchedule(periods=periods),
+                              state_layout="tree")
+    engine = api.build(spec, quad_loss)
+    rng = np.random.default_rng(3)
+    shape = dims + (3, periods[-1], D)
+    data = PackedBatches(
+        {"a": jnp.asarray(rng.normal(size=shape).astype(np.float32) + 2.0),
+         "b": jnp.asarray(rng.normal(size=shape).astype(np.float32))},
+        jax.random.PRNGKey(1), periods[0] // periods[-1], periods[-1],
+        None, topo_ndim=3)
+    state, hz = api.fit(engine, data, 3, params={"w": jnp.zeros(D)},
+                        donate=False)
+    assert np.asarray(hz.metrics.loss).shape == (3, periods[0])
+    nu1 = state.nus[0]["w"]
+    np.testing.assert_allclose(np.asarray(nu1).sum(axis=0), 0.0, atol=1e-5)
+
+
+# ------------------------------------------------- validation (satellite)
+
+
+def test_hfl_config_validate_raises_value_error():
+    """Bare asserts vanish under ``python -O``; config validation must be
+    real raises (mirrored by ExperimentSpec.validate below)."""
+    bad = [
+        dict(num_groups=0),
+        dict(local_steps=0),
+        dict(correction_init="warm"),
+        dict(client_participation=0.0),
+        dict(group_participation=1.5),
+        dict(participation_mode="roundrobin"),
+        dict(participation_weighting="ht"),
+        dict(use_fused_update=True, algorithm="hfedavg"),
+    ]
+    for kw in bad:
+        with pytest.raises(ValueError):
+            HFLConfig(**kw).validate()
+    assert HFLConfig().validate() is not None
+
+
+def test_experiment_spec_validate_raises_value_error():
+    good = api.ExperimentSpec()
+    assert good.validate() is good
+    bad = [
+        dict(levels=(0, 2)),
+        dict(levels=(4,)),
+        dict(backend="tpu"),
+        dict(algorithm="sgd"),
+        dict(algorithm="fedprox", backend="sharded"),
+        dict(algorithm="hfedavg", backend="multilevel"),
+        dict(levels=(2, 2, 2), backend="simulator"),
+        dict(state_layout="packed"),
+        dict(fusion="fused", algorithm="hfedavg"),
+        dict(fusion="fused", backend="multilevel"),
+        dict(fused_mode="interpret"),                    # simulator backend
+        dict(correction_dtype="bfloat16"),               # simulator backend
+        dict(correction_dtype="bfloat16", backend="sharded"),  # flat layout
+        dict(correction_init="gradient", backend="sharded"),
+        dict(prox_mu=0.1, backend="sharded", algorithm="mtgc"),
+        dict(server_lr=0.5, backend="sharded"),
+        dict(client_participation=0.0),
+        dict(participation_mode="roundrobin"),
+        dict(participation_weighting="ht"),
+        dict(level_participation=(0.5, 0.5)),            # simulator backend
+        dict(level_participation=(0.5,), backend="multilevel"),
+        dict(schedule=api.RoundSchedule(group_rounds=0)),
+        dict(schedule=api.RoundSchedule(local_steps=0)),
+        dict(schedule=api.RoundSchedule(microbatches=2)),  # simulator
+        dict(schedule=api.RoundSchedule(periods=(4, 3)), backend="multilevel"),
+        dict(schedule=api.RoundSchedule(periods=(4, 2, 1))),  # 2 levels
+    ]
+    for kw in bad:
+        with pytest.raises(ValueError):
+            api.ExperimentSpec(**kw).validate()
+
+
+def test_async_schedule_hook_rejected_until_implemented():
+    """Per-group E is declared surface (the async-rounds hook) but must be
+    uniform today; a uniform tuple collapses to the scalar schedule."""
+    uni = api.ExperimentSpec(
+        schedule=api.RoundSchedule(group_rounds=(3, 3))).validate()
+    assert uni.schedule.uniform_group_rounds == 3
+    with pytest.raises(ValueError):
+        api.ExperimentSpec(
+            schedule=api.RoundSchedule(group_rounds=(2, 3))).validate()
+    with pytest.raises(ValueError):  # one entry per group
+        api.ExperimentSpec(
+            schedule=api.RoundSchedule(group_rounds=(2, 2, 2))).validate()
+
+
+def test_fit_horizon_data_continues_the_run():
+    """hz.data carries the advanced selection rng: two chained fits are
+    bit-exact against one long horizon (reusing the original data object
+    would replay the first segment's shard draws)."""
+    spec = make_spec("mtgc", "simulator", "flat")
+    engine = api.build(spec, quad_loss)
+    params0 = {"w": jnp.zeros(D)}
+
+    s_long, hz_long = api.fit(engine, make_data(), 4, params=params0,
+                              donate=False)
+    s_a, hz_a = api.fit(engine, make_data(), 2, params=params0, donate=False)
+    s_b, hz_b = api.fit(engine, hz_a.data, 2, state=s_a, donate=False)
+    assert_states_equal(s_b, s_long, "continued-horizon")
+    np.testing.assert_array_equal(np.asarray(hz_b.data.rng),
+                                  np.asarray(hz_long.data.rng))
+
+
+def test_schedule_periods_conflict_rejected():
+    """periods are authoritative; an explicitly different E/H must raise
+    instead of being silently ignored (defaults count as unset)."""
+    ok_default = api.ExperimentSpec(
+        levels=(2, 2), backend="multilevel",
+        schedule=api.RoundSchedule(periods=(8, 4)))
+    assert ok_default.validate() is ok_default
+    ok_consistent = api.ExperimentSpec(
+        levels=(2, 2), backend="multilevel",
+        schedule=api.RoundSchedule(group_rounds=2, local_steps=4,
+                                   periods=(8, 4)))
+    ok_consistent.validate()
+    with pytest.raises(ValueError):
+        api.ExperimentSpec(
+            levels=(2, 2), backend="multilevel",
+            schedule=api.RoundSchedule(group_rounds=5, local_steps=2,
+                                       periods=(8, 4))).validate()
+
+
+def test_participation_masks_match_round_mask_schedule():
+    """engine.participation_masks reproduces exactly the draw the round
+    functions make from a pre-round state rng."""
+    from repro.core import round_masks
+
+    spec = make_spec("mtgc", "simulator", "flat", client_participation=0.5,
+                     group_participation=0.75)
+    engine = api.build(spec, quad_loss)
+    rng = jax.random.PRNGKey(21)
+    masks, nxt = engine.participation_masks(rng)
+    want, want_nxt = round_masks(rng, spec.to_hfl_config())
+    np.testing.assert_array_equal(np.asarray(masks.client),
+                                  np.asarray(want.client))
+    np.testing.assert_array_equal(np.asarray(masks.group),
+                                  np.asarray(want.group))
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(want_nxt))
+
+    with pytest.raises(ValueError):
+        api.build(api.ExperimentSpec(
+            levels=(2, 2, 2), backend="multilevel",
+            schedule=api.RoundSchedule(periods=(4, 2, 1)),
+        ), quad_loss).participation_masks(rng)
+
+
+def test_uniform_tuple_schedule_builds_identically():
+    import dataclasses
+
+    params0 = {"w": jnp.zeros(D)}
+    base = make_spec("mtgc", "simulator", "flat")
+    tup = dataclasses.replace(
+        base, schedule=api.RoundSchedule(group_rounds=(E,) * G,
+                                         local_steps=H))
+    s1, _ = api.fit(api.build(base, quad_loss), make_data(), T,
+                    params=params0, donate=False)
+    s2, _ = api.fit(api.build(tup, quad_loss), make_data(), T,
+                    params=params0, donate=False)
+    assert_states_equal(s1, s2, "uniform-tuple-schedule")

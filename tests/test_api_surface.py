@@ -1,0 +1,155 @@
+"""API-surface snapshot: accidental breaks of the front door fail tier-1.
+
+``repro.api`` is the one construction path every entry layer uses, so its
+surface is a compatibility contract: ``__all__``, the
+``ExperimentSpec`` / ``RoundSchedule`` field names *and defaults*, and the
+declarative CLI table are snapshotted here. Deliberate surface changes
+update the snapshot in the same PR -- silent drift does not pass CI.
+
+Also smoke-covers the deliberately-standalone serving entry points
+(examples/serve_decode.py, repro.launch.serve) so import rot there is
+caught by the blocking job too.
+"""
+import dataclasses
+import importlib
+
+from repro import api
+
+EXPECTED_ALL = [
+    "ALGORITHMS",
+    "BACKENDS",
+    "BACKEND_ALGORITHMS",
+    "CLI_FLAGS",
+    "CliFlag",
+    "Engine",
+    "ExperimentSpec",
+    "FUSIONS",
+    "Horizon",
+    "LAYOUTS",
+    "MultiLevelEngine",
+    "MultiLevelMetrics",
+    "PackedBatches",
+    "RoundSchedule",
+    "ShardedEngine",
+    "SimulatorEngine",
+    "add_spec_args",
+    "build",
+    "fit",
+    "spec_from_args",
+]
+
+EXPECTED_SPEC_FIELDS = {
+    "levels": (2, 2),
+    "schedule": api.RoundSchedule(),
+    "algorithm": "mtgc",
+    "lr": 0.1,
+    "backend": "simulator",
+    "state_layout": "flat",
+    "fusion": "none",
+    "fused_mode": None,
+    "correction_init": "zero",
+    "prox_mu": 0.0,
+    "feddyn_alpha": 0.0,
+    "server_lr": 1.0,
+    "client_participation": 1.0,
+    "group_participation": 1.0,
+    "level_participation": None,
+    "participation_mode": "uniform",
+    "participation_weighting": "none",
+    "correction_dtype": None,
+}
+
+EXPECTED_SCHEDULE_FIELDS = {
+    "group_rounds": 2,
+    "local_steps": 5,
+    "microbatches": None,
+    "periods": None,
+}
+
+
+def test_api_all_snapshot():
+    assert sorted(api.__all__) == EXPECTED_ALL
+    for name in api.__all__:
+        assert hasattr(api, name), name
+
+
+def test_experiment_spec_fields_and_defaults_snapshot():
+    fields = {f.name: f.default for f in dataclasses.fields(api.ExperimentSpec)}
+    assert fields == EXPECTED_SPEC_FIELDS
+
+
+def test_round_schedule_fields_and_defaults_snapshot():
+    fields = {f.name: f.default for f in dataclasses.fields(api.RoundSchedule)}
+    assert fields == EXPECTED_SCHEDULE_FIELDS
+
+
+def test_cli_table_covers_spec_and_round_trips():
+    """Every CLI table row targets a real spec field, and a parsed command
+    line reconstructs the spec it describes."""
+    import argparse
+
+    spec_fields = {f.name for f in dataclasses.fields(api.ExperimentSpec)}
+    sched_fields = {f.name for f in dataclasses.fields(api.RoundSchedule)}
+    for row in api.CLI_FLAGS:
+        target, _, sub = row.field.partition(".")
+        assert target in spec_fields, row.field
+        if target == "schedule":
+            assert sub in sched_fields, row.field
+
+    ap = argparse.ArgumentParser()
+    api.add_spec_args(ap)
+    args = ap.parse_args([
+        "--levels", "3", "4", "--E", "6", "--H", "7", "--algorithm",
+        "feddyn", "--lr", "0.25", "--state-layout", "tree",
+        "--client-participation", "0.5", "--weighting", "inverse_prob"])
+    spec = api.spec_from_args(args)
+    assert spec.levels == (3, 4)
+    assert spec.schedule.group_rounds == 6
+    assert spec.schedule.local_steps == 7
+    assert (spec.algorithm, spec.lr) == ("feddyn", 0.25)
+    assert spec.state_layout == "tree"
+    assert spec.client_participation == 0.5
+    assert spec.participation_weighting == "inverse_prob"
+    spec.validate()
+
+    # Overrides (entry-point pins) win over parsed values.
+    pinned = api.spec_from_args(args, backend="sharded", microbatches=1,
+                                algorithm="mtgc")
+    assert pinned.backend == "sharded"
+    assert pinned.schedule.microbatches == 1
+    assert pinned.algorithm == "mtgc"
+
+    # Excluded rows disappear from the parser.
+    ap2 = argparse.ArgumentParser()
+    api.add_spec_args(ap2, exclude=("backend",))
+    assert "--backend" not in ap2.format_help()
+
+
+def test_legacy_constructors_are_delegating_shims():
+    """The three make_*_round entry points delegate to repro.api (their
+    docstrings say so, and they keep working)."""
+    from repro.core import make_global_round, make_multilevel_round
+    from repro.launch.train import make_sharded_round
+
+    for fn in (make_global_round, make_multilevel_round, make_sharded_round):
+        assert "deprecated" in fn.__doc__
+        assert "repro.api.build" in fn.__doc__
+
+
+def test_standalone_serving_entry_points_import():
+    """serve_decode / launch.serve are standalone from repro.api by design;
+    keep them importable (and documented as such)."""
+    serve_demo = importlib.import_module("examples.serve_decode")
+    assert "standalone" in serve_demo.__doc__.lower()
+    serve = importlib.import_module("repro.launch.serve")
+    assert "standalone" in serve.__doc__.lower()
+    assert callable(serve.make_serve_step)
+
+
+def test_repro_api_module_reexports_core_api():
+    import repro.api as front
+    import repro.core.api as impl
+
+    assert front.__all__ == impl.__all__
+    assert front.build is impl.build
+    assert front.ExperimentSpec is impl.ExperimentSpec

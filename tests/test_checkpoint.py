@@ -1,0 +1,115 @@
+"""Checkpoint round-trips for the engines' states (repro.checkpoint).
+
+The flat-buffer layouts (``core.packer.FlatBuffers``) and the sharded
+state's participation ``rng`` must survive save -> restore *losslessly*:
+a restored state driven one more round must be bit-identical to the
+original state driven one more round (same batches, same masks -- the rng
+words are part of the state).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import latest_step, restore, save
+from repro.core import HFLConfig, PackedBatches, hfl_init, select_round
+
+from test_mtgc_engine import D, quad_loss
+
+G, K, E, H = 2, 3, 2, 2
+
+
+def make_data(microbatches=None, seed=0, key=1):
+    rng = np.random.default_rng(seed)
+    steps = H * (microbatches or 1)
+    shape = (G, K, 4, steps, D)
+    arrays = {
+        "a": jnp.asarray(rng.normal(size=shape).astype(np.float32) + 2.0),
+        "b": jnp.asarray(rng.normal(size=shape).astype(np.float32)),
+    }
+    return PackedBatches(arrays, jax.random.PRNGKey(key), E, H, microbatches)
+
+
+def assert_states_equal(a, b, tag):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), tag
+    for i, (x, y) in enumerate(zip(la, lb)):
+        assert np.asarray(x).dtype == np.asarray(y).dtype, f"{tag}[leaf {i}]"
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{tag}[leaf {i}]")
+
+
+def one_round(engine, state, microbatches=None):
+    batches = select_round(make_data(microbatches), jax.random.PRNGKey(7))
+    return engine.round_fn(state, batches)[0]
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+def test_flat_hfl_state_roundtrip_bitexact(layout, tmp_path):
+    spec = api.ExperimentSpec(
+        levels=(G, K), state_layout=layout, lr=0.05,
+        schedule=api.RoundSchedule(group_rounds=E, local_steps=H),
+        client_participation=0.5)
+    engine = api.build(spec, quad_loss)
+    state = engine.init({"w": jnp.ones(D)}, jax.random.PRNGKey(3))
+    state = one_round(engine, state)      # populate z/y/dyn + advance rng
+
+    save(str(tmp_path), 1, state)
+    assert latest_step(str(tmp_path)) == 1
+    like = engine.init({"w": jnp.zeros(D)}, jax.random.PRNGKey(0))
+    restored = restore(str(tmp_path), 1, like)
+    assert_states_equal(restored, state, f"{layout}/roundtrip")
+
+    # One more round from the restored state is bit-identical -- including
+    # the participation masks its rng drives.
+    assert_states_equal(one_round(engine, restored),
+                        one_round(engine, state), f"{layout}/one-round")
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+def test_sharded_state_rng_roundtrip_bitexact(layout, tmp_path):
+    spec = api.ExperimentSpec(
+        levels=(G, K), backend="sharded", state_layout=layout, lr=0.05,
+        schedule=api.RoundSchedule(group_rounds=E, local_steps=H,
+                                   microbatches=1),
+        client_participation=0.5, group_participation=0.75)
+    engine = api.build(spec, quad_loss)
+    state = engine.init({"w": jnp.ones(D)}, jax.random.PRNGKey(11))
+    state = one_round(engine, state, microbatches=1)
+
+    save(str(tmp_path), 5, state)
+    like = engine.init({"w": jnp.zeros(D)}, jax.random.PRNGKey(0))
+    restored = restore(str(tmp_path), 5, like)
+    assert_states_equal(restored, state, f"sharded/{layout}")
+    np.testing.assert_array_equal(np.asarray(restored.rng),
+                                  np.asarray(state.rng))
+    assert_states_equal(one_round(engine, restored, microbatches=1),
+                        one_round(engine, state, microbatches=1),
+                        f"sharded/{layout}/one-round")
+
+
+def test_sharded_none_rng_survives(tmp_path):
+    spec = api.ExperimentSpec(
+        levels=(G, K), backend="sharded", state_layout="tree", lr=0.05,
+        schedule=api.RoundSchedule(group_rounds=E, local_steps=H,
+                                   microbatches=1))
+    engine = api.build(spec, quad_loss)
+    state = engine.init({"w": jnp.ones(D)})
+    assert state.rng is None              # full participation: no mask rng
+    save(str(tmp_path), 2, state)
+    restored = restore(str(tmp_path), 2, state)
+    assert restored.rng is None
+    assert_states_equal(restored, state, "sharded/none-rng")
+
+
+def test_restore_structure_mismatch_raises(tmp_path):
+    cfg = HFLConfig(num_groups=G, clients_per_group=K)
+    state = hfl_init({"w": jnp.ones(D)}, cfg)
+    save(str(tmp_path), 1, state)
+    other = hfl_init({"w": jnp.ones(D), "v": jnp.ones(2)}, cfg)
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), 1, other)   # missing leaf in the checkpoint
+    wide = hfl_init({"w": jnp.ones(D + 1)}, cfg)
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), 1, wide)    # shape mismatch

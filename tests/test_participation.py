@@ -379,8 +379,9 @@ def test_fused_update_matches_tree_map_path(partial_c):
 
 
 def test_fused_update_rejected_for_non_mtgc():
+    # ValueError, not AssertionError: config checks must survive python -O.
     cfg = HFLConfig(algorithm="fedprox", use_fused_update=True)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         make_global_round(quad_loss, cfg)
 
 

@@ -133,13 +133,14 @@ def test_correction_dtype_is_stored_narrow_and_rejected_for_flat():
     st, m = rf(st, pb)
     assert st.z["w"].dtype == jnp.bfloat16 and st.y["w"].dtype == jnp.bfloat16
     assert np.isfinite(np.asarray(m.loss)).all()
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         sharded_init({"w": jnp.zeros(D)}, G, K, use_flat_state=True,
                      correction_dtype=jnp.bfloat16)
 
 
 def test_fused_sharded_rejected_for_hfedavg():
-    with pytest.raises(AssertionError):
+    # ValueError, not AssertionError: config checks must survive python -O.
+    with pytest.raises(ValueError):
         make_sharded_round(quad_loss, E=1, H=1, lr=0.1, algorithm="hfedavg",
                            use_fused_update=True)
 
