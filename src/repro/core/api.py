@@ -33,11 +33,29 @@ legacy constructors (tests/test_api_conformance.py), and the legacy
 constructors themselves are now thin shims over this module, so every
 pre-existing parity/oracle test gates the redesign.
 
-:class:`RoundSchedule` is deliberately forward-looking: ``group_rounds``
-accepts a per-group tuple -- today it must be uniform (a ``ValueError``
-otherwise), reserving the declared slot where async group rounds
-(stale-``y`` handling, Wang & Wang 2022) will land without another
-constructor fork.
+**Async group rounds** land through the hook :class:`RoundSchedule`
+reserved for them: ``group_rounds`` accepts a per-group tuple
+``(E_1, ..., E_G)`` -- heterogeneous edges run at their own pace -- and
+``ExperimentSpec.staleness`` picks what the global aggregation does with
+groups that report late (:data:`STALENESS_POLICIES`: ``"sync"`` every
+group reports each window with its own E_g rounds of work; ``"naive"``
+stale reports merge at full weight; ``"discount"`` down-weights a report
+by ``1/(1+staleness)``; ``"delay_compensated"`` shifts it by the global
+progress the group missed). ``max_staleness`` bounds how late a report
+may be (groups beyond it are force-synced). All of it is implemented in
+the simulator and sharded engines behind :func:`build` -- no new
+constructor stack -- via static iteration masks over a padded
+``max(E_g)`` inner loop (core/staleness.py); the uniform/sync
+configuration stays bit-for-bit the legacy program
+(tests/test_async_rounds.py)::
+
+    spec = api.ExperimentSpec(
+        levels=(3, 4),
+        schedule=api.RoundSchedule(group_rounds=(4, 2, 1), local_steps=5),
+        staleness="discount", max_staleness=3)
+
+The multilevel backend keeps requiring a uniform schedule (validated up
+front).
 """
 from __future__ import annotations
 
@@ -57,6 +75,7 @@ from repro.core.driver import (
     run_rounds,
 )
 from repro.core.packer import as_tree
+from repro.core.staleness import STALENESS_POLICIES
 
 PyTree = Any
 
@@ -85,9 +104,12 @@ class RoundSchedule:
     """When each timescale fires, declared once for every backend.
 
     group_rounds: E -- group aggregations per global round. A scalar, or a
-        per-group tuple (length ``levels[0]``); per-group values must
-        currently be uniform -- the non-uniform case is the declared hook
-        where async group rounds (stale-``y`` handling) will land.
+        per-group tuple ``(E_1, ..., E_G)`` (length ``levels[0]``): a
+        non-uniform tuple enables async group rounds -- each group runs its
+        own E_g inside a padded ``max(E_g)`` window, and
+        ``ExperimentSpec.staleness`` picks the stale-report policy
+        (simulator and sharded backends; the multilevel backend requires a
+        uniform schedule).
     local_steps: H -- local SGD steps per group round.
     microbatches: A -- gradient-accumulation chunks per local step; only
         meaningful on the sharded backend (None elsewhere).
@@ -110,14 +132,33 @@ class RoundSchedule:
                                tuple(int(p) for p in self.periods))
 
     @property
+    def is_uniform(self) -> bool:
+        """True when every group runs the same number of group rounds."""
+        if isinstance(self.group_rounds, tuple):
+            return all(e == self.group_rounds[0] for e in self.group_rounds)
+        return True
+
+    @property
     def uniform_group_rounds(self) -> int:
-        """E as a scalar; raises for (future) non-uniform schedules."""
+        """E as a scalar; raises for non-uniform (async) schedules --
+        callers that can handle the padded loop use
+        :attr:`max_group_rounds` instead."""
         if isinstance(self.group_rounds, tuple):
             first = self.group_rounds[0]
-            _require(all(e == first for e in self.group_rounds),
-                     "async (non-uniform) per-group round schedules are not "
-                     f"supported yet: {self.group_rounds}")
+            _require(self.is_uniform,
+                     "this code path needs a uniform group-round schedule "
+                     f"(got {self.group_rounds}); async per-group schedules "
+                     "run through the padded max(E_g) loop "
+                     "(max_group_rounds)")
             return first
+        return int(self.group_rounds)
+
+    @property
+    def max_group_rounds(self) -> int:
+        """The padded inner-loop length max(E_g) -- what one global round's
+        batches carry; equals E for uniform schedules."""
+        if isinstance(self.group_rounds, tuple):
+            return max(self.group_rounds)
         return int(self.group_rounds)
 
     def level_periods(self, num_levels: int) -> tuple[int, ...]:
@@ -140,12 +181,15 @@ class RoundSchedule:
             _require(all(e >= 1 for e in gr), f"group_rounds must be >= 1: {gr}")
         else:
             _require(gr >= 1, f"group_rounds must be >= 1, got {gr}")
-        self.uniform_group_rounds  # raises on non-uniform schedules
         _require(self.local_steps >= 1,
                  f"local_steps must be >= 1, got {self.local_steps}")
         _require(self.microbatches is None or self.microbatches >= 1,
                  f"microbatches must be None or >= 1, got {self.microbatches}")
         if self.periods is not None:
+            _require(self.is_uniform,
+                     "explicit schedule.periods (the multilevel backend) "
+                     "require a uniform group-round schedule, got "
+                     f"group_rounds={self.group_rounds}")
             _require(len(self.periods) == len(levels),
                      f"one period per level: {len(self.periods)} periods for "
                      f"{len(levels)} levels")
@@ -189,6 +233,15 @@ class ExperimentSpec:
     participation_weighting: exactly ``HFLConfig``'s semantics.
     level_participation: per-level live-uplink fractions for M-level
         topologies (overrides the two scalar fractions there).
+    staleness: stale-report policy for async (non-uniform) group-round
+        schedules, one of :data:`STALENESS_POLICIES` -- "sync" (every group
+        reports each window; the only policy valid with uniform rounds),
+        "naive" (stale reports merge at full weight), "discount"
+        (1/(1+staleness) weighting) or "delay_compensated" (reports are
+        shifted by the global progress the group missed). See
+        core/staleness.py.
+    max_staleness: bound on report staleness -- groups whose cadence would
+        exceed it are force-synced; requires an async (non-"sync") policy.
     """
 
     levels: tuple[int, ...] = (2, 2)
@@ -209,6 +262,8 @@ class ExperimentSpec:
     participation_mode: str = "uniform"
     participation_weighting: str = "none"
     correction_dtype: str | None = None
+    staleness: str = "sync"
+    max_staleness: int | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "levels", tuple(int(n) for n in self.levels))
@@ -241,6 +296,32 @@ class ExperimentSpec:
                  "schedule.microbatches is a sharded-backend knob")
         if self.backend == "multilevel":
             self.schedule.level_periods(len(self.levels))
+
+        # Async group rounds: contradictory combos are rejected up front.
+        _require(self.staleness in STALENESS_POLICIES,
+                 f"unknown staleness policy {self.staleness!r} "
+                 f"(choose from {STALENESS_POLICIES})")
+        uniform = self.schedule.is_uniform
+        _require(uniform or self.backend != "multilevel",
+                 "non-uniform group_rounds (async group rounds) are a "
+                 "two-level feature: the multilevel backend requires a "
+                 "uniform schedule")
+        _require(self.staleness == "sync" or not uniform,
+                 f"staleness={self.staleness!r} is a no-op with uniform "
+                 "group_rounds: stale reports only arise when groups run "
+                 "different round counts -- set a per-group tuple or drop "
+                 "the policy")
+        _require(self.max_staleness is None or self.staleness != "sync",
+                 "max_staleness bounds async reporting; it needs a non-"
+                 "'sync' staleness policy")
+        _require(self.max_staleness is None or self.max_staleness >= 1,
+                 f"max_staleness must be None or >= 1, "
+                 f"got {self.max_staleness}")
+        _require(uniform or self.correction_init == "zero",
+                 "async group rounds require correction_init='zero' (the "
+                 "gradient init has no per-cycle analogue)")
+        _require(uniform or self.server_lr == 1.0,
+                 "async group rounds require server_lr=1.0")
 
         _require(self.state_layout in LAYOUTS,
                  f"unknown state_layout {self.state_layout!r} "
@@ -311,15 +392,29 @@ class ExperimentSpec:
                 + (1.0,) * (len(self.levels) - 2)
                 + (self.client_participation,))
 
+    def staleness_plan(self):
+        """The :class:`~repro.core.staleness.StalenessPlan` this spec's
+        schedule implies, or None for the uniform sync schedule (the
+        engines then take their legacy code path untouched)."""
+        from repro.core.staleness import make_plan
+
+        return make_plan(self.schedule.group_rounds, self.levels[0],
+                         self.staleness, self.max_staleness)
+
     def to_hfl_config(self) -> HFLConfig:
-        """The equivalent two-level ``HFLConfig`` (simulator engine)."""
+        """The equivalent two-level ``HFLConfig`` (simulator engine).
+
+        ``group_rounds`` is the padded loop length ``max(E_g)`` -- exactly
+        E for uniform schedules; per-group counts live in the staleness
+        plan, not the legacy config.
+        """
         _require(len(self.levels) == 2,
                  f"HFLConfig is two-level; spec has levels={self.levels}")
         return HFLConfig(
             num_groups=self.levels[0],
             clients_per_group=self.levels[1],
             local_steps=self.schedule.local_steps,
-            group_rounds=self.schedule.uniform_group_rounds,
+            group_rounds=self.schedule.max_group_rounds,
             lr=self.lr,
             algorithm=self.algorithm,
             correction_init=self.correction_init,
@@ -397,9 +492,11 @@ class _EngineBase:
         self.round_fn = self._build_round_fn()
 
     # Subclasses set these to the driver-layout (E, H) of one round.
+    # Async schedules pack the padded max(E_g) axis: stragglers' dead
+    # iterations draw shards that the iteration mask then gates out.
     @property
     def _pack_rounds(self) -> int:
-        return self.spec.schedule.uniform_group_rounds
+        return self.spec.schedule.max_group_rounds
 
     @property
     def _pack_steps(self) -> int:
@@ -471,16 +568,24 @@ class SimulatorEngine(_EngineBase):
     def _build_round_fn(self):
         from repro.core import engine as _engine
         self._cfg = self.spec.to_hfl_config().validate()
+        self._plan = self.spec.staleness_plan()
         from repro.core.engine import RoundMetrics
         self.metric_fields = RoundMetrics._fields
-        return _engine._build_global_round(self.loss_fn, self._cfg)
+        return _engine._build_global_round(self.loss_fn, self._cfg,
+                                           plan=self._plan)
 
     def init(self, params: PyTree, rng: jax.Array | None = None) -> PyTree:
         from repro.core.engine import hfl_init
-        return hfl_init(params, self._cfg, rng)
+        snaps = self._plan is not None and self._plan.needs_snapshots
+        return hfl_init(params, self._cfg, rng, staleness_snapshots=snaps)
 
     def global_model(self, state: PyTree) -> PyTree:
         from repro.core.engine import global_model
+        if self._plan is not None:
+            # Only a cadence-1 group's replicas are guaranteed fresh
+            # between async windows; the legacy reader takes [0, 0].
+            g = self._plan.fastest_group
+            return as_tree(jax.tree.map(lambda x: x[g, 0], state.params))
         return global_model(state)
 
 
@@ -548,9 +653,10 @@ class ShardedEngine(_EngineBase):
     def _build_round_fn(self):
         from repro.launch import train as _train
         spec = self.spec
+        self._plan = spec.staleness_plan()
         self.metric_fields = _train.ShardedMetrics._fields
         return _train._build_sharded_round(
-            self.loss_fn, E=spec.schedule.uniform_group_rounds,
+            self.loss_fn, E=spec.schedule.max_group_rounds,
             H=spec.schedule.local_steps, lr=spec.lr,
             algorithm=spec.algorithm,
             use_fused_update=spec.fusion == "fused",
@@ -558,7 +664,8 @@ class ShardedEngine(_EngineBase):
             client_participation=spec.client_participation,
             group_participation=spec.group_participation,
             participation_mode=spec.participation_mode,
-            participation_weighting=spec.participation_weighting)
+            participation_weighting=spec.participation_weighting,
+            plan=self._plan)
 
     @property
     def _pack_microbatches(self) -> int:
@@ -571,12 +678,19 @@ class ShardedEngine(_EngineBase):
             rng = jax.random.PRNGKey(0)
         dtype = (None if self.spec.correction_dtype is None
                  else jnp.dtype(self.spec.correction_dtype))
-        return sharded_init(params, G, K,
-                            use_flat_state=self.spec.state_layout == "flat",
-                            correction_dtype=dtype, rng=rng)
+        plan = self._plan
+        return sharded_init(
+            params, G, K,
+            use_flat_state=self.spec.state_layout == "flat",
+            correction_dtype=dtype, rng=rng,
+            round_counter=plan is not None and plan.needs_round_counter,
+            staleness_snapshots=plan is not None and plan.needs_snapshots)
 
     def global_model(self, state: PyTree) -> PyTree:
-        return as_tree(jax.tree.map(lambda x: x[0, 0], state.params))
+        # Under async schedules only a cadence-1 group holds the fresh
+        # global model between windows.
+        g = 0 if self._plan is None else self._plan.fastest_group
+        return as_tree(jax.tree.map(lambda x: x[g, 0], state.params))
 
 
 _ENGINES = {
@@ -643,18 +757,30 @@ def fit(
 
 @dataclasses.dataclass(frozen=True)
 class CliFlag:
-    """One row of the declarative spec<->argparse table."""
+    """One row of the declarative spec<->argparse table.
+
+    ``optional`` rows default to None on the parser and are skipped by
+    :func:`spec_from_args` when unset -- for flags that *override* another
+    row's field only when given (``--group-rounds`` over ``--E``) or whose
+    spec default is genuinely None (``--max-staleness``).
+    """
 
     field: str                     # ExperimentSpec field ("schedule.x" ok)
     flag: str                      # e.g. "--client-participation"
     help: str
-    type: type = str
+    type: Callable = str
     choices: tuple | None = None
     nargs: str | None = None
+    optional: bool = False
 
     @property
     def dest(self) -> str:
         return self.flag.lstrip("-").replace("-", "_")
+
+
+def _parse_group_rounds(s: str) -> tuple[int, ...]:
+    """'4,2,1' -> (4, 2, 1) -- the --group-rounds argparse type."""
+    return tuple(int(part) for part in s.split(","))
 
 
 #: The one table the CLIs are generated from: every entry maps one
@@ -665,6 +791,9 @@ CLI_FLAGS: tuple[CliFlag, ...] = (
             type=int, nargs="+"),
     CliFlag("schedule.group_rounds", "--E",
             "group aggregations per global round", type=int),
+    CliFlag("schedule.group_rounds", "--group-rounds",
+            "per-group async round counts, comma-separated (e.g. 4,2,1); "
+            "overrides --E", type=_parse_group_rounds, optional=True),
     CliFlag("schedule.local_steps", "--H",
             "local SGD steps per group round", type=int),
     CliFlag("algorithm", "--algorithm", "HFL algorithm",
@@ -689,6 +818,12 @@ CLI_FLAGS: tuple[CliFlag, ...] = (
             "masked-aggregation weighting: realized count or inverse "
             "inclusion probability (Horvitz-Thompson)",
             choices=("none", "inverse_prob")),
+    CliFlag("staleness", "--staleness-policy",
+            "stale-report policy for async (non-uniform) group rounds",
+            choices=STALENESS_POLICIES),
+    CliFlag("max_staleness", "--max-staleness",
+            "bound on report staleness; groups beyond it are force-synced",
+            type=int, optional=True),
 )
 
 
@@ -711,8 +846,11 @@ def add_spec_args(parser, *, defaults: ExperimentSpec | None = None,
     for row in CLI_FLAGS:
         if row.field in exclude or row.flag in exclude:
             continue
-        default = _spec_get(defaults, row.field)
-        kwargs = dict(help=f"{row.help} (default: {default})")
+        if row.optional:
+            default, kwargs = None, dict(help=row.help)
+        else:
+            default = _spec_get(defaults, row.field)
+            kwargs = dict(help=f"{row.help} (default: {default})")
         if row.choices is not None:
             kwargs["choices"] = row.choices
         else:
@@ -738,6 +876,8 @@ def spec_from_args(args, *, defaults: ExperimentSpec | None = None,
         if not hasattr(args, row.dest):
             continue
         value = getattr(args, row.dest)
+        if row.optional and value is None:
+            continue
         target, _, sub = row.field.partition(".")
         if target == "schedule":
             sched_kw[sub] = value
@@ -767,6 +907,7 @@ __all__ = [
     "MultiLevelMetrics",
     "PackedBatches",
     "RoundSchedule",
+    "STALENESS_POLICIES",
     "ShardedEngine",
     "SimulatorEngine",
     "add_spec_args",

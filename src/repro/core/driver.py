@@ -67,7 +67,8 @@ class PackedBatches:
     group_rounds / local_steps / microbatches: static layout of one round.
         ``microbatches=None`` emits engine-layout batches ``[E, H, G, K,
         ...]``; an integer emits the sharded microbatched layout
-        ``[E, H, A, G, K, ...]``.
+        ``[E, H, A, G, K, ...]``. A per-group ``group_rounds`` tuple
+        (async schedules) packs its padded maximum.
     topo_ndim: how many leading leaf axes index the client topology
         (2 for the two-level engines; M for an M-level tree, where the
         selected batches come back ``[E, H, *dims, ...]``).
@@ -79,11 +80,17 @@ class PackedBatches:
     __slots__ = ("arrays", "rng", "group_rounds", "local_steps",
                  "microbatches", "topo_ndim")
 
-    def __init__(self, arrays: PyTree, rng: jax.Array, group_rounds: int,
+    def __init__(self, arrays: PyTree, rng: jax.Array,
+                 group_rounds: int | tuple[int, ...],
                  local_steps: int, microbatches: int | None = None,
                  topo_ndim: int = 2):
         self.arrays = arrays
         self.rng = rng
+        if isinstance(group_rounds, (list, tuple)):
+            # Async per-group schedules pack the padded max(E_g) axis;
+            # stragglers' dead iterations draw shards that the engines'
+            # iteration mask then gates out of every aggregate.
+            group_rounds = max(int(e) for e in group_rounds)
         self.group_rounds = int(group_rounds)
         self.local_steps = int(local_steps)
         self.microbatches = None if microbatches is None else int(microbatches)
@@ -152,7 +159,7 @@ def pack_client_shards(
     data_arrays: dict[str, np.ndarray],
     indices: list,
     *,
-    group_rounds: int,
+    group_rounds: int | tuple[int, ...],
     local_steps: int,
     batch_size: int,
     shards: int = 16,
@@ -197,7 +204,7 @@ def pack_lm_shards(
     *,
     num_groups: int,
     clients_per_group: int,
-    group_rounds: int,
+    group_rounds: int | tuple[int, ...],
     local_steps: int,
     batch_size: int,
     seq_len: int,

@@ -87,6 +87,12 @@ class HFLState(NamedTuple):
     dyn:    [G, K, ...]  FedDyn gradient memory (zeros when unused).
     rng:    PRNG key for stochastic batching / participation sampling.
     round:  global round counter t.
+    snap:   [G, ...]     global model each group last downloaded -- only
+                         carried for delay-compensated async rounds
+                         (``hfl_init(..., staleness_snapshots=True)``);
+                         None otherwise (no pytree leaves).
+    glob:   [...]        the last aggregated global model, paired with
+                         ``snap`` (None otherwise).
     """
 
     params: PyTree
@@ -95,6 +101,8 @@ class HFLState(NamedTuple):
     dyn: PyTree
     rng: jax.Array
     round: jax.Array
+    snap: PyTree | None = None
+    glob: PyTree | None = None
 
 
 class RoundMetrics(NamedTuple):
@@ -106,12 +114,18 @@ class RoundMetrics(NamedTuple):
     participation: jax.Array  # scalar fraction of clients active this round
 
 
-def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None) -> HFLState:
+def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None,
+             *, staleness_snapshots: bool = False) -> HFLState:
     """Broadcast a single model to every client and zero the corrections.
 
     With ``cfg.use_flat_state`` the state leaves are contiguous flat
     buffers (FlatBuffers; see core/packer.py) rather than model pytrees --
     recover tree views with ``packer.as_tree`` / ``FlatBuffers.to_tree``.
+
+    ``staleness_snapshots`` additionally carries the per-group download
+    snapshots (``snap``/``glob``) that delay-compensated async rounds need
+    (core/staleness.py); both start at the initial model, so the first
+    compensation is exactly zero.
     """
     G, K = cfg.num_groups, cfg.clients_per_group
     rng = jax.random.PRNGKey(0) if rng is None else rng
@@ -122,6 +136,14 @@ def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None) -> H
             {k: jnp.broadcast_to(b, (G, K) + b.shape) for k, b in flat0.bufs.items()},
             packer,
         )
+        snap = glob = None
+        if staleness_snapshots:
+            glob = flat0
+            snap = FlatBuffers(
+                {k: jnp.broadcast_to(b, (G,) + b.shape)
+                 for k, b in flat0.bufs.items()},
+                packer,
+            )
         return HFLState(
             params=params,
             z=packer.zeros((G, K)),
@@ -129,11 +151,20 @@ def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None) -> H
             dyn=packer.zeros((G, K)),
             rng=rng,
             round=jnp.zeros((), jnp.int32),
+            snap=snap,
+            glob=glob,
         )
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0
     )
     y0 = jax.tree.map(lambda x: jnp.zeros((G,) + x.shape, x.dtype), params0)
+    snap = glob = None
+    if staleness_snapshots:
+        # jnp.array copies: glob must not alias the caller's params, or
+        # the driver's donated scans would delete them out from under it.
+        glob = jax.tree.map(jnp.array, params0)
+        snap = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (G,) + x.shape), params0)
     return HFLState(
         params=stacked,
         z=tu.tree_zeros_like(stacked),
@@ -141,6 +172,8 @@ def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None) -> H
         dyn=tu.tree_zeros_like(stacked),
         rng=rng,
         round=jnp.zeros((), jnp.int32),
+        snap=snap,
+        glob=glob,
     )
 
 
@@ -172,16 +205,34 @@ def make_global_round(
     runs the flat hot path, a pytree state runs the per-leaf reference
     path; ``loss_fn`` always sees model pytrees.
     """
+    import warnings
+
     from repro.core.api import ExperimentSpec, build
 
+    warnings.warn(
+        "make_global_round is deprecated: declare an "
+        "ExperimentSpec(backend='simulator') and use "
+        "repro.api.build(spec, loss_fn)", DeprecationWarning, stacklevel=2)
     return build(ExperimentSpec.from_hfl_config(cfg), loss_fn).round_fn
 
 
 def _build_global_round(
     loss_fn: Callable[[PyTree, PyTree], jax.Array],
     cfg: HFLConfig,
+    plan=None,
 ) -> Callable[[HFLState, PyTree], tuple[HFLState, RoundMetrics]]:
-    """The real round builder behind ``repro.api``'s simulator adapter."""
+    """The real round builder behind ``repro.api``'s simulator adapter.
+
+    ``plan`` (a ``core.staleness.StalenessPlan``) switches the round into
+    async group-round mode: batches carry ``e_pad = max(E_g)`` group rounds
+    per global round ("window"), the static per-group iteration mask gates
+    stragglers' dead iterations exactly like a participation mask, and the
+    global aggregation becomes a staleness-aware merge of the groups
+    reporting this window (report cadence, discount weights and delay
+    compensation all from the plan -- see core/staleness.py). With
+    ``plan=None`` (the uniform sync schedule) the traced program is the
+    legacy round, bit for bit.
+    """
     cfg.validate()
     algo = cfg.algorithm
     use_z = algo in ("mtgc", "local_corr")
@@ -194,6 +245,24 @@ def _build_global_round(
     G, K, H, E = cfg.num_groups, cfg.clients_per_group, cfg.local_steps, cfg.group_rounds
     lr = cfg.lr
     partial = not cfg.full_participation
+    async_mode = plan is not None
+    if async_mode:
+        if plan.num_groups != G:
+            raise ValueError(f"staleness plan covers {plan.num_groups} "
+                             f"groups, config has {G}")
+        if plan.e_pad != E:
+            raise ValueError(f"cfg.group_rounds must be the padded loop "
+                             f"length max(E_g)={plan.e_pad}, got {E}")
+        if cfg.correction_init != "zero":
+            raise ValueError(
+                "async group rounds require correction_init='zero' (the "
+                "gradient init has no per-cycle analogue)")
+        if cfg.server_lr != 1.0:
+            raise ValueError("async group rounds require server_lr=1.0")
+        # Static plan constants, captured by the traced round as literals.
+        em_all = jnp.asarray(plan.iteration_mask())              # [E_pad, G]
+        dw = jnp.asarray(plan.discount_weights())                # [G]
+        e_eff = jnp.asarray(plan.effective_rounds, jnp.float32)  # [G]
     # Horvitz-Thompson denominators (expected active counts per level);
     # None = realized-count weighting.
     ht = partial and cfg.participation_weighting == "inverse_prob"
@@ -220,12 +289,18 @@ def _build_global_round(
             cmask = None
             rng = state.rng
 
-        def step_loss_mean(loss):
-            if partial:
-                return jnp.sum(jnp.where(cmask != 0, loss, 0)) / n_active
+        if async_mode:
+            # Per-window report/fresh masks from the carried round counter
+            # (constant ones when every cadence is 1, i.e. policy "sync").
+            rep = plan.report_mask(state.round)               # [G]
+            fresh = plan.fresh_mask(state.round)              # [G]
+
+        def step_loss_mean(loss, am, n_act):
+            if am is not None:
+                return jnp.sum(jnp.where(am != 0, loss, 0)) / n_act
             return jnp.mean(loss)
 
-        def local_phase_tree(x, z, y, dyn, anchor, batches_eh):
+        def local_phase_tree(x, z, y, dyn, anchor, batches_eh, am, n_act):
             """H local SGD steps (Alg. 1, lines 6-7). batches_eh: [H, G, K, ...]."""
             y_b = tu.tree_broadcast_to_axis(y, 1, K)  # [G, K, ...]
 
@@ -257,16 +332,16 @@ def _build_global_round(
                             d, dyn, x, anchor,
                         )
                     x_new = jax.tree.map(lambda xi, di: xi - lr * di, x, d)
-                if partial:
-                    x = tu.tree_select(cmask, x_new, x)
+                if am is not None:
+                    x = tu.tree_select(am, x_new, x)
                 else:
                     x = x_new
-                return x, step_loss_mean(loss)
+                return x, step_loss_mean(loss, am, n_act)
 
             x, losses = jax.lax.scan(step, x, batches_eh)
             return x, losses
 
-        def local_phase_flat(x, z, y, dyn, anchor, batches_eh):
+        def local_phase_flat(x, z, y, dyn, anchor, batches_eh, am, n_act):
             """Flat local phase: repack at the phase boundary, never per step.
 
             z and y are constant for the whole phase, so they unpack once
@@ -286,11 +361,11 @@ def _build_global_round(
                     xf = FlatBuffers(
                         {k: kops.mtgc_update_flat(
                             xf.bufs[k], gf.bufs[k], z.bufs[k], y.bufs[k],
-                            cmask, lr=lr, mode=fused_mode)
+                            am, lr=lr, mode=fused_mode)
                          for k in xf.bufs},
                         packer,
                     )
-                    return xf, step_loss_mean(loss)
+                    return xf, step_loss_mean(loss, am, n_act)
 
                 return jax.lax.scan(step, x, batches_eh)
 
@@ -318,38 +393,53 @@ def _build_global_round(
                     if use_dyn:
                         d = d - next(it) + cfg.feddyn_alpha * (xi - ai)
                     x_new = xi - lr * d
-                    if partial:
-                        return jnp.where(tu.expand_mask(cmask, x_new) != 0, x_new, xi)
+                    if am is not None:
+                        return jnp.where(tu.expand_mask(am, x_new) != 0, x_new, xi)
                     return x_new
 
                 extra = [t for t, used in ((z_t, use_z), (y_t, use_y),
                                            (anchor_t, use_prox or use_dyn),
                                            (dyn_t, use_dyn)) if used]
                 x_t = jax.tree.map(upd, x_t, g, *extra)
-                return x_t, step_loss_mean(loss)
+                return x_t, step_loss_mean(loss, am, n_act)
 
             x_t, losses = jax.lax.scan(step, packer.unflatten(x), batches_eh)
             return packer.flatten(x_t), losses
 
         local_phase = local_phase_flat if flat else local_phase_tree
 
-        def group_round(carry, batches_eh):
+        def group_round(carry, inp):
             """One group round e: local phase + group aggregation (lines 5-9)."""
             x, z, y, dyn, anchor = carry
-            x_end, losses = local_phase(x, z, y, dyn, anchor, batches_eh)
+            if async_mode:
+                # Iteration liveness joins the participation mask: a
+                # straggler past its E_g rounds this window is frozen
+                # exactly like an unsampled client (mask data, static
+                # shape), so the group mean, z update and dissemination
+                # below need no further gating.
+                batches_eh, em = inp
+                am = (em[:, None] * cmask if partial
+                      else jnp.broadcast_to(em[:, None], (G, K)))
+                n_act = jnp.maximum(jnp.sum(am), 1.0)
+            else:
+                batches_eh = inp
+                am = cmask if partial else None
+                n_act = n_active if partial else None
+            x_end, losses = local_phase(x, z, y, dyn, anchor, batches_eh,
+                                        am, n_act)
 
             # Group aggregation (line 8): xbar_j = mean over (active) clients
             # (realized-count or expected-count denominator per weighting).
-            if partial:
-                xbar = tu.tree_masked_mean(x_end, cmask, axis=1,
+            if am is not None:
+                xbar = tu.tree_masked_mean(x_end, am, axis=1,
                                            denom=cdenom)            # [G, ...]
             else:
                 xbar = tu.tree_mean(x_end, axis=1)                  # [G, ...]
             xbar_b = tu.tree_broadcast_to_axis(xbar, 1, K)          # [G, K, ...]
 
             diff = tu.tree_sub(x_end, xbar_b)
-            if partial:
-                drift = tu.tree_masked_sq_norm(diff, cmask) / n_active
+            if am is not None:
+                drift = tu.tree_masked_sq_norm(diff, am) / n_act
             else:
                 drift = tu.tree_sq_norm(diff) / (G * K)
 
@@ -359,10 +449,10 @@ def _build_global_round(
                 z_new = jax.tree.map(
                     lambda zi, xe, xb: zi + (xe - xb) / (H * lr), z, x_end, xbar_b
                 )
-                z = tu.tree_select(cmask, z_new, z) if partial else z_new
+                z = tu.tree_select(am, z_new, z) if am is not None else z_new
             # Model dissemination: every active client restarts from the
             # group model; inactive clients stay frozen.
-            x = tu.tree_select(cmask, xbar_b, x_end) if partial else xbar_b
+            x = tu.tree_select(am, xbar_b, x_end) if am is not None else xbar_b
             return (x, z, y, dyn, anchor), (losses, drift)
 
         # --- Round initialization (lines 2-4) ---------------------------
@@ -371,8 +461,16 @@ def _build_global_round(
             if cfg.correction_init == "zero":
                 # Footnote 2: experiments initialize z = 0 each round
                 # (participants only -- frozen clients keep their z).
-                z0 = tu.tree_zeros_like(z)
-                z = tu.tree_select(cmask, z0, z) if partial else z0
+                if async_mode:
+                    # Generalized per report cycle: only groups starting
+                    # from a fresh download reset; mid-cycle stragglers
+                    # keep accumulating z across windows.
+                    zmask = (fresh[:, None] * cmask if partial
+                             else jnp.broadcast_to(fresh[:, None], (G, K)))
+                    z = tu.tree_select(zmask, tu.tree_zeros_like(z), z)
+                else:
+                    z0 = tu.tree_zeros_like(z)
+                    z = tu.tree_select(cmask, z0, z) if partial else z0
             else:
                 # Theoretical init (line 3): z_i = -g_i + mean_group g_i,
                 # evaluated with the first local batch xi_{i,0}^{t,0}.
@@ -423,26 +521,90 @@ def _build_global_round(
         anchor = x  # group-round-start model (FedProx / FedDyn reference)
 
         # --- E group rounds (lines 5-9) ---------------------------------
+        # Async windows scan the padded e_pad = max(E_g) iterations and
+        # feed the static per-group iteration mask alongside the batches.
+        scan_xs = (batches, em_all) if async_mode else batches
         if flat:
             # y, dyn and anchor are constant across the E group rounds:
             # close over them instead of threading parameter-sized flat
             # buffers through the scan carry (loop-invariant constants
             # instead of per-iteration carry traffic).
-            def group_round_flat(carry, batches_eh):
+            def group_round_flat(carry, inp):
                 xc, zc = carry
                 (xc, zc, _, _, _), out = group_round(
-                    (xc, zc, y, dyn, anchor), batches_eh)
+                    (xc, zc, y, dyn, anchor), inp)
                 return (xc, zc), out
 
             (x, z), (losses, drifts) = jax.lax.scan(
-                group_round_flat, (x, z), batches)
+                group_round_flat, (x, z), scan_xs)
         else:
             (x, z, y, dyn, _), (losses, drifts) = jax.lax.scan(
-                group_round, (x, z, y, dyn, anchor), batches
+                group_round, (x, z, y, dyn, anchor), scan_xs
             )
 
         # --- Global aggregation (line 10) --------------------------------
-        if partial:
+        if async_mode:
+            # Staleness-aware merge of the groups reporting this window:
+            # reports enter a weighted mean -- report cadence (rep) x policy
+            # weight (dw) x the participation estimator -- and non-reporting
+            # groups neither upload nor download (see core/staleness.py).
+            if partial:
+                gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
+                # Recovery, not estimation: active replicas of group j all
+                # hold the disseminated xbar_j from its last live iteration.
+                xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
+                obs = rep * gact
+            else:
+                xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)
+                obs = rep
+            if plan.needs_snapshots:
+                if state.snap is None or state.glob is None:
+                    raise ValueError(
+                        "staleness='delay_compensated' carries per-group "
+                        "download snapshots in the state: build it with "
+                        "hfl_init(..., staleness_snapshots=True) "
+                        "(repro.api.build does this for you)")
+                # First-order delay compensation: shift a stale report by
+                # the global progress its group missed since it last
+                # downloaded (glob - snap_g; exactly zero for fresh groups).
+                xbar_used = jax.tree.map(
+                    lambda xj, gl, sn: xj + (jnp.expand_dims(gl, 0) - sn),
+                    xbar_j, state.glob, state.snap)
+            else:
+                xbar_used = xbar_j
+
+            w = rep * dw                        # [G] deterministic weights
+            if partial and ht:
+                # Horvitz-Thompson over reachable groups composed with the
+                # deterministic report/policy weights: an empty reachable
+                # report contributes an exact zero while the denominator
+                # stays the expected reporting mass.
+                wsum = w * gmask
+                sup = wsum * gact
+                den = (gdenom / G) * jnp.sum(w)
+            elif partial:
+                wsum = w * gact
+                sup = wsum
+                den_raw = jnp.sum(wsum)
+                den = jnp.where(den_raw > 0, den_raw, 1.0)
+            else:
+                # >= 1 always: the pace-setting group (r_g = 1) reports
+                # every window at full weight.
+                wsum = w
+                sup = wsum
+                den = jnp.sum(w)
+
+            def _stale_merge(v):
+                live = tu.expand_mask(sup, v) != 0
+                return jnp.sum(
+                    jnp.where(live, v, 0) * tu.expand_mask(wsum, v),
+                    axis=0) / den
+
+            xbar = jax.tree.map(_stale_merge, xbar_used)
+            gdrift = tu.tree_masked_sq_norm(
+                tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G)), obs
+            ) / jnp.maximum(jnp.sum(obs), 1.0)
+        elif partial:
             # A group with zero sampled clients never feeds the y update or
             # dissemination of its own replicas (gact gating). Under
             # realized-count weighting it is also renormalized out of the
@@ -464,10 +626,24 @@ def _build_global_round(
         # Group-global correction update (line 11):
         #   y_j += (xbar_j^{t,E} - xbar^{t+1}) / (H * E * lr)
         if use_y:
-            y_new = jax.tree.map(
-                lambda yj, xj, xg: yj + (xj - xg) / (H * E * lr), y, xbar_j, xbar
-            )
-            y = tu.tree_select(gact, y_new, y) if partial else y_new
+            if async_mode:
+                # Per report cycle: a reporting group ran E_g * r_g group
+                # rounds since its last download. The policy discount dw
+                # applies to the *merge* only -- y is a tracking estimator
+                # and must update at full rate, or a transient y decays
+                # geometrically (factor 1 - dw/G per report) and its bias
+                # dominates the trajectory (see core/staleness.py).
+                coef = 1.0 / (e_eff * H * lr)                         # [G]
+                xbar_g = tu.tree_broadcast_to_axis(xbar, 0, G)
+                y_new = jax.tree.map(
+                    lambda yj, xj, xg: yj + tu.expand_mask(coef, yj) * (xj - xg),
+                    y, xbar_used, xbar_g)
+                y = tu.tree_select(obs, y_new, y)
+            else:
+                y_new = jax.tree.map(
+                    lambda yj, xj, xg: yj + (xj - xg) / (H * E * lr), y, xbar_j, xbar
+                )
+                y = tu.tree_select(gact, y_new, y) if partial else y_new
 
         # FedDyn gradient-memory update (per client, after its local work).
         if use_dyn:
@@ -489,7 +665,26 @@ def _build_global_round(
         x_glob = jax.tree.map(
             lambda xg: jnp.broadcast_to(xg, (G, K) + xg.shape), xbar
         )
-        x = tu.tree_select(cmask, x_glob, x) if partial else x_glob
+        if async_mode:
+            # Only reporting groups download; stragglers keep their
+            # mid-cycle replicas (that lag is exactly what makes their
+            # next report stale).
+            dmask = (rep[:, None] * cmask if partial
+                     else jnp.broadcast_to(rep[:, None], (G, K)))
+            x = tu.tree_select(dmask, x_glob, x)
+        else:
+            x = tu.tree_select(cmask, x_glob, x) if partial else x_glob
+
+        snap, glob = state.snap, state.glob
+        if async_mode and plan.needs_snapshots:
+            # Reporting groups record the global model they just
+            # downloaded; the server records it as the latest global
+            # (guarded: a window where every reporter came up empty under
+            # partial participation aggregates nothing).
+            any_obs = (jnp.sum(obs) > 0).astype(jnp.float32)
+            snap = tu.tree_select(
+                obs, tu.tree_broadcast_to_axis(xbar, 0, G), snap)
+            glob = tu.tree_select(any_obs, xbar, glob)
 
         metrics = RoundMetrics(
             loss=losses,
@@ -501,7 +696,8 @@ def _build_global_round(
             else jnp.ones((), jnp.float32),
         )
         new_state = HFLState(
-            params=x, z=z, y=y, dyn=dyn, rng=rng, round=state.round + 1
+            params=x, z=z, y=y, dyn=dyn, rng=rng, round=state.round + 1,
+            snap=snap, glob=glob,
         )
         return new_state, metrics
 

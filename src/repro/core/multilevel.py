@@ -193,7 +193,16 @@ def make_multilevel_round(
     realized-count ('none') or Horvitz-Thompson ('inverse_prob') masked
     aggregation (see module docstring). Returns (state, losses[P_1]).
     """
+    import warnings
+
     from repro.core.api import ExperimentSpec, RoundSchedule, build
+
+    warnings.warn(
+        "make_multilevel_round is deprecated: declare an "
+        "ExperimentSpec(backend='multilevel', "
+        "schedule=RoundSchedule(periods=...)) and use "
+        "repro.api.build(spec, loss_fn)",
+        DeprecationWarning, stacklevel=2)
 
     dims = tuple(int(n) for n in dims)
     periods = tuple(int(p) for p in periods)

@@ -1,0 +1,208 @@
+"""Async group rounds: the static staleness plan behind every engine.
+
+MTGC's two-timescale schedule assumes every group completes the same E
+group rounds before each global aggregation. Real hierarchical systems
+have straggler edges (Wang & Wang, *Asynchronous Hierarchical Federated
+Learning*): groups run at their own pace and report late. This module
+turns a heterogeneous per-group round count ``(E_1, ..., E_G)`` plus a
+staleness policy into the *static* quantities both round engines need, so
+the compiled program shape never depends on which group is slow:
+
+* **Padded inner loop**: every global round ("window") scans
+  ``e_pad = max(E_g)`` group rounds; group g is live only for iterations
+  ``e < E_g`` (:meth:`StalenessPlan.iteration_mask`, a ``[e_pad, G]``
+  constant). Masked iterations gate the local steps, the z update and the
+  within-group dissemination exactly like participation masks -- data, not
+  structure.
+* **Report cadence**: under an async policy a straggler does not truncate
+  its cycle to the window; it keeps working across windows and reports
+  (uploads its group model, downloads the fresh global model) only every
+  ``r_g = ceil(e_pad / E_g)`` windows. Its report is then *stale*: the
+  global model advanced ``tau_g = r_g - 1`` aggregations since the group
+  last downloaded. ``max_staleness`` bounds the cadence -- a group whose
+  staleness would exceed the bound is force-synced at
+  ``r_g = max_staleness + 1`` windows, reporting whatever partial cycle it
+  has. Cadences are static, so the per-window report/fresh masks are pure
+  functions of the carried round counter ``t`` (same shapes every window).
+* **Stale-merge policy** (what the global aggregation does with a report
+  that is ``tau_g`` windows old):
+
+  - ``"sync"``: no late reporting at all -- every group reports every
+    window with whatever ``E_g`` rounds of work it finished (the
+    heterogeneous-work, zero-staleness baseline; ``r_g = 1``).
+  - ``"naive"``: stale reports merge at full weight, no correction -- the
+    control the staleness-aware policies are measured against
+    (benchmarks/bench_async.py).
+  - ``"discount"``: a report ``tau`` windows old is down-weighted by
+    ``1 / (1 + tau)`` in the global mean (FedAsync-style polynomial
+    staleness weighting). The discount applies to the *merge only*: the
+    y-correction update always runs at full rate, because y is a
+    tracking estimator -- discounting its increment makes a transient y
+    decay only geometrically across report cycles, and the stale
+    correction then biases every descent step in between
+    (benchmarks/bench_async.py measures exactly this failure mode).
+  - ``"delay_compensated"``: the report is shifted by the global progress
+    the group missed -- ``xbar_g + (glob - snap_g)`` where ``snap_g`` is
+    the global model the group last downloaded and ``glob`` the current
+    one (first-order delay compensation, DC-ASGD-style); the y update
+    sees the compensated model. Needs the ``snap``/``glob`` state fields
+    (``hfl_init(..., staleness_snapshots=True)`` /
+    ``sharded_init(..., staleness_snapshots=True)``).
+
+The y-correction update generalizes per group: a reporting group ran
+``E_g * r_g`` group rounds since its last download, so its increment is
+``(xbar_g - xbar) / (H * E_g * r_g * lr)`` (times the discount weight
+under ``"discount"``) -- for the uniform sync schedule this is exactly
+Algorithm 1 line 11.
+
+``make_plan`` returns ``None`` for a uniform schedule under ``"sync"``:
+the engines then take their legacy code path untouched, so the async
+machinery is provably a superset (tests/test_async_rounds.py gates the
+uniform tuple bit-exactly against the scalar-E engines).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Stale-merge policies accepted by ``ExperimentSpec.staleness``.
+STALENESS_POLICIES = ("sync", "naive", "discount", "delay_compensated")
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessPlan:
+    """Static async-round quantities for one two-level experiment.
+
+    group_rounds: per-group E_g, one entry per group.
+    policy: one of :data:`STALENESS_POLICIES`.
+    max_staleness: bound on tau_g; groups whose cadence would exceed it
+        are force-synced every ``max_staleness + 1`` windows.
+    """
+
+    group_rounds: tuple[int, ...]
+    policy: str = "sync"
+    max_staleness: int | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "group_rounds",
+                           tuple(int(e) for e in self.group_rounds))
+        if self.policy not in STALENESS_POLICIES:
+            raise ValueError(f"unknown staleness policy {self.policy!r} "
+                             f"(choose from {STALENESS_POLICIES})")
+        if any(e < 1 for e in self.group_rounds):
+            raise ValueError(f"group_rounds must be >= 1: {self.group_rounds}")
+        if self.max_staleness is not None and self.max_staleness < 1:
+            raise ValueError(
+                f"max_staleness must be None or >= 1, got {self.max_staleness}")
+
+    # ------------------------------------------------------------- static
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.group_rounds)
+
+    @property
+    def e_pad(self) -> int:
+        """Padded inner-loop length: max(E_g) group rounds per window."""
+        return max(self.group_rounds)
+
+    @property
+    def periods(self) -> tuple[int, ...]:
+        """Report cadence r_g in windows (1 = reports every window)."""
+        if self.policy == "sync":
+            return (1,) * self.num_groups
+        rs = tuple(math.ceil(self.e_pad / e) for e in self.group_rounds)
+        if self.max_staleness is not None:
+            rs = tuple(min(r, self.max_staleness + 1) for r in rs)
+        return rs
+
+    @property
+    def staleness(self) -> tuple[int, ...]:
+        """tau_g: global aggregations a group's report is behind by."""
+        return tuple(r - 1 for r in self.periods)
+
+    @property
+    def effective_rounds(self) -> tuple[int, ...]:
+        """Group rounds a group runs per report cycle (the y divisor)."""
+        return tuple(e * r for e, r in zip(self.group_rounds, self.periods))
+
+    @property
+    def needs_round_counter(self) -> bool:
+        """True when report/fresh masks depend on the round counter t."""
+        return any(r > 1 for r in self.periods)
+
+    @property
+    def needs_snapshots(self) -> bool:
+        """True when the state must carry snap/glob (delay compensation)."""
+        return self.policy == "delay_compensated"
+
+    @property
+    def fastest_group(self) -> int:
+        """A group with r_g = 1: its replicas always hold the fresh global
+        model between windows (used to read the global model out of an
+        async state)."""
+        return int(np.argmax(np.asarray(self.group_rounds)))
+
+    def iteration_mask(self) -> np.ndarray:
+        """[e_pad, G] float32: group g is live at inner iteration e < E_g."""
+        e = np.arange(self.e_pad)[:, None]
+        return (e < np.asarray(self.group_rounds)[None, :]).astype(np.float32)
+
+    def discount_weights(self) -> np.ndarray:
+        """[G] float32 stale-merge weights (1/(1+tau) under 'discount')."""
+        if self.policy == "discount":
+            return (1.0 / (1.0 + np.asarray(self.staleness))).astype(np.float32)
+        return np.ones(self.num_groups, np.float32)
+
+    # ------------------------------------------------------------- traced
+
+    def report_mask(self, t) -> jax.Array:
+        """[G] 0/1: group g reports (uploads + downloads) at window t.
+
+        ``t`` is the 0-based carried round counter; a group with cadence
+        r reports at windows r-1, 2r-1, ... (everyone reports at the end
+        of its first full cycle). Constant ones when no cadence exceeds 1.
+        """
+        if not self.needs_round_counter:
+            return jnp.ones((self.num_groups,), jnp.float32)
+        r = jnp.asarray(self.periods, jnp.int32)
+        return ((t + 1) % r == 0).astype(jnp.float32)
+
+    def fresh_mask(self, t) -> jax.Array:
+        """[G] 0/1: group g starts window t from a fresh download (it
+        reported at the end of window t-1; everyone is fresh at t=0), so
+        its z correction re-initializes this window."""
+        if not self.needs_round_counter:
+            return jnp.ones((self.num_groups,), jnp.float32)
+        r = jnp.asarray(self.periods, jnp.int32)
+        return (t % r == 0).astype(jnp.float32)
+
+
+def make_plan(group_rounds, num_groups: int, policy: str = "sync",
+              max_staleness: int | None = None) -> StalenessPlan | None:
+    """The plan for a schedule, or ``None`` for the legacy sync path.
+
+    ``group_rounds`` is a scalar E or a per-group tuple; a uniform
+    schedule under ``"sync"`` returns None so callers dispatch to the
+    unmodified (bit-exact) uniform round builders.
+    """
+    if isinstance(group_rounds, (list, tuple)):
+        vec = tuple(int(e) for e in group_rounds)
+        if len(vec) != num_groups:
+            raise ValueError(f"per-group group_rounds needs one entry per "
+                             f"group: {len(vec)} entries for {num_groups} "
+                             "groups")
+    else:
+        vec = (int(group_rounds),) * num_groups
+    uniform = all(e == vec[0] for e in vec)
+    if uniform and policy == "sync":
+        if max_staleness is not None:
+            raise ValueError("max_staleness only bounds async (non-sync) "
+                             "staleness policies")
+        return None
+    return StalenessPlan(group_rounds=vec, policy=policy,
+                         max_staleness=max_staleness)

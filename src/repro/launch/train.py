@@ -84,6 +84,9 @@ class ShardedHFLState(NamedTuple):
     z: PyTree        # [G, K, ...] client->group corrections
     y: PyTree        # [G, ...]    group->global corrections
     rng: jax.Array | None = None  # participation sampling key (None = full)
+    round: jax.Array | None = None  # window counter (async cadences only)
+    snap: PyTree | None = None   # [G, ...] last-downloaded global per group
+    glob: PyTree | None = None   # [...]    last global model (delay comp.)
 
 
 class ShardedMetrics(NamedTuple):
@@ -97,13 +100,21 @@ class ShardedMetrics(NamedTuple):
 def sharded_init(params0: PyTree, G: int, K: int,
                  *, use_flat_state: bool = False,
                  correction_dtype=None,
-                 rng: jax.Array | None = None) -> ShardedHFLState:
+                 rng: jax.Array | None = None,
+                 round_counter: bool = False,
+                 staleness_snapshots: bool = False) -> ShardedHFLState:
     """Stacked per-client state. ``correction_dtype`` stores z/y in a
     narrower dtype (bf16) -- a beyond-paper memory optimization; the update
     math still runs in the params' dtype. Incompatible with flat states
     (one contiguous buffer per dtype requires params and corrections to
     share it). ``rng`` seeds per-round participation sampling; required by
-    rounds built with partial participation, ignored otherwise."""
+    rounds built with partial participation, ignored otherwise.
+
+    ``round_counter`` carries the window counter async report cadences are
+    derived from; ``staleness_snapshots`` adds the per-group download
+    snapshots (``snap``/``glob``) delay-compensated async rounds need (see
+    core/staleness.py). Both default off: the sync state is unchanged."""
+    rnd = jnp.zeros((), jnp.int32) if round_counter else None
     if use_flat_state:
         if correction_dtype is not None:
             raise ValueError(
@@ -115,15 +126,31 @@ def sharded_init(params0: PyTree, G: int, K: int,
             {k: jnp.broadcast_to(b, (G, K) + b.shape) for k, b in flat0.bufs.items()},
             packer,
         )
+        snap = glob = None
+        if staleness_snapshots:
+            glob = flat0
+            snap = FlatBuffers(
+                {k: jnp.broadcast_to(b, (G,) + b.shape)
+                 for k, b in flat0.bufs.items()},
+                packer,
+            )
         return ShardedHFLState(
             params=stacked, z=packer.zeros((G, K)), y=packer.zeros((G,)),
-            rng=rng,
+            rng=rng, round=rnd, snap=snap, glob=glob,
         )
     stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0)
     cdt = correction_dtype
     z0 = jax.tree.map(lambda x: jnp.zeros(x.shape, cdt or x.dtype), stacked)
     y0 = jax.tree.map(lambda x: jnp.zeros((G,) + x.shape, cdt or x.dtype), params0)
-    return ShardedHFLState(params=stacked, z=z0, y=y0, rng=rng)
+    snap = glob = None
+    if staleness_snapshots:
+        # jnp.array copies: glob must not alias the caller's params, or
+        # the driver's donated scans would delete them out from under it.
+        glob = jax.tree.map(jnp.array, params0)
+        snap = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (G,) + x.shape), params0)
+    return ShardedHFLState(params=stacked, z=z0, y=y0, rng=rng,
+                           round=rnd, snap=snap, glob=glob)
 
 
 def make_sharded_round(
@@ -166,7 +193,14 @@ def make_sharded_round(
     state-for-state (tests/test_weighting.py). The participation mask rides
     into the fused Pallas kernel in-register.
     """
+    import warnings
+
     from repro.core.api import ExperimentSpec, RoundSchedule, build
+
+    warnings.warn(
+        "make_sharded_round is deprecated: declare an "
+        "ExperimentSpec(backend='sharded') and use "
+        "repro.api.build(spec, loss_fn)", DeprecationWarning, stacklevel=2)
 
     spec = ExperimentSpec(
         schedule=RoundSchedule(group_rounds=E, local_steps=H),
@@ -193,11 +227,22 @@ def _build_sharded_round(
     group_participation: float = 1.0,
     participation_mode: str = "uniform",
     participation_weighting: str = "none",
+    plan=None,
 ) -> Callable[[ShardedHFLState, PyTree], tuple[ShardedHFLState, ShardedMetrics]]:
     """The real production-round builder behind ``repro.api``'s adapter.
 
     See :func:`make_sharded_round` (the delegating shim) for the full
     semantics; parameters and the returned contract are identical.
+
+    ``plan`` (a ``core.staleness.StalenessPlan``) switches the round into
+    async group-round mode: ``E`` becomes the padded loop length
+    ``max(E_g)``, the static per-group iteration mask composes with the
+    participation freeze/recover machinery (and rides into the fused
+    Pallas kernel in-register exactly like the client mask), and the
+    global aggregation becomes the staleness-aware merge of the groups
+    reporting this window -- identical semantics to the simulator engine's
+    async path (see core/engine.py and core/staleness.py). ``plan=None``
+    traces the legacy sync program bit for bit.
     """
     use_corr = algorithm == "mtgc"
     if algorithm not in ("mtgc", "hfedavg"):
@@ -220,6 +265,14 @@ def _build_sharded_round(
     partial = client_participation < 1.0 or group_participation < 1.0
     ht = partial and participation_weighting == "inverse_prob"
     vg = jax.vmap(jax.vmap(jax.value_and_grad(loss_fn)))  # over [G, K]
+    async_mode = plan is not None
+    if async_mode:
+        if plan.e_pad != E:
+            raise ValueError(f"E must be the padded loop length "
+                             f"max(E_g)={plan.e_pad}, got {E}")
+        em_all = jnp.asarray(plan.iteration_mask())              # [E_pad, G]
+        dw = jnp.asarray(plan.discount_weights())                # [G]
+        e_eff = jnp.asarray(plan.effective_rounds, jnp.float32)  # [G]
 
     def round_fn(state: ShardedHFLState, batches: PyTree):
         x, z, y = state.params, state.z, state.y
@@ -233,7 +286,7 @@ def _build_sharded_round(
                     "partial participation draws per-round masks from the "
                     "state: build it with sharded_init(..., rng=key)")
             # Identical key schedule to core.participation.round_masks, so
-            # host pipelines and the simulator engine agree on the masks.
+            # host pipelines and the jitted round agree on the masks.
             mkey, rng = jax.random.split(state.rng)
             masks = sample_hfl_masks(
                 mkey, G, K, client_participation, group_participation,
@@ -246,26 +299,47 @@ def _build_sharded_round(
                                      participation_mode) * G if ht else None)
         else:
             cmask = None
+            cdenom = gdenom = None
             rng = state.rng
+
+        if async_mode:
+            if plan.num_groups != G:
+                raise ValueError(f"staleness plan covers {plan.num_groups} "
+                                 f"groups, state has {G}")
+            if plan.needs_round_counter and state.round is None:
+                raise ValueError(
+                    "this async schedule derives report cadences from the "
+                    "window counter: build the state with "
+                    "sharded_init(..., round_counter=True) (repro.api.build "
+                    "does this for you)")
+            t = state.round if state.round is not None else 0
+            rep = plan.report_mask(t)                      # [G]
+            fresh = plan.fresh_mask(t)                     # [G]
 
         if use_corr:
             # Alg. 1 line 3 (with the experimental zero init of footnote 2):
             # the client-group correction restarts every global round --
             # for participants only; frozen clients keep their z. Only y
-            # persists across rounds.
-            z0 = tu.tree_zeros_like(z)
-            z = tu.tree_select(cmask, z0, z) if partial else z0
+            # persists across rounds. Async: restarts per report *cycle*
+            # (only groups starting from a fresh download reset).
+            if async_mode:
+                zmask = (fresh[:, None] * cmask if partial
+                         else jnp.broadcast_to(fresh[:, None], (G, K)))
+                z = tu.tree_select(zmask, tu.tree_zeros_like(z), z)
+            else:
+                z0 = tu.tree_zeros_like(z)
+                z = tu.tree_select(cmask, z0, z) if partial else z0
 
-        def step_loss_mean(lsum_gk, inv_a):
+        def step_loss_mean(lsum_gk, inv_a, am, n_act):
             """Scalar step loss from the per-client sums over A chunks."""
             lpc = lsum_gk * inv_a
-            if partial:
-                return jnp.sum(jnp.where(cmask != 0, lpc, 0)) / n_active
+            if am is not None:
+                return jnp.sum(jnp.where(am != 0, lpc, 0)) / n_act
             return jnp.mean(lpc)
 
-        def step_grad_norm(g, inv_a):
-            if partial:
-                return tu.tree_masked_sq_norm(g, cmask) * inv_a * inv_a
+        def step_grad_norm(g, inv_a, am):
+            if am is not None:
+                return tu.tree_masked_sq_norm(g, am) * inv_a * inv_a
             return tu.tree_sq_norm(g) * inv_a * inv_a
 
         def accum_grads(x_t, batch_h):
@@ -284,7 +358,7 @@ def _build_sharded_round(
             )
             return g, lsum, 1.0 / A
 
-        def local_step(carry, batch_h):
+        def local_step(carry, batch_h, am, n_act):
             # batch_h leaves: [A, G, K, chunk, ...]
             x, z, y = carry
             g, lsum, inv_a = accum_grads(x, batch_h)
@@ -293,13 +367,14 @@ def _build_sharded_round(
                 # pass (kernels/mtgc_update.py). The [G, K, n]-layout kernel
                 # broadcasts y across clients via its block index map, so y
                 # is never materialized per client even per leaf -- and the
-                # participation mask gates frozen replicas in-register.
+                # participation/iteration mask gates frozen replicas
+                # in-register.
                 def fused_leaf(xi, gi, zi, yi):
                     Gl, Kl = xi.shape[:2]
                     out = kops.mtgc_update_flat(
                         xi.reshape(Gl, Kl, -1), gi.reshape(Gl, Kl, -1),
                         zi.reshape(Gl, Kl, -1), yi.reshape(Gl, -1),
-                        cmask, lr=lr, g_scale=inv_a, mode=fmode)
+                        am, lr=lr, g_scale=inv_a, mode=fmode)
                     return out.reshape(xi.shape)
 
                 x = jax.tree.map(fused_leaf, x, g, z, y)
@@ -310,14 +385,14 @@ def _build_sharded_round(
                     ),
                     x, g, z, y,
                 )
-                x = tu.tree_select(cmask, x_new, x) if partial else x_new
+                x = tu.tree_select(am, x_new, x) if am is not None else x_new
             else:
                 x_new = jax.tree.map(lambda xi, gi: xi - lr * gi * inv_a, x, g)
-                x = tu.tree_select(cmask, x_new, x) if partial else x_new
-            return (x, z, y), (step_loss_mean(lsum, inv_a),
-                               step_grad_norm(g, inv_a))
+                x = tu.tree_select(am, x_new, x) if am is not None else x_new
+            return (x, z, y), (step_loss_mean(lsum, inv_a, am, n_act),
+                               step_grad_norm(g, inv_a, am))
 
-        def local_phase_flat(x, z, y, batch_e):
+        def local_phase_flat(x, z, y, batch_e, am, n_act):
             """H local steps on a flat state, repacking at the phase edge.
 
             z/y are constant inside the phase: their sum collapses into one
@@ -332,12 +407,12 @@ def _build_sharded_round(
                     xf = FlatBuffers(
                         {k: kops.mtgc_update_flat(
                             xf.bufs[k], gf.bufs[k], z.bufs[k], y.bufs[k],
-                            cmask, lr=lr, g_scale=inv_a, mode=fmode)
+                            am, lr=lr, g_scale=inv_a, mode=fmode)
                          for k in xf.bufs},
                         packer,
                     )
-                    return xf, (step_loss_mean(lsum, inv_a),
-                                step_grad_norm(gf, inv_a))
+                    return xf, (step_loss_mean(lsum, inv_a, am, n_act),
+                                step_grad_norm(gf, inv_a, am))
 
                 return jax.lax.scan(step, x, batch_e)
 
@@ -354,32 +429,47 @@ def _build_sharded_round(
                 else:
                     x_new = jax.tree.map(
                         lambda xi, gi: xi - lr * gi * inv_a, x_t, g)
-                if partial:
+                if am is not None:
                     x_t = jax.tree.map(
                         lambda xn, xi: jnp.where(
-                            tu.expand_mask(cmask, xn) != 0, xn, xi),
+                            tu.expand_mask(am, xn) != 0, xn, xi),
                         x_new, x_t)
                 else:
                     x_t = x_new
-                return x_t, (step_loss_mean(lsum, inv_a),
-                             step_grad_norm(g, inv_a))
+                return x_t, (step_loss_mean(lsum, inv_a, am, n_act),
+                             step_grad_norm(g, inv_a, am))
 
             x_t, out = jax.lax.scan(step, packer.unflatten(x), batch_e)
             return packer.flatten(x_t), out
 
-        def group_round(carry, batch_e):
+        def group_round(carry, inp):
             # batch_e leaves: [H, A, G, K, chunk, ...]
             x, z, y = carry
+            if async_mode:
+                # Iteration liveness joins the participation mask: a
+                # straggler past its E_g rounds this window is frozen
+                # exactly like an unsampled client, so aggregation, z
+                # update and dissemination below need no further gating.
+                batch_e, em = inp
+                am = (em[:, None] * cmask if partial
+                      else jnp.broadcast_to(em[:, None], (G, K)))
+                n_act = jnp.maximum(jnp.sum(am), 1.0)
+            else:
+                batch_e = inp
+                am = cmask if partial else None
+                n_act = n_active if partial else None
             if flat:
-                x, (losses, gnorm) = local_phase_flat(x, z, y, batch_e)
+                x, (losses, gnorm) = local_phase_flat(x, z, y, batch_e,
+                                                      am, n_act)
             else:
                 (x, z, y), (losses, gnorm) = jax.lax.scan(
-                    local_step, (x, z, y), batch_e)
+                    lambda c, b: local_step(c, b, am, n_act), (x, z, y),
+                    batch_e)
             with jax.named_scope("group_agg"):
                 # Group aggregation: mean over (active) clients; under
                 # inverse_prob the masked sum divides by the expected count.
-                xbar = (tu.tree_masked_mean(x, cmask, axis=1, denom=cdenom)
-                        if partial else tu.tree_mean(x, axis=1))  # [G, ...]
+                xbar = (tu.tree_masked_mean(x, am, axis=1, denom=cdenom)
+                        if am is not None else tu.tree_mean(x, axis=1))
             if use_corr:
                 # z_i += (x_{i,H} - xbar_j) / (H * lr)   (Alg. 1 line 9)
                 z_new = jax.tree.map(
@@ -389,19 +479,70 @@ def _build_sharded_round(
                     ).astype(zi.dtype),
                     z, x, xbar,
                 )
-                z = tu.tree_select(cmask, z_new, z) if partial else z_new
+                z = tu.tree_select(am, z_new, z) if am is not None else z_new
             # dissemination: every active client restarts from its group
             # model; frozen clients keep their params.
             xbar_b = jax.tree.map(
                 lambda xb, xi: jnp.broadcast_to(xb[:, None], xi.shape), xbar, x
             )
-            x = tu.tree_select(cmask, xbar_b, x) if partial else xbar_b
+            x = tu.tree_select(am, xbar_b, x) if am is not None else xbar_b
             return (x, z, y), (losses, gnorm)
 
-        (x, z, y), (losses, gnorms) = jax.lax.scan(group_round, (x, z, y), batches)
+        (x, z, y), (losses, gnorms) = jax.lax.scan(
+            group_round, (x, z, y),
+            (batches, em_all) if async_mode else batches)
 
         # --- global aggregation + y update (Alg. 1 lines 10-11) ----------
-        if partial:
+        if async_mode:
+            # Staleness-aware merge of the groups reporting this window:
+            # same semantics as the simulator engine's async path (see
+            # core/engine.py and core/staleness.py), f32 math for narrow
+            # correction dtypes.
+            if partial:
+                gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
+                with jax.named_scope("global_agg"):
+                    xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
+                obs = rep * gact
+            else:
+                xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)
+                obs = rep
+            if plan.needs_snapshots:
+                if state.snap is None or state.glob is None:
+                    raise ValueError(
+                        "staleness='delay_compensated' carries per-group "
+                        "download snapshots in the state: build it with "
+                        "sharded_init(..., staleness_snapshots=True) "
+                        "(repro.api.build does this for you)")
+                xbar_used = jax.tree.map(
+                    lambda xj, gl, sn: xj + (jnp.expand_dims(gl, 0) - sn),
+                    xbar_j, state.glob, state.snap)
+            else:
+                xbar_used = xbar_j
+
+            w = rep * dw
+            if partial and ht:
+                wsum = w * gmask
+                sup = wsum * gact
+                den = (gdenom / G) * jnp.sum(w)
+            elif partial:
+                wsum = w * gact
+                sup = wsum
+                den_raw = jnp.sum(wsum)
+                den = jnp.where(den_raw > 0, den_raw, 1.0)
+            else:
+                wsum = w
+                sup = wsum
+                den = jnp.sum(w)
+
+            def _stale_merge(v):
+                live = tu.expand_mask(sup, v) != 0
+                return jnp.sum(
+                    jnp.where(live, v, 0) * tu.expand_mask(wsum, v),
+                    axis=0) / den
+
+            with jax.named_scope("global_agg"):
+                xbar = jax.tree.map(_stale_merge, xbar_used)
+        elif partial:
             with jax.named_scope("global_agg"):
                 # Same recovery-then-estimate aggregate as the simulator
                 # engine (tree_group_global_mean), keeping the two round
@@ -413,18 +554,54 @@ def _build_sharded_round(
             with jax.named_scope("global_agg"):
                 xbar = tu.tree_mean(xbar_j, axis=0)
         if use_corr:
-            y_new = jax.tree.map(
-                lambda yj, xj, xg: (
-                    yj.astype(jnp.float32)
-                    + (xj.astype(jnp.float32) - xg.astype(jnp.float32)) / (H * E * lr)
-                ).astype(yj.dtype),
-                y, xbar_j, xbar,
-            )
-            y = tu.tree_select(gact, y_new, y) if partial else y_new
+            if async_mode:
+                # y_j += (report_j - xbar) / (H * E_j * r_j * lr): a
+                # reporting group ran E_j * r_j group rounds since its
+                # download. The policy discount dw weights the merge only
+                # -- the y tracking update runs at full rate (see
+                # core/staleness.py).
+                coef = 1.0 / (e_eff * H * lr)                         # [G]
+                y_new = jax.tree.map(
+                    lambda yj, xj, xg: (
+                        yj.astype(jnp.float32)
+                        + tu.expand_mask(coef, yj)
+                        * (xj.astype(jnp.float32)
+                           - jnp.expand_dims(xg.astype(jnp.float32), 0))
+                    ).astype(yj.dtype),
+                    y, xbar_used, xbar,
+                )
+                y = tu.tree_select(obs, y_new, y)
+            else:
+                y_new = jax.tree.map(
+                    lambda yj, xj, xg: (
+                        yj.astype(jnp.float32)
+                        + (xj.astype(jnp.float32) - xg.astype(jnp.float32)) / (H * E * lr)
+                    ).astype(yj.dtype),
+                    y, xbar_j, xbar,
+                )
+                y = tu.tree_select(gact, y_new, y) if partial else y_new
         x_glob = jax.tree.map(
             lambda xg: jnp.broadcast_to(xg, (G, K) + xg.shape), xbar
         )
-        x = tu.tree_select(cmask, x_glob, x) if partial else x_glob
+        if async_mode:
+            # Only reporting groups download; stragglers keep their
+            # mid-cycle replicas.
+            dmask = (rep[:, None] * cmask if partial
+                     else jnp.broadcast_to(rep[:, None], (G, K)))
+            x = tu.tree_select(dmask, x_glob, x)
+        else:
+            x = tu.tree_select(cmask, x_glob, x) if partial else x_glob
+
+        snap, glob = state.snap, state.glob
+        if async_mode and plan.needs_snapshots:
+            any_obs = (jnp.sum(obs) > 0).astype(jnp.float32)
+            snap = tu.tree_select(
+                obs, jax.tree.map(
+                    lambda xg, sn: jnp.broadcast_to(
+                        jnp.expand_dims(xg, 0), sn.shape), xbar, snap),
+                snap)
+            glob = tu.tree_select(any_obs, xbar, glob)
+        new_round = None if state.round is None else state.round + 1
         metrics = ShardedMetrics(
             loss=losses,
             grad_norm=gnorms[-1, -1],
@@ -433,7 +610,8 @@ def _build_sharded_round(
             participation=(jnp.sum(cmask) / (G * K)) if partial
             else jnp.ones((), jnp.float32),
         )
-        return ShardedHFLState(params=x, z=z, y=y, rng=rng), metrics
+        return ShardedHFLState(params=x, z=z, y=y, rng=rng, round=new_round,
+                               snap=snap, glob=glob), metrics
 
     return round_fn
 

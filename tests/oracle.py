@@ -39,3 +39,63 @@ def mtgc_round(x0, grads, G, K, E, H, lr, z=None, y=None, use_z=True, use_y=True
         for g in range(G):
             y[g] = y[g] + (xbar_j[g] - xbar) / (H * E * lr)
     return xbar, z, y
+
+
+def mtgc_async_run(x0, grads, G, K, group_rounds, H, lr, windows, *,
+                   policy="naive", max_staleness=None):
+    """``windows`` async MTGC global rounds (core/staleness.py semantics),
+    as literal loops: per-group E_g over a padded max(E_g) window, report
+    cadence r_g = ceil(e_pad / E_g) (clipped to max_staleness + 1), stale
+    reports merged per ``policy``. Full participation only.
+
+    Returns (x [G, K, d] replicas, z [G, K, d], y [G, d]).
+    """
+    import math
+
+    d = x0.shape[0]
+    e_pad = max(group_rounds)
+    if policy == "sync":
+        periods = [1] * G
+    else:
+        periods = [math.ceil(e_pad / e) for e in group_rounds]
+        if max_staleness is not None:
+            periods = [min(r, max_staleness + 1) for r in periods]
+    dw = [1.0 / r if policy == "discount" else 1.0 for r in periods]
+    e_eff = [e * r for e, r in zip(group_rounds, periods)]
+
+    x = np.stack([[x0.copy() for _ in range(K)] for _ in range(G)])
+    z = np.zeros((G, K, d))
+    y = np.zeros((G, d))
+    snap = np.stack([x0.copy() for _ in range(G)])
+    glob = x0.copy()
+
+    for t in range(windows):
+        for g in range(G):
+            if t % periods[g] == 0:                     # fresh download
+                z[g] = 0.0
+        for e in range(e_pad):
+            for g in range(G):
+                if e >= group_rounds[g]:                # past its E_g: frozen
+                    continue
+                for h in range(H):
+                    for k in range(K):
+                        grad = grads(g, k, x[g, k])
+                        x[g, k] = x[g, k] - lr * (grad + z[g, k] + y[g])
+                xbar_g = x[g].mean(axis=0)
+                for k in range(K):
+                    z[g, k] = z[g, k] + (x[g, k] - xbar_g) / (H * lr)
+                    x[g, k] = xbar_g.copy()
+        rep = [(t + 1) % r == 0 for r in periods]
+        xbar_used = np.stack([
+            x[g, 0] + (glob - snap[g]) if policy == "delay_compensated"
+            else x[g, 0] for g in range(G)])
+        w = np.array([r * dwg for r, dwg in zip(rep, dw)])
+        xbar = (w[:, None] * xbar_used).sum(axis=0) / w.sum()
+        for g in range(G):
+            if rep[g]:
+                y[g] = y[g] + (xbar_used[g] - xbar) / (e_eff[g] * H * lr)
+                for k in range(K):
+                    x[g, k] = xbar.copy()
+                snap[g] = xbar.copy()
+        glob = xbar.copy()
+    return x, z, y

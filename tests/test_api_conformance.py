@@ -271,15 +271,17 @@ def test_experiment_spec_validate_raises_value_error():
             api.ExperimentSpec(**kw).validate()
 
 
-def test_async_schedule_hook_rejected_until_implemented():
-    """Per-group E is declared surface (the async-rounds hook) but must be
-    uniform today; a uniform tuple collapses to the scalar schedule."""
+def test_async_schedule_hook_is_live():
+    """Per-group E -- the async-rounds hook -- is implemented: a uniform
+    tuple collapses to the scalar schedule, a non-uniform tuple validates
+    (async group rounds; see tests/test_async_rounds.py), and a
+    wrong-length tuple still raises."""
     uni = api.ExperimentSpec(
         schedule=api.RoundSchedule(group_rounds=(3, 3))).validate()
     assert uni.schedule.uniform_group_rounds == 3
-    with pytest.raises(ValueError):
-        api.ExperimentSpec(
-            schedule=api.RoundSchedule(group_rounds=(2, 3))).validate()
+    het = api.ExperimentSpec(
+        schedule=api.RoundSchedule(group_rounds=(2, 3))).validate()
+    assert het.schedule.max_group_rounds == 3
     with pytest.raises(ValueError):  # one entry per group
         api.ExperimentSpec(
             schedule=api.RoundSchedule(group_rounds=(2, 2, 2))).validate()

@@ -30,6 +30,7 @@ EXPECTED_ALL = [
     "MultiLevelMetrics",
     "PackedBatches",
     "RoundSchedule",
+    "STALENESS_POLICIES",
     "ShardedEngine",
     "SimulatorEngine",
     "add_spec_args",
@@ -57,6 +58,8 @@ EXPECTED_SPEC_FIELDS = {
     "participation_mode": "uniform",
     "participation_weighting": "none",
     "correction_dtype": None,
+    "staleness": "sync",
+    "max_staleness": None,
 }
 
 EXPECTED_SCHEDULE_FIELDS = {
@@ -111,6 +114,21 @@ def test_cli_table_covers_spec_and_round_trips():
     assert spec.client_participation == 0.5
     assert spec.participation_weighting == "inverse_prob"
     spec.validate()
+
+    # Optional rows are skipped while unset: --E decided group_rounds
+    # above, and max_staleness kept its spec default.
+    assert spec.max_staleness is None
+
+    # Async flags round-trip; --group-rounds (a per-group tuple) wins
+    # over --E.
+    args_async = ap.parse_args([
+        "--levels", "3", "4", "--E", "9", "--group-rounds", "4,2,1",
+        "--staleness-policy", "discount", "--max-staleness", "3"])
+    spec_async = api.spec_from_args(args_async)
+    assert spec_async.schedule.group_rounds == (4, 2, 1)
+    assert spec_async.staleness == "discount"
+    assert spec_async.max_staleness == 3
+    spec_async.validate()
 
     # Overrides (entry-point pins) win over parsed values.
     pinned = api.spec_from_args(args, backend="sharded", microbatches=1,

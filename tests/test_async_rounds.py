@@ -1,0 +1,360 @@
+"""Async group rounds: plan semantics, oracle parity, bit-exact sync gate.
+
+Four layers gate the feature (core/staleness.py + the engine async paths):
+
+1. The static plan itself (cadences, masks, force-sync bound) by hand.
+2. A pure-python async oracle (tests/oracle.py::mtgc_async_run) vs the
+   simulator engine for every staleness policy.
+3. The superset proof: a uniform tuple + ``staleness="sync"`` must be
+   *bit-exact* against the pre-existing engines across all six algorithms
+   x {tree, flat} x participation modes -- the async machinery dispatches
+   to the untouched legacy program (``make_plan`` returns None).
+4. Cross-path parity in async mode: flat == tree, sharded == simulator,
+   and the contradictory spec combos each raise a targeted ValueError.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import ALGORITHMS
+from repro.core.staleness import STALENESS_POLICIES, StalenessPlan, make_plan
+
+from oracle import mtgc_async_run
+from test_api_conformance import make_data, make_spec, assert_states_equal
+from test_api_conformance import G, K, E, H, T
+from test_mtgc_engine import D, quad_loss, make_batches, np_grad
+
+ASYNC_POLICIES = tuple(p for p in STALENESS_POLICIES if p != "sync")
+
+
+# ----------------------------------------------------------------- plan
+
+
+def test_plan_cadences_by_hand():
+    plan = StalenessPlan((4, 2, 1), policy="discount")
+    assert plan.e_pad == 4
+    assert plan.periods == (1, 2, 4)
+    assert plan.staleness == (0, 1, 3)
+    assert plan.effective_rounds == (4, 4, 4)
+    assert plan.fastest_group == 0
+    np.testing.assert_allclose(plan.discount_weights(), [1, 0.5, 0.25])
+    em = plan.iteration_mask()
+    assert em.shape == (4, 3)
+    np.testing.assert_array_equal(em[:, 0], [1, 1, 1, 1])
+    np.testing.assert_array_equal(em[:, 1], [1, 1, 0, 0])
+    np.testing.assert_array_equal(em[:, 2], [1, 0, 0, 0])
+    # Report at the end of each full cycle; fresh at the start of the next.
+    np.testing.assert_array_equal(plan.report_mask(0), [1, 0, 0])
+    np.testing.assert_array_equal(plan.report_mask(1), [1, 1, 0])
+    np.testing.assert_array_equal(plan.report_mask(3), [1, 1, 1])
+    np.testing.assert_array_equal(plan.fresh_mask(0), [1, 1, 1])
+    np.testing.assert_array_equal(plan.fresh_mask(1), [1, 0, 0])
+    np.testing.assert_array_equal(plan.fresh_mask(2), [1, 1, 0])
+
+
+def test_plan_force_sync_bound():
+    unbounded = StalenessPlan((8, 1), policy="naive")
+    assert unbounded.periods == (1, 8)
+    bounded = StalenessPlan((8, 1), policy="naive", max_staleness=1)
+    assert bounded.periods == (1, 2)
+    assert bounded.effective_rounds == (8, 2)
+    # "sync" reports every window regardless of the round heterogeneity.
+    assert StalenessPlan((8, 1), policy="sync").periods == (1, 1)
+
+
+def test_make_plan_dispatch():
+    assert make_plan(3, 2) is None
+    assert make_plan((3, 3), 2) is None
+    plan = make_plan((3, 1), 2, policy="discount")
+    assert isinstance(plan, StalenessPlan)
+    assert not make_plan((3, 1), 2, policy="naive").needs_snapshots
+    assert make_plan((3, 1), 2, "delay_compensated").needs_snapshots
+    with pytest.raises(ValueError):
+        make_plan((3, 1, 2), 2)  # one entry per group
+    with pytest.raises(ValueError):
+        make_plan(3, 2, max_staleness=2)  # bound without async policy
+
+
+# --------------------------------------------------- oracle (simulator)
+
+
+@pytest.mark.parametrize("policy", ASYNC_POLICIES)
+@pytest.mark.parametrize("group_rounds,max_staleness",
+                         [((4, 2, 1), None), ((4, 2, 1), 1), ((2, 1), None)])
+def test_simulator_matches_async_oracle(policy, group_rounds, max_staleness):
+    Go, Ko, Ho, lr, windows = len(group_rounds), 2, 2, 0.05, 4
+    e_pad = max(group_rounds)
+    a, b, batches = make_batches(Go, Ko, e_pad, Ho)
+    spec = api.ExperimentSpec(
+        levels=(Go, Ko), algorithm="mtgc", lr=lr, state_layout="tree",
+        schedule=api.RoundSchedule(group_rounds=group_rounds, local_steps=Ho),
+        staleness=policy, max_staleness=max_staleness)
+    engine = api.build(spec, quad_loss)
+    state = engine.init({"w": jnp.zeros(D)})
+    round_fn = jax.jit(engine.round_fn)
+    for _ in range(windows):
+        state, metrics = round_fn(state, jax.tree.map(jnp.asarray, batches))
+        assert np.isfinite(np.asarray(metrics.loss)).all()
+
+    x, z, y = mtgc_async_run(
+        np.zeros(D, np.float32), np_grad(a, b), Go, Ko, group_rounds, Ho,
+        lr, windows, policy=policy, max_staleness=max_staleness)
+    tag = f"{policy}/{group_rounds}/ms={max_staleness}"
+    np.testing.assert_allclose(np.asarray(state.params["w"]), x,
+                               rtol=2e-4, atol=2e-5, err_msg=tag)
+    np.testing.assert_allclose(np.asarray(state.z["w"]), z,
+                               rtol=2e-4, atol=2e-4, err_msg=tag)
+    np.testing.assert_allclose(np.asarray(state.y["w"]), y,
+                               rtol=2e-4, atol=2e-4, err_msg=tag)
+
+    # Straggler cadence is visible in the state: after the first window
+    # only cadence-1 groups have downloaded the global model.
+    plan = spec.staleness_plan()
+    gm = np.asarray(engine.global_model(state)["w"])
+    np.testing.assert_allclose(
+        gm, np.asarray(state.params["w"])[plan.fastest_group, 0])
+
+
+def test_straggler_reports_late_and_y_freezes_between_reports():
+    """Window-by-window structure for group_rounds=(2, 1): the E_g=1
+    straggler skips the window-0 aggregation (keeps its mid-cycle model,
+    y frozen) and joins at window 1 (everyone back on the global model)."""
+    spec = api.ExperimentSpec(
+        levels=(2, 2), algorithm="mtgc", lr=0.05, state_layout="tree",
+        schedule=api.RoundSchedule(group_rounds=(2, 1), local_steps=H),
+        staleness="naive")
+    engine = api.build(spec, quad_loss)
+    _, _, batches = make_batches(2, 2, 2, H, seed=3)
+    batches = jax.tree.map(jnp.asarray, batches)
+    state = engine.init({"w": jnp.zeros(D)})
+
+    state, _ = engine.round_fn(state, batches)
+    w = np.asarray(state.params["w"])
+    y = np.asarray(state.y["w"])
+    assert np.array_equal(w[0, 0], w[0, 1])          # replicas agree
+    assert np.array_equal(w[1, 0], w[1, 1])
+    assert not np.allclose(w[0, 0], w[1, 0])         # straggler lags
+    # Window 0's sole reporter IS the global mean: every y stays zero.
+    np.testing.assert_array_equal(y, np.zeros_like(y))
+
+    state, _ = engine.round_fn(state, batches)
+    w = np.asarray(state.params["w"])
+    y = np.asarray(state.y["w"])
+    np.testing.assert_array_equal(w[1], w[0])        # straggler reported
+    assert np.any(y[0] != 0) and np.any(y[1] != 0)   # both merged stale-vs-
+    np.testing.assert_allclose(y.sum(axis=0), 0, atol=1e-5)  # fresh reports
+
+
+def test_delay_compensation_is_exact_zero_when_fresh():
+    """A fresh group's compensation term (glob - snap) is exactly zero, so
+    the first window of delay_compensated equals naive bit-for-bit."""
+    _, _, batches = make_batches(2, 2, 2, H, seed=5)
+    batches = jax.tree.map(jnp.asarray, batches)
+    states = {}
+    for policy in ("naive", "delay_compensated"):
+        spec = api.ExperimentSpec(
+            levels=(2, 2), algorithm="mtgc", lr=0.05, state_layout="tree",
+            schedule=api.RoundSchedule(group_rounds=(2, 1), local_steps=H),
+            staleness=policy)
+        engine = api.build(spec, quad_loss)
+        state, _ = engine.round_fn(engine.init({"w": jnp.zeros(D)}), batches)
+        states[policy] = state
+    for field in ("params", "z", "y"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(states["naive"], field)["w"]),
+            np.asarray(getattr(states["delay_compensated"], field)["w"]),
+            err_msg=field)
+
+
+# ------------------------------------------- bit-exact sync gate (tier 1)
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_uniform_tuple_sync_is_bit_exact_simulator(algo, layout):
+    """(E, ..., E) + staleness='sync' is provably the legacy program."""
+    params0 = {"w": jnp.zeros(D)}
+    base = make_spec(algo, "simulator", layout)
+    tup = dataclasses.replace(
+        base, schedule=api.RoundSchedule(group_rounds=(E,) * G,
+                                         local_steps=H),
+        staleness="sync")
+    assert tup.staleness_plan() is None
+    s1, _ = api.fit(api.build(base, quad_loss), make_data(), T,
+                    params=params0, donate=False)
+    s2, _ = api.fit(api.build(tup, quad_loss), make_data(), T,
+                    params=params0, donate=False)
+    assert_states_equal(s2, s1, f"uniform-sync/{algo}/{layout}")
+
+
+@pytest.mark.parametrize("algo", ["mtgc", "hfedavg"])
+@pytest.mark.parametrize("participation",
+                         [dict(),
+                          dict(client_participation=0.5,
+                               group_participation=0.75),
+                          dict(client_participation=0.5,
+                               group_participation=0.75,
+                               participation_weighting="inverse_prob")])
+def test_uniform_tuple_sync_is_bit_exact_sharded(algo, participation):
+    params0 = {"w": jnp.zeros(D)}
+    base = make_spec(algo, "sharded", "flat", **participation)
+    tup = dataclasses.replace(
+        base, schedule=dataclasses.replace(base.schedule,
+                                           group_rounds=(E,) * G))
+    rng0 = jax.random.PRNGKey(11)
+    s1, _ = api.fit(api.build(base, quad_loss), make_data(microbatches=1),
+                    T, params=params0, rng=rng0, donate=False)
+    s2, _ = api.fit(api.build(tup, quad_loss), make_data(microbatches=1),
+                    T, params=params0, rng=rng0, donate=False)
+    assert_states_equal(s2, s1, f"uniform-sync/sharded/{algo}")
+
+
+def test_degenerate_live_plan_matches_legacy():
+    """Forcing the async machinery on with a degenerate uniform plan
+    (cadence 1 everywhere) reproduces the legacy round numerically -- the
+    masked/weighted async aggregation is a strict generalization."""
+    from repro.core import HFLConfig, hfl_init
+    from repro.core.engine import _build_global_round
+
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.05, algorithm="mtgc",
+                    use_flat_state=False)
+    plan = StalenessPlan((E,) * G, policy="naive")
+    assert plan.periods == (1,) * G
+    _, _, batches = make_batches(G, K, E, H, seed=7)
+    batches = jax.tree.map(jnp.asarray, batches)
+    s_legacy = s_async = hfl_init({"w": jnp.zeros(D)}, cfg)
+    rf_legacy = jax.jit(_build_global_round(quad_loss, cfg))
+    rf_async = jax.jit(_build_global_round(quad_loss, cfg, plan=plan))
+    for _ in range(2):
+        s_legacy, _ = rf_legacy(s_legacy, batches)
+        s_async, _ = rf_async(s_async, batches)
+    for field in ("params", "z", "y"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(s_async, field)["w"]),
+            np.asarray(getattr(s_legacy, field)["w"]),
+            rtol=1e-6, atol=1e-6, err_msg=field)
+
+
+# --------------------------------------------- cross-path async parity
+
+
+@pytest.mark.parametrize("policy", ASYNC_POLICIES)
+def test_async_flat_matches_tree(policy):
+    params0 = {"w": jnp.zeros(D)}
+    _, _, batches = make_batches(G, K, 3, H, seed=9)
+    batches = jax.tree.map(jnp.asarray, batches)
+    finals = {}
+    for layout in ("tree", "flat"):
+        spec = api.ExperimentSpec(
+            levels=(G, K), algorithm="mtgc", lr=0.05, state_layout=layout,
+            schedule=api.RoundSchedule(group_rounds=(3, 1), local_steps=H),
+            staleness=policy)
+        engine = api.build(spec, quad_loss)
+        state = engine.init(params0)
+        for _ in range(3):
+            state, _ = engine.round_fn(state, batches)
+        finals[layout] = np.asarray(engine.global_model(state)["w"])
+    np.testing.assert_allclose(finals["flat"], finals["tree"],
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("policy", ASYNC_POLICIES)
+@pytest.mark.parametrize("participation",
+                         [dict(), dict(client_participation=0.5,
+                                       group_participation=0.75)])
+def test_async_sharded_matches_simulator(policy, participation):
+    """The sharded async path (round counter, masks composed with the
+    freeze/recover machinery) agrees with the simulator engine."""
+    params0 = {"w": jnp.zeros(D)}
+    rng0 = jax.random.PRNGKey(13)
+    _, _, batches = make_batches(G, K, 3, H, seed=17)
+    sim_b = jax.tree.map(jnp.asarray, batches)
+    # [E, H, A=1, G, K, D]: the sharded microbatched layout of the same data.
+    sh_b = jax.tree.map(lambda x: jnp.expand_dims(x, 2), sim_b)
+    finals = {}
+    for backend in ("simulator", "sharded"):
+        spec = api.ExperimentSpec(
+            levels=(G, K), algorithm="mtgc", lr=0.05, backend=backend,
+            state_layout="flat",
+            schedule=api.RoundSchedule(
+                group_rounds=(3, 1), local_steps=H,
+                microbatches=1 if backend == "sharded" else None),
+            staleness=policy, **participation)
+        engine = api.build(spec, quad_loss)
+        state = engine.init(params0, rng0)
+        rf = jax.jit(engine.round_fn)
+        for _ in range(3):
+            state, _ = rf(state, sh_b if backend == "sharded" else sim_b)
+        finals[backend] = np.asarray(engine.global_model(state)["w"])
+    np.testing.assert_allclose(finals["sharded"], finals["simulator"],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_async_fused_interpret_matches_unfused():
+    """The fused flat path composes the iteration mask with the [G, K]
+    participation mask in-register; interpret-mode kernel == unfused."""
+    params0 = {"w": jnp.zeros(D)}
+    _, _, batches = make_batches(G, K, 3, H, seed=21)
+    batches = jax.tree.map(jnp.asarray, batches)
+    finals = {}
+    for fusion in ("none", "fused"):
+        spec = api.ExperimentSpec(
+            levels=(G, K), algorithm="mtgc", lr=0.05, state_layout="flat",
+            fusion=fusion, client_participation=0.5,
+            schedule=api.RoundSchedule(group_rounds=(3, 1), local_steps=H),
+            staleness="discount")
+        engine = api.build(spec, quad_loss)
+        state = engine.init(params0, jax.random.PRNGKey(23))
+        for _ in range(2):
+            state, _ = engine.round_fn(state, batches)
+        finals[fusion] = np.asarray(engine.global_model(state)["w"])
+    np.testing.assert_allclose(finals["fused"], finals["none"],
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------- validation / shims
+
+
+def test_contradictory_async_specs_raise():
+    sched = api.RoundSchedule(group_rounds=(2, 1), local_steps=H)
+    bad = [
+        # non-uniform rounds on the multilevel backend
+        dict(schedule=sched, backend="multilevel"),
+        # an async policy is a no-op with uniform rounds
+        dict(staleness="discount"),
+        dict(staleness="naive",
+             schedule=api.RoundSchedule(group_rounds=(2, 2))),
+        # max_staleness without an async policy
+        dict(max_staleness=2),
+        dict(schedule=sched, max_staleness=2),      # staleness="sync"
+        dict(schedule=sched, staleness="naive", max_staleness=0),
+        dict(schedule=sched, staleness="stale_ok"),  # unknown policy
+        # async needs the zero z-init and a unit server lr
+        dict(schedule=sched, staleness="naive", correction_init="gradient"),
+        dict(schedule=sched, staleness="naive", server_lr=0.5),
+    ]
+    for kw in bad:
+        with pytest.raises(ValueError):
+            api.ExperimentSpec(levels=(2, 2), **kw).validate()
+    # Non-uniform + "sync" is valid: heterogeneous work, zero staleness.
+    api.ExperimentSpec(levels=(2, 2), schedule=sched).validate()
+
+
+def test_legacy_shims_emit_deprecation_warnings():
+    from repro.core import HFLConfig, make_global_round, make_multilevel_round
+    from repro.launch.train import make_sharded_round
+
+    cfg = HFLConfig(num_groups=G, clients_per_group=K, local_steps=H,
+                    group_rounds=E, lr=0.05)
+    with pytest.warns(DeprecationWarning, match="make_global_round"):
+        make_global_round(quad_loss, cfg)
+    with pytest.warns(DeprecationWarning, match="make_sharded_round"):
+        make_sharded_round(quad_loss, E=E, H=H, lr=0.05)
+    with pytest.warns(DeprecationWarning, match="make_multilevel_round"):
+        make_multilevel_round(quad_loss, (G, K), (E * H, H), 0.05)
