@@ -1,0 +1,274 @@
+"""Virtual-population benchmark: O(cohort) device memory + hidden transfers.
+
+The claims behind ``core.population`` (ISSUE 7), measured on a
+deliberately state-heavy workload (single contiguous ``[G, K, n]`` flat
+leaf, scalar-coefficient quadratic -- transfers and state dominate, like
+``bench_round._donation_memory``):
+
+1. **Memory** (claim ``memory_flat_ok``): device state bytes at a fixed
+   cohort K are *constant* as the population P grows 10x-1000x, while
+   materializing all P clients grows linearly with P. Both curves come
+   from the ``Packer`` segment table (``state_bytes``) -- the same
+   arithmetic that sizes the actual buffers -- plus an observational
+   sampled-RSS series per P as a cross-check that nothing device-side
+   secretly scales with P.
+2. **Wall time** (claim ``walltime_independent_ok``): per-round wall time
+   at fixed cohort is independent of P (max/min across P within
+   ``WALLTIME_TOLERANCE``), because only host-store indexing sees P.
+3. **Overlap** (claim ``overhead_ok``): the gather/scatter overhead of
+   the overlapped path over plain materialized ``run_rounds`` stays under
+   ``OVERHEAD_TARGET`` (30%) of round time; the non-overlapped sequential
+   path is also timed so the report shows how much the double-buffering
+   actually hides.
+
+One round function is compiled and shared across every P (the population
+only changes the host store, never the compiled program), so the wall-time
+comparison isolates exactly the population effect. Timed reps interleave
+across P so background load hits every population equally.
+
+Results land in ``benchmarks/results/BENCH_population.json`` (uploaded by
+the non-blocking CI bench job); tests/test_population.py re-runs the
+measurement functions at small scale and gates the claims.
+
+    PYTHONPATH=src python -m benchmarks.bench_population --quick
+    PYTHONPATH=src python -m benchmarks.bench_population --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core import PackedBatches, PopulationStore, run_rounds
+from repro.core.population import run_population_rounds
+
+RESULTS = Path(__file__).parent / "results"
+WALLTIME_TOLERANCE = 1.3
+OVERHEAD_TARGET = 0.30
+
+
+def build_problem(G: int = 4, K: int = 16, n: int = 50_000, E: int = 2,
+                  H: int = 2, shards: int = 4, seed: int = 0):
+    """(engine, state_factory, data) for the state-heavy quadratic.
+
+    ``state_factory()`` returns a fresh flat ``[G, K, n]`` state (the
+    driver donates state buffers, so every timed run needs its own);
+    the single engine/round function is shared across all populations.
+    """
+
+    def loss_fn(p, batch):
+        return 0.5 * jnp.mean((batch["a"] * p["w"] - batch["b"]) ** 2)
+
+    spec = api.ExperimentSpec(
+        levels=(G, K),
+        schedule=api.RoundSchedule(group_rounds=E, local_steps=H),
+        algorithm="mtgc", lr=0.05, backend="simulator", state_layout="flat")
+    engine = api.build(spec, loss_fn)
+    rng = np.random.default_rng(seed)
+    steps = E * H
+    arrays = {
+        "a": jnp.asarray(rng.normal(size=(G, K, shards, steps, 1)) * 0.3 + 1.0,
+                         jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(G, K, shards, steps, 1)),
+                         jnp.float32),
+    }
+    data = PackedBatches(arrays, jax.random.PRNGKey(seed + 1), E, H, None)
+    params0 = {"w": jnp.zeros((n,), jnp.float32)}
+
+    def state_factory():
+        return engine.init(params0, jax.random.PRNGKey(seed + 2))
+
+    return engine, state_factory, data
+
+
+def _store_for(engine, state, population: int) -> PopulationStore:
+    return PopulationStore.from_state(state, population,
+                                      engine.population_fields)
+
+
+def measure_memory(engine, state_factory, populations, K: int,
+                   T: int = 4, chunk: int = 2) -> dict:
+    """Claim 1: cohort device bytes flat in P, materialized bytes linear.
+
+    Segment-table bytes (exact, what the buffers actually allocate) per
+    population, plus a sampled-RSS observation of a short horizon at each
+    P as the nothing-scales-with-P cross-check.
+    """
+    from benchmarks.bench_round import _sampled_peak_rss
+
+    state = state_factory()
+    packer = state.z.packer
+    G = state.z.lead_shape[0]
+    # Full HFLState: params + z + dyn at [G, K], y at [G].
+    per_cohort = 3 * packer.state_bytes((G, K)) + packer.state_bytes((G,))
+    series = []
+    for P in populations:
+        store = _store_for(engine, state, P)
+
+        def run(store=store):
+            s = state_factory()
+            out, _, _ = run_population_rounds(
+                engine.round_fn, s, store, _MEM_DATA[0], T, chunk=chunk)
+            jax.block_until_ready(out.params.bufs)
+            return out
+
+        _, peak_rss = _sampled_peak_rss(run)
+        series.append({
+            "population": int(P),
+            "cohort_device_bytes": per_cohort,
+            "materialized_device_bytes":
+                3 * packer.state_bytes((G, P)) + packer.state_bytes((G,)),
+            "host_store_bytes": store.state_bytes(),
+            "sampled_peak_rss_bytes": int(peak_rss),
+            "store_report": store.size_report(K),
+        })
+    cohort = [s["cohort_device_bytes"] for s in series]
+    mat = [s["materialized_device_bytes"] for s in series]
+    # Exactly linear in P: every pairwise slope equals the per-client byte
+    # cost (the y term at [G] is the constant offset, not part of the slope).
+    slopes = [(mat[i + 1] - mat[i]) / (populations[i + 1] - populations[i])
+              for i in range(len(series) - 1)]
+    claims = {
+        # Flat means *identical*: the segment table sizes the real buffers.
+        "cohort_bytes_flat": max(cohort) == min(cohort),
+        "materialized_bytes_linear": max(slopes) == min(slopes) > 0,
+    }
+    claims["memory_flat_ok"] = all(claims.values())
+    return {"series": series, "claims": claims}
+
+
+_MEM_DATA = []  # set by bench(); keeps measure_memory's signature small
+
+
+def measure_walltime(engine, state_factory, data, populations, T: int = 12,
+                     chunk: int = 4, reps: int = 3,
+                     tolerance: float = WALLTIME_TOLERANCE) -> dict:
+    """Claims 2 + 3: P-independent round time, overlap overhead < target.
+
+    Interleaved min-of-reps of the overlapped population path per P; at
+    the largest P, plain materialized ``run_rounds`` (the no-store floor)
+    and the non-overlapped sequential path complete the overhead picture.
+    """
+    state = state_factory()
+    stores = {P: _store_for(engine, state, P) for P in populations}
+
+    def run_pop(P, overlap=True):
+        s = state_factory()
+        out, _, _ = run_population_rounds(
+            engine.round_fn, s, stores[P], data, T, chunk=chunk,
+            overlap=overlap)
+        jax.block_until_ready(out.params.bufs)
+
+    def run_plain():
+        s = state_factory()
+        out, _, _ = run_rounds(engine.round_fn, s, data, T, chunk=chunk)
+        jax.block_until_ready(out.params.bufs)
+
+    variants = {f"population_{P}": (lambda P=P: run_pop(P))
+                for P in populations}
+    P_max = populations[-1]
+    variants["sequential"] = lambda: run_pop(P_max, overlap=False)
+    variants["materialized"] = run_plain
+    for fn in variants.values():        # warm every path (compile)
+        fn()
+    times = {name: [] for name in variants}
+    for _ in range(reps):
+        for name, fn in variants.items():
+            t0 = time.perf_counter()
+            fn()
+            times[name].append(time.perf_counter() - t0)
+    timed = {name: float(np.min(ts)) / T * 1e3 for name, ts in times.items()}
+
+    # The independence claim covers the *virtual* populations: P == K takes
+    # the degenerate fast path (no draws, no per-chunk refresh), so its
+    # timing is a different code path, reported but not part of the ratio.
+    K = state.z.lead_shape[1]
+    virtual = [P for P in populations if P > K] or list(populations)
+    pop_times = [timed[f"population_{P}"] for P in virtual]
+    plain = timed["materialized"]
+    overhead_overlap = (timed[f"population_{P_max}"] - plain) / plain
+    overhead_seq = (timed["sequential"] - plain) / plain
+    claims = {
+        "walltime_independent_ok":
+            max(pop_times) / min(pop_times) <= tolerance,
+        "overhead_ok": overhead_overlap < OVERHEAD_TARGET,
+    }
+    return {
+        "per_round_ms": timed,
+        "populations": [int(P) for P in populations],
+        "walltime_ratio_max_over_min": max(pop_times) / min(pop_times),
+        "walltime_tolerance": tolerance,
+        "overhead_overlapped": overhead_overlap,
+        "overhead_sequential": overhead_seq,
+        "overhead_hidden_by_overlap": overhead_seq - overhead_overlap,
+        "overhead_target": OVERHEAD_TARGET,
+        "claims": claims,
+    }
+
+
+def bench(G: int = 4, K: int = 16, n: int = 50_000, T: int = 12,
+          chunk: int = 4, reps: int = 3,
+          populations: tuple[int, ...] = (16, 160, 1_600, 16_000)) -> dict:
+    engine, state_factory, data = build_problem(G=G, K=K, n=n)
+    _MEM_DATA.clear()
+    _MEM_DATA.append(data)
+    print(f"[bench_population] backend={jax.default_backend()} G={G} K={K} "
+          f"n={n} T={T} chunk={chunk} populations={populations}")
+
+    memory = measure_memory(engine, state_factory, populations, K)
+    for s in memory["series"]:
+        print(f"  P={s['population']:>7d}: cohort device "
+              f"{s['cohort_device_bytes']/1e6:8.1f} MB (flat), "
+              f"materialized {s['materialized_device_bytes']/1e6:8.1f} MB, "
+              f"host store {s['host_store_bytes']/1e6:6.1f} MB")
+
+    walltime = measure_walltime(engine, state_factory, data, populations,
+                                T=T, chunk=chunk, reps=reps)
+    for name, ms in walltime["per_round_ms"].items():
+        print(f"  {name:18s} {ms:8.2f} ms/round")
+    print(f"[bench_population] walltime max/min "
+          f"{walltime['walltime_ratio_max_over_min']:.2f} "
+          f"(tolerance {WALLTIME_TOLERANCE}), overlapped overhead "
+          f"{walltime['overhead_overlapped']*100:.1f}% vs materialized "
+          f"(sequential {walltime['overhead_sequential']*100:.1f}%, "
+          f"target <{OVERHEAD_TARGET*100:.0f}%)")
+
+    claims = {**memory["claims"], **walltime["claims"]}
+    out = {
+        "backend": jax.default_backend(),
+        "config": {"G": G, "K": K, "n": n, "T": T, "chunk": chunk,
+                   "reps": reps, "populations": list(populations)},
+        "memory": memory,
+        "walltime": walltime,
+        "claims": claims,
+        "all_claims_ok": all(claims.values()),
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / "BENCH_population.json"
+    path.write_text(json.dumps(out, indent=2))
+    print(f"[bench_population] claims "
+          f"{'all OK' if out['all_claims_ok'] else 'FAILED: ' + str(claims)} "
+          f"-> {path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    group = ap.add_mutually_exclusive_group()
+    group.add_argument("--quick", action="store_true", default=True,
+                       help="CI-sized config (default)")
+    group.add_argument("--full", action="store_true",
+                       help="bigger state and a 100k-client population")
+    args = ap.parse_args()
+    if args.full:
+        out = bench(n=200_000, populations=(16, 1_000, 10_000, 100_000))
+    else:
+        out = bench()
+    if not out["all_claims_ok"]:
+        raise SystemExit("population claims FAILED")

@@ -61,6 +61,7 @@ from repro.core import (
     as_tree,
     hfl_init,
     make_global_round,
+    make_packer,
     make_round_step,
     pack_client_shards,
     run_rounds,
@@ -285,7 +286,13 @@ def _donation_memory(T: int = 4, n: int = 3_000_000) -> dict:
     }
     data = PackedBatches(arrays, jax.random.PRNGKey(0), 1, 1, None)
 
-    out = {"rounds": T, "state_mb": 2 * 2 * n * 4 * 3 / 1e6}  # params+z+dyn
+    # State size from the Packer segment table (params + z + dyn at
+    # [G, K], y at [G]) -- the same arithmetic the population benchmark's
+    # memory claims use, instead of hand-multiplied shapes.
+    packer = make_packer({"w": jnp.zeros(n, jnp.float32)})
+    state_bytes = (3 * packer.state_bytes((2, 2)) + packer.state_bytes((2,)))
+    out = {"rounds": T, "state_mb": state_bytes / 1e6,
+           "state_size_report": packer.size_report((2, 2))}
     for donate in (True, False):
         state = hfl_init({"w": jnp.zeros(n, jnp.float32)}, cfg)
         jax.block_until_ready(state)
@@ -527,10 +534,14 @@ def main(quick: bool = True, model: str = "ragged") -> dict:
                   f"(max err {max_err:.2e})")
 
     speedups = [c["speedup"] for c in combos]
+    # Replica state footprint from the segment table: what [G, K] copies
+    # of this model cost, reported next to the observational RSS numbers.
+    lead = (bc.num_groups, bc.clients_per_group)
     out = {
         "backend": jax.default_backend(),
         "config": dataclasses.asdict(bc),
-        "model": {"kind": bc.model, "leaves": n_leaves, "params": n_params},
+        "model": {"kind": bc.model, "leaves": n_leaves, "params": n_params,
+                  "state_size_report": make_packer(params0).size_report(lead)},
         "parity_rounds": PARITY_ROUNDS,
         "combos": combos,
         "min_speedup": min(speedups),

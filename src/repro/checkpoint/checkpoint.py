@@ -8,6 +8,14 @@ state built from the same template) and ``ShardedHFLState.rng`` /
 ``HFLState.rng`` PRNG keys (saved as their raw uint32 words; a ``None``
 rng is structure, not a leaf, and survives untouched). Gated by
 tests/test_checkpoint.py's save -> restore -> one-round bit-exactness.
+
+The virtual-population store (``core.population.PopulationStore``) is a
+registered pytree of host numpy buffers, so a ``{"state": state,
+"population": store}`` tree checkpoints and restores with no special
+casing here -- the store's unflatten coerces leaves back to host numpy so
+in-place cohort scatter keeps working on a restored store (gated by
+tests/test_population.py).
+
 Sharded production checkpoints would swap in tensorstore under the same
 API.
 """

@@ -12,11 +12,13 @@ Public API:
   MultiLevelState, multilevel_init, make_multilevel_round
   Packer, FlatBuffers, make_packer, as_tree (flat-state plumbing)
   PackedBatches, run_rounds, make_round_step (compiled horizon driver)
+  PopulationStore, run_population_rounds, stateless_round (virtual clients)
 """
 from repro.core.config import HFLConfig
 from repro.core.driver import (
     Horizon,
     PackedBatches,
+    dispatch_chunk,
     make_round_step,
     pack_client_shards,
     pack_lm_shards,
@@ -32,6 +34,13 @@ from repro.core.multilevel import (
 )
 from repro.core.packer import FlatBuffers, Packer, as_tree, is_flat, make_packer
 from repro.core.participation import ParticipationMasks, round_masks, sample_hfl_masks
+from repro.core.population import (
+    PopulationStore,
+    draw_cohort,
+    population_fields,
+    run_population_rounds,
+    stateless_round,
+)
 from repro.core.scaffold import ScaffoldState, make_scaffold_round, scaffold_init
 
 ALGORITHMS = ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox", "feddyn")
@@ -54,11 +63,17 @@ __all__ = [
     "make_global_round",
     "Horizon",
     "PackedBatches",
+    "dispatch_chunk",
     "make_round_step",
     "pack_client_shards",
     "pack_lm_shards",
     "run_rounds",
     "select_round",
+    "PopulationStore",
+    "draw_cohort",
+    "population_fields",
+    "run_population_rounds",
+    "stateless_round",
     "MultiLevelState",
     "make_multilevel_round",
     "multilevel_global_model",

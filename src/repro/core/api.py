@@ -75,6 +75,12 @@ from repro.core.driver import (
     run_rounds,
 )
 from repro.core.packer import as_tree
+from repro.core.population import (
+    PopulationStore,
+    population_fields,
+    run_population_rounds,
+    stateless_round,
+)
 from repro.core.staleness import STALENESS_POLICIES
 
 PyTree = Any
@@ -83,6 +89,7 @@ ALGORITHMS = ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox", "feddyn"
 BACKENDS = ("simulator", "multilevel", "sharded")
 LAYOUTS = ("tree", "flat")
 FUSIONS = ("none", "fused")
+CLIENT_STATES = ("stateful", "stateless")
 
 # Which algorithms each backend implements (the simulator engine is the
 # paper's full baseline zoo; the production round keeps the two deployed
@@ -242,6 +249,21 @@ class ExperimentSpec:
         core/staleness.py.
     max_staleness: bound on report staleness -- groups whose cadence would
         exceed it are force-synced; requires an async (non-"sync") policy.
+    population: virtual clients per group. ``levels[1]`` stays the compiled
+        cohort shape; each driver chunk samples that many clients from the
+        population, gathers their persistent corrections out of a host-side
+        :class:`~repro.core.population.PopulationStore` and scatters them
+        back -- device memory and round time scale with the cohort, not the
+        population (``core.population``). ``population == levels[1]``
+        materializes everyone (bit-exact vs. the plain path); larger
+        populations require full participation (cohort sampling *is* the
+        participation mechanism) and a uniform sync schedule.
+    cohort_size: declarative alias for the compiled cohort shape; when set
+        it must equal ``levels[1]`` (the single authoritative topology) and
+        requires ``population``.
+    client_state: "stateful" (default) persists per-client corrections in
+        the population store; "stateless" zero-initializes them every round
+        -- the large-cohort FL assumption -- and needs no store at all.
     """
 
     levels: tuple[int, ...] = (2, 2)
@@ -264,6 +286,9 @@ class ExperimentSpec:
     correction_dtype: str | None = None
     staleness: str = "sync"
     max_staleness: int | None = None
+    population: int | None = None
+    cohort_size: int | None = None
+    client_state: str = "stateful"
 
     def __post_init__(self):
         object.__setattr__(self, "levels", tuple(int(n) for n in self.levels))
@@ -372,6 +397,48 @@ class ExperimentSpec:
             _require(all(0.0 < p <= 1.0 for p in self.level_participation),
                      f"participation fractions must be in (0, 1]: "
                      f"{self.level_participation}")
+
+        # Virtual population: contradictory combos are rejected up front.
+        _require(self.client_state in CLIENT_STATES,
+                 f"unknown client_state {self.client_state!r} "
+                 f"(choose from {CLIENT_STATES})")
+        _require(self.cohort_size is None or self.population is not None,
+                 "cohort_size describes the sampled cohort of a virtual "
+                 "population; set population too")
+        _require(self.client_state == "stateful" or self.population is not None,
+                 "client_state='stateless' is a virtual-population contract; "
+                 "set population (the materialized engines are stateful by "
+                 "construction)")
+        if self.population is not None:
+            _require(self.population >= 1,
+                     f"population must be >= 1, got {self.population}")
+            _require(len(self.levels) == 2,
+                     "a virtual population is two-level (groups x clients); "
+                     f"got levels={self.levels}")
+            _require(self.backend != "multilevel",
+                     "the multilevel backend has no cohort gather/scatter "
+                     "path; use the simulator or sharded backend")
+            _require(self.cohort_size is None
+                     or self.cohort_size == self.levels[1],
+                     f"cohort_size ({self.cohort_size}) must equal levels[1] "
+                     f"({self.levels[1]}), the compiled cohort shape -- "
+                     "levels stays the single authoritative topology")
+            _require(self.population >= self.levels[1],
+                     f"population ({self.population}) must be >= the cohort "
+                     f"levels[1] ({self.levels[1]}): a cohort larger than "
+                     "the population cannot be sampled without replacement")
+        if self.virtual_population:
+            _require(self.full_participation,
+                     "a virtual population (population > levels[1]) samples "
+                     "its cohort from the store -- that *is* the "
+                     "participation mechanism; in-round partial "
+                     "participation would freeze slots whose occupants "
+                     "change between chunks. Keep client_/group_"
+                     "participation at 1.0")
+            _require(self.schedule.is_uniform and self.staleness == "sync",
+                     "virtual populations require a uniform sync schedule: "
+                     "async per-group cadences assume slot occupants "
+                     "persist across windows (follow-up work)")
         return self
 
     # ------------------------------------------------- config conversion
@@ -382,6 +449,13 @@ class ExperimentSpec:
             return all(p >= 1.0 for p in self.level_participation)
         return (self.client_participation >= 1.0
                 and self.group_participation >= 1.0)
+
+    @property
+    def virtual_population(self) -> bool:
+        """True when the population exceeds the materialized cohort --
+        cohort draws then actually sample (``population == levels[1]`` is
+        the degenerate everyone-materialized case)."""
+        return self.population is not None and self.population > self.levels[1]
 
     def participation_by_level(self) -> tuple[float, ...]:
         """Per-level live-uplink fractions for the multilevel engine."""
@@ -490,6 +564,27 @@ class _EngineBase:
         self.spec = spec
         self.loss_fn = loss_fn
         self.round_fn = self._build_round_fn()
+        if spec.client_state == "stateless":
+            # Wrap once at build time: the driver's chunk-runner cache
+            # keys on the round function's identity.
+            self.round_fn = stateless_round(self.round_fn, ("z", "dyn"))
+
+    @property
+    def population_fields(self) -> tuple[str, ...]:
+        """State fields the population store persists for this spec."""
+        return population_fields(self.spec.algorithm)
+
+    def init_population(self, state: PyTree) -> PopulationStore:
+        """A zeroed host store for ``spec.population`` virtual clients,
+        seeded from ``state``'s current correction rows (identity mapping
+        into rows ``[0, K)``)."""
+        _require(self.spec.population is not None,
+                 "init_population needs spec.population set")
+        _require(self.spec.client_state == "stateful",
+                 "stateless clients keep no per-client state; no store "
+                 "exists to initialize")
+        return PopulationStore.from_state(
+            state, self.spec.population, self.population_fields)
 
     # Subclasses set these to the driver-layout (E, H) of one round.
     # Async schedules pack the padded max(E_g) axis: stragglers' dead
@@ -674,7 +769,10 @@ class ShardedEngine(_EngineBase):
     def init(self, params: PyTree, rng: jax.Array | None = None) -> PyTree:
         from repro.launch.train import sharded_init
         G, K = self.spec.levels
-        if rng is None and not self.spec.full_participation:
+        if rng is None and (not self.spec.full_participation
+                            or self.spec.virtual_population):
+            # Virtual populations draw their cohorts from the state rng
+            # even under (mandatory) full in-round participation.
             rng = jax.random.PRNGKey(0)
         dtype = (None if self.spec.correction_dtype is None
                  else jnp.dtype(self.spec.correction_dtype))
@@ -723,6 +821,8 @@ def fit(
     eval_every: int = 1,
     eval_fn: Callable[[PyTree, PyTree], PyTree] | None = None,
     donate: bool = True,
+    population_store: PopulationStore | None = None,
+    overlap: bool = True,
 ) -> tuple[PyTree, Horizon]:
     """Train ``T`` global rounds through the compiled horizon driver.
 
@@ -741,11 +841,30 @@ def fit(
 
         state, hz = fit(engine, data, 10, params=params)
         state, hz = fit(engine, hz.data, 10, state=state)   # rounds 11-20
+
+    With ``spec.population`` set and stateful clients, :func:`fit` routes
+    through ``core.population.run_population_rounds`` instead: each chunk
+    gathers the sampled cohort's corrections from a host-side
+    :class:`PopulationStore` (auto-created via ``engine.init_population``
+    unless ``population_store`` is passed -- pass ``horizon.population``
+    to continue a run) and scatters them back, with the transfers
+    overlapped against device compute unless ``overlap=False``. The store
+    rides back on ``horizon.population``.
     """
     if state is None:
         _require(params is not None,
                  "fit() needs either state=... or params=... to start from")
         state = engine.init(params, rng)
+    spec = getattr(engine, "spec", None)
+    if (spec is not None and spec.population is not None
+            and spec.client_state == "stateful"):
+        store = (population_store if population_store is not None
+                 else engine.init_population(state))
+        state, _, horizon = run_population_rounds(
+            engine.round_fn, state, store, data, T, chunk=chunk,
+            eval_every=eval_every, eval_fn=eval_fn, donate=donate,
+            overlap=overlap)
+        return state, horizon
     state, _, horizon = run_rounds(
         engine.round_fn, state, data, T, chunk=chunk,
         eval_every=eval_every, eval_fn=eval_fn, donate=donate)
@@ -824,6 +943,18 @@ CLI_FLAGS: tuple[CliFlag, ...] = (
     CliFlag("max_staleness", "--max-staleness",
             "bound on report staleness; groups beyond it are force-synced",
             type=int, optional=True),
+    CliFlag("population", "--population",
+            "virtual clients per group, backed by the host-side population "
+            "store; device state stays cohort-shaped", type=int,
+            optional=True),
+    CliFlag("cohort_size", "--cohort-size",
+            "sampled cohort per group -- must equal levels[1], the compiled "
+            "shape (declarative alias; requires --population)", type=int,
+            optional=True),
+    CliFlag("client_state", "--client-state",
+            "stateful persists per-client corrections in the population "
+            "store; stateless zero-inits them every round (no store)",
+            choices=CLIENT_STATES),
 )
 
 
@@ -896,6 +1027,7 @@ __all__ = [
     "ALGORITHMS",
     "BACKENDS",
     "BACKEND_ALGORITHMS",
+    "CLIENT_STATES",
     "CLI_FLAGS",
     "CliFlag",
     "Engine",
@@ -906,6 +1038,7 @@ __all__ = [
     "MultiLevelEngine",
     "MultiLevelMetrics",
     "PackedBatches",
+    "PopulationStore",
     "RoundSchedule",
     "STALENESS_POLICIES",
     "ShardedEngine",
@@ -913,5 +1046,6 @@ __all__ = [
     "add_spec_args",
     "build",
     "fit",
+    "run_population_rounds",
     "spec_from_args",
 ]

@@ -285,12 +285,16 @@ class Horizon(NamedTuple):
         this horizon -- continue training from it (``repro.api.fit`` hands
         it back so a continued run draws fresh shard indices instead of
         replaying the finished horizon's).
+    population: the host-side ``PopulationStore`` when the run trained a
+        virtual client population (``core.population``), with every cohort's
+        corrections scattered back -- None for materialized runs.
     """
 
     metrics: Any
     evals: Any | None
     eval_rounds: np.ndarray
     data: Any | None = None
+    population: Any | None = None
 
 
 _RUNNERS_PER_FN = 8
@@ -358,6 +362,43 @@ def _chunk_runner(round_fn: RoundFn, eval_fn, donate: bool):
     return runner
 
 
+def dispatch_chunk(
+    round_fn: RoundFn,
+    state: PyTree,
+    data: PackedBatches,
+    eval_mask: np.ndarray,
+    *,
+    eval_fn: Callable[[PyTree, PyTree], PyTree] | None = None,
+    donate: bool = True,
+) -> tuple[PyTree, PackedBatches, PyTree, PyTree | None]:
+    """Dispatch one compiled ``len(eval_mask)``-round chunk, without syncing.
+
+    The building block ``run_rounds`` (and ``core.population``'s
+    gather/scatter loop) iterates: fetches the cached chunk runner for
+    ``(round_fn, eval_fn, donate)`` and fires it. JAX dispatch is
+    asynchronous, so the returned ``(state, data, metrics, evals)`` are
+    futures -- the host is free to do work (e.g. population-store gather /
+    scatter) while the device scans the chunk; only touching the results
+    with ``np.asarray`` blocks. With ``donate`` the input state's buffers
+    are consumed.
+    """
+    runner = _chunk_runner(round_fn, eval_fn, donate)
+    out = runner(state, data, jnp.asarray(eval_mask))
+    state, rng = out[0], out[1]
+    evals = out[3] if eval_fn is not None else None
+    return state, data.replace_rng(rng), out[2], evals
+
+
+def eval_mask_for_chunk(done: int, n: int, T: int, eval_every: int) -> np.ndarray:
+    """Per-round eval booleans for rounds ``done+1 .. done+n`` of ``T``.
+
+    True at multiples of ``eval_every`` plus the final round -- the single
+    definition both drivers share so their eval cadences cannot drift.
+    """
+    return np.array([(done + i + 1) % eval_every == 0 or done + i + 1 == T
+                     for i in range(n)])
+
+
 def run_rounds(
     round_fn: RoundFn,
     state: PyTree,
@@ -396,20 +437,17 @@ def run_rounds(
     if chunk is not None and chunk < 0:
         raise ValueError(f"chunk must be None or >= 0, got {chunk}")
     chunk = T if not chunk else min(int(chunk), T)
-    runner = _chunk_runner(round_fn, eval_fn, donate)
 
     mets, evs, masks = [], [], []
     done = 0
     while done < T:
         n = min(chunk, T - done)
-        mask = np.array([(done + i + 1) % eval_every == 0
-                         or done + i + 1 == T for i in range(n)])
-        out = runner(state, data, jnp.asarray(mask))
-        state, rng = out[0], out[1]
-        data = data.replace_rng(rng)
-        mets.append(out[2])
+        mask = eval_mask_for_chunk(done, n, T, eval_every)
+        state, data, metrics, ev = dispatch_chunk(
+            round_fn, state, data, mask, eval_fn=eval_fn, donate=donate)
+        mets.append(metrics)
         if eval_fn is not None:
-            evs.append(out[3])
+            evs.append(ev)
         masks.append(mask)
         done += n
 

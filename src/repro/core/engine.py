@@ -60,6 +60,14 @@ participation ``where`` folds into the same fused update expression. With
 over the entire flat model (mask folded in, ``y`` broadcast by the kernel's
 index map; kernels/mtgc_update.py) -- the TPU path. Flat/tree parity is
 enforced by tests/test_flat_state.py; models are untouched either way.
+
+Cohort shapes: the round reads ``G, K`` from the state's leading axes at
+trace time, never from a global registry -- so ``K`` need not be the whole
+client population. ``core.population`` exploits exactly this: it keeps a
+host-side store of per-client corrections for ``P >> K`` virtual clients
+and swaps each sampled cohort's rows in and out of the same ``[G, K,
+...]`` state between driver chunks, leaving this round function byte-for-
+byte unchanged.
 """
 from __future__ import annotations
 

@@ -104,6 +104,44 @@ class Packer:
         }
         return FlatBuffers(bufs, self)
 
+    def state_bytes(self, lead: tuple[int, ...] = ()) -> int:
+        """Total bytes of the flat buffers under the given leading axes.
+
+        Computed from the static segment table -- no arrays are built -- so
+        memory claims (e.g. cohort-vs-population device footprints in
+        ``benchmarks/bench_population.py``) derive from the same table that
+        drives pack/unpack rather than from sampled process RSS.
+        """
+        mult = int(np.prod(lead)) if lead else 1
+        return sum(
+            mult * n * np.dtype(key).itemsize for key, n in self.buffer_sizes
+        )
+
+    def size_report(self, lead: tuple[int, ...] = ()) -> dict[str, Any]:
+        """Per-dtype-buffer size breakdown under the given leading axes.
+
+        Returns ``{"lead": lead, "total_bytes": ..., "buffers": {dtype:
+        {"elements", "bytes", "leaves"}}}`` -- the machine-readable form the
+        benchmarks embed in their ``BENCH_*.json`` artifacts.
+        """
+        mult = int(np.prod(lead)) if lead else 1
+        leaves_per = {key: 0 for key, _ in self.buffer_sizes}
+        for seg in self.segments:
+            leaves_per[seg.buffer] += 1
+        buffers = {
+            key: {
+                "elements": mult * n,
+                "bytes": mult * n * np.dtype(key).itemsize,
+                "leaves": leaves_per[key],
+            }
+            for key, n in self.buffer_sizes
+        }
+        return {
+            "lead": tuple(lead),
+            "total_bytes": self.state_bytes(lead),
+            "buffers": buffers,
+        }
+
 
 def make_packer(template: PyTree) -> Packer:
     """Build the static segment table from a single-model template tree."""

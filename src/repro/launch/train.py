@@ -44,6 +44,12 @@ is gated in tests/test_weighting.py.
 Under GSPMD this lowers to exactly the paper's two-timescale collective
 schedule; local steps generate zero cross-client traffic.
 
+K here is the *materialized cohort*, not necessarily the population: with
+``ExperimentSpec.population`` set, ``core.population`` holds P >> K
+virtual clients' corrections in a host store and gathers/scatters each
+sampled cohort through this unchanged round between driver chunks
+(``--population`` / ``--cohort-size`` / ``--client-state`` on this CLI).
+
 Also used as the lowering target of the train_4k dry-run.
 
 The CLI is one ``repro.api`` client: its experiment flags are generated
@@ -678,6 +684,21 @@ def main() -> None:
     data = engine.pack_tokens(
         toks, batch_size=args.batch, seq_len=args.seq, shards=args.shards,
         rng=rng, key=jax.random.PRNGKey(args.seed + 1))
+    if spec.population is not None:
+        G, K = spec.levels
+        if spec.client_state == "stateful":
+            # Segment-table arithmetic (Packer.state_bytes): the host
+            # store holds [G, P] correction rows, the device only [G, K].
+            from repro.core.packer import make_packer
+            per_client = make_packer(params).state_bytes()
+            nfields = len(engine.population_fields)
+            print(f"[train] population={spec.population}/group cohort={K} "
+                  f"store={G * spec.population * per_client * nfields/1e6:.1f}"
+                  f"MB host, device corrections "
+                  f"{G * K * per_client * nfields/1e6:.1f}MB")
+        else:
+            print(f"[train] population={spec.population}/group cohort={K} "
+                  "stateless (no store)")
     state, hz = fit(
         engine, data, args.rounds, params=params,
         rng=(jax.random.PRNGKey(args.seed + 2)

@@ -19,6 +19,7 @@ EXPECTED_ALL = [
     "ALGORITHMS",
     "BACKENDS",
     "BACKEND_ALGORITHMS",
+    "CLIENT_STATES",
     "CLI_FLAGS",
     "CliFlag",
     "Engine",
@@ -29,6 +30,7 @@ EXPECTED_ALL = [
     "MultiLevelEngine",
     "MultiLevelMetrics",
     "PackedBatches",
+    "PopulationStore",
     "RoundSchedule",
     "STALENESS_POLICIES",
     "ShardedEngine",
@@ -36,6 +38,7 @@ EXPECTED_ALL = [
     "add_spec_args",
     "build",
     "fit",
+    "run_population_rounds",
     "spec_from_args",
 ]
 
@@ -60,6 +63,9 @@ EXPECTED_SPEC_FIELDS = {
     "correction_dtype": None,
     "staleness": "sync",
     "max_staleness": None,
+    "population": None,
+    "cohort_size": None,
+    "client_state": "stateful",
 }
 
 EXPECTED_SCHEDULE_FIELDS = {
@@ -129,6 +135,25 @@ def test_cli_table_covers_spec_and_round_trips():
     assert spec_async.staleness == "discount"
     assert spec_async.max_staleness == 3
     spec_async.validate()
+
+    # Virtual-population flags round-trip; the optional rows stay unset
+    # (spec defaults) when not given.
+    assert (spec.population, spec.cohort_size) == (None, None)
+    assert spec.client_state == "stateful"
+    args_pop = ap.parse_args([
+        "--levels", "2", "8", "--population", "1000", "--cohort-size", "8",
+        "--client-state", "stateful"])
+    spec_pop = api.spec_from_args(args_pop)
+    assert spec_pop.population == 1000
+    assert spec_pop.cohort_size == 8
+    assert spec_pop.client_state == "stateful"
+    spec_pop.validate()
+    args_sl = ap.parse_args([
+        "--levels", "2", "8", "--population", "64",
+        "--client-state", "stateless"])
+    spec_sl = api.spec_from_args(args_sl)
+    assert spec_sl.client_state == "stateless"
+    spec_sl.validate()
 
     # Overrides (entry-point pins) win over parsed values.
     pinned = api.spec_from_args(args, backend="sharded", microbatches=1,

@@ -1,0 +1,489 @@
+"""Virtual client population (core.population): bit-exactness + claims.
+
+Gates, per the subsystem's contract:
+
+- **Degenerate bit-exactness**: ``population == cohort_size == levels[1]``
+  reproduces the materialized engines state-for-state (and metric-for-
+  metric) across algorithms x layouts x participation modes x backends --
+  the cohort path is a pure refactor until the population actually
+  exceeds the cohort.
+- **Oracle persistence**: a pure-python replay of the cohort-draw key
+  discipline plus a python-dict store must match ``run_population_rounds``
+  bit-exactly across non-contiguous cohort draws, including a client that
+  is sampled early, sits out, and returns with its correction intact.
+- **Overlap == sequential**: the double-buffered path is bit-exact
+  against the strictly sequential gather/scatter ordering even when
+  consecutive cohorts share clients (the ``refresh`` patch path).
+- **Stateless contract**, **validation**, **checkpoint round-trip**, the
+  **Packer edge cases** (scalar / zero-size / mixed-dtype leaves) through
+  gather/scatter, and the BENCH_population memory claim re-derived from
+  the segment table at small scale (the wall-time claims are gated by the
+  slow-marked benchmark run, CI's non-blocking job).
+"""
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import restore, save
+from repro.core import PackedBatches, run_rounds
+from repro.core.packer import FlatBuffers, is_flat, make_packer
+from repro.core.population import (
+    PopulationStore,
+    draw_cohort,
+    population_fields,
+    run_population_rounds,
+)
+
+from test_mtgc_engine import D, quad_loss
+
+G, K, E, H = 2, 3, 2, 2
+
+
+def make_data(microbatches=None, seed=0, key=1):
+    rng = np.random.default_rng(seed)
+    steps = H * (microbatches or 1)
+    shape = (G, K, 4, steps, D)
+    arrays = {
+        "a": jnp.asarray(rng.normal(size=shape).astype(np.float32) + 2.0),
+        "b": jnp.asarray(rng.normal(size=shape).astype(np.float32)),
+    }
+    return PackedBatches(arrays, jax.random.PRNGKey(key), E, H, microbatches)
+
+
+def build_engine(population=None, *, algorithm="mtgc", layout="flat",
+                 backend="simulator", client_state="stateful", **kw):
+    spec = api.ExperimentSpec(
+        levels=(G, K), algorithm=algorithm, lr=0.05,
+        schedule=api.RoundSchedule(
+            group_rounds=E, local_steps=H,
+            microbatches=1 if backend == "sharded" else None),
+        state_layout=layout, backend=backend,
+        population=population, client_state=client_state, **kw)
+    return api.build(spec, quad_loss)
+
+
+def assert_trees_equal(a, b, tag):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), tag
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{tag}[leaf {i}]")
+
+
+# ---------------------------------------------------------------- degenerate
+
+
+@pytest.mark.parametrize("backend", ["simulator", "sharded"])
+@pytest.mark.parametrize("layout", ["tree", "flat"])
+@pytest.mark.parametrize("algorithm", ["mtgc", "hfedavg", "feddyn"])
+def test_degenerate_bitexact_vs_materialized(algorithm, layout, backend):
+    """population == cohort == K: same states, same metrics, rng untouched."""
+    if backend == "sharded" and algorithm == "feddyn":
+        pytest.skip("feddyn is simulator-only")
+    params = {"w": jnp.ones(D)}
+    mb = 1 if backend == "sharded" else None
+    base = build_engine(algorithm=algorithm, layout=layout, backend=backend)
+    virt = build_engine(K, cohort_size=K, algorithm=algorithm, layout=layout,
+                        backend=backend)
+    s0, hz0 = api.fit(base, make_data(mb), 4, params=params,
+                      rng=jax.random.PRNGKey(3), chunk=2)
+    s1, hz1 = api.fit(virt, make_data(mb), 4, params=params,
+                      rng=jax.random.PRNGKey(3), chunk=2)
+    assert hz0.population is None
+    assert isinstance(hz1.population, PopulationStore)
+    assert_trees_equal(s0, s1, f"{algorithm}/{layout}/{backend} state")
+    assert_trees_equal(hz0.metrics, hz1.metrics,
+                       f"{algorithm}/{layout}/{backend} metrics")
+    # The store holds exactly the final corrections, identity-mapped.
+    for f in virt.population_fields:
+        value = getattr(s1, f, None)
+        if value is None:
+            continue
+        flat = value if is_flat(value) else \
+            hz1.population.packers[f].flatten(value)
+        for key, buf in flat.bufs.items():
+            np.testing.assert_array_equal(
+                hz1.population.data[f][key], np.asarray(buf),
+                err_msg=f"store[{f}][{key}]")
+
+
+@pytest.mark.parametrize("participation",
+                         [{"client_participation": 0.5},
+                          {"group_participation": 0.5},
+                          {"client_participation": 0.5,
+                           "group_participation": 0.5}])
+def test_degenerate_bitexact_partial_participation(participation):
+    """Partial in-round participation is legal at P == K and stays exact."""
+    params = {"w": jnp.ones(D)}
+    base = build_engine(**participation)
+    virt = build_engine(K, **participation)
+    s0, _ = api.fit(base, make_data(), 4, params=params,
+                    rng=jax.random.PRNGKey(3), chunk=2)
+    s1, _ = api.fit(virt, make_data(), 4, params=params,
+                    rng=jax.random.PRNGKey(3), chunk=2)
+    assert_trees_equal(s0, s1, f"partial {participation} state")
+
+
+# -------------------------------------------------------------------- oracle
+
+
+def oracle_draws(rng, num_draws, P):
+    """Replay the cohort-draw key discipline in pure python/numpy."""
+    out = []
+    for _ in range(num_draws):
+        ckey, rng = jax.random.split(rng)
+        keys = jax.random.split(ckey, G)
+        out.append(np.stack([
+            np.asarray(jax.random.choice(k, P, (K,), replace=False))
+            for k in keys
+        ]))
+    return out, rng
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_oracle_store_persistence(overlap):
+    """Python-dict store + chunked materialized runs == the virtual path.
+
+    P=7 over K=3 slots, 3 chunks -> non-contiguous draws; a client sampled
+    in one chunk and skipped in the next must come back with its earlier
+    correction bit-intact.
+    """
+    P, T, chunk = 7, 6, 2
+    engine = build_engine(P)
+    state0 = engine.init({"w": jnp.ones(D)}, jax.random.PRNGKey(11))
+    store = engine.init_population(state0)
+    out, _, hz = run_population_rounds(
+        engine.round_fn, state0, store, make_data(), T, chunk=chunk,
+        overlap=overlap)
+
+    # --- oracle: same draws, python-side store, materialized chunks.
+    engine2 = build_engine(P)
+    state = engine2.init({"w": jnp.ones(D)}, jax.random.PRNGKey(11))
+    packer = store.packers["z"]
+    zstore = {key: np.zeros((G, P, n), np.dtype(key))
+              for key, n in packer.buffer_sizes}
+    draws, rng_end = oracle_draws(state.rng, T // chunk, P)
+    rows = np.arange(G)[:, None]
+    data = make_data()
+    snapshots = []
+    for idx in draws:
+        z = FlatBuffers({key: jnp.asarray(buf[rows, idx])
+                         for key, buf in zstore.items()}, packer)
+        state = state._replace(z=z)
+        state, data, _ = run_rounds(engine2.round_fn, state, data, chunk,
+                                    chunk=chunk)
+        for key, buf in zstore.items():
+            buf[rows, idx] = np.asarray(state.z.bufs[key])
+        snapshots.append({key: buf.copy() for key, buf in zstore.items()})
+    state = state._replace(rng=rng_end)
+
+    assert_trees_equal(state, out, f"oracle state overlap={overlap}")
+    for key, buf in zstore.items():
+        np.testing.assert_array_equal(store.data["z"][key], buf,
+                                      err_msg=f"oracle store [{key}]")
+
+    # Persistence across absence: some client of chunk 0 sits out chunk 1
+    # (7 ids, 2 x 3 slots -> guaranteed by pigeonhole); its row must be
+    # byte-identical from the chunk-0 scatter until it is drawn again.
+    idx0, idx1 = draws[0], draws[1]
+    checked = 0
+    for g in range(G):
+        for c in idx0[g]:
+            if c in idx1[g]:
+                continue
+            for key in zstore:
+                np.testing.assert_array_equal(
+                    snapshots[1][key][g, c], snapshots[0][key][g, c],
+                    err_msg=f"client ({g},{c}) lost its correction")
+            checked += 1
+    assert checked > 0
+
+
+def test_overlap_matches_sequential_with_shared_clients():
+    """P=5 over K=4, chunk=1: consecutive cohorts must share clients, so
+    the overlapped pre-gather goes stale and ``refresh`` must patch it."""
+    P, T = 5, 6
+    runs = {}
+    for overlap in (True, False):
+        spec = api.ExperimentSpec(
+            levels=(G, 4), algorithm="mtgc", lr=0.05,
+            schedule=api.RoundSchedule(group_rounds=E, local_steps=H),
+            state_layout="flat", population=P)
+        e = api.build(spec, quad_loss)
+        rng = np.random.default_rng(0)
+        shape = (G, 4, 4, E * H, D)
+        data = PackedBatches(
+            {"a": jnp.asarray(rng.normal(size=shape).astype(np.float32) + 2.0),
+             "b": jnp.asarray(rng.normal(size=shape).astype(np.float32))},
+            jax.random.PRNGKey(1), E, H, None)
+        state = e.init({"w": jnp.ones(D)}, jax.random.PRNGKey(11))
+        st = e.init_population(state)
+        out, _, _ = run_population_rounds(e.round_fn, state, st, data, T,
+                                          chunk=1, overlap=overlap)
+        runs[overlap] = (out, st)
+    assert_trees_equal(runs[True][0], runs[False][0], "overlap state")
+    for key in runs[True][1].data["z"]:
+        np.testing.assert_array_equal(runs[True][1].data["z"][key],
+                                      runs[False][1].data["z"][key],
+                                      err_msg=f"overlap store [{key}]")
+
+
+# ----------------------------------------------------------------- stateless
+
+
+def test_stateless_zeroes_corrections_each_round():
+    """client_state='stateless' == zeroing z before every round by hand."""
+    from repro.core import select_round
+
+    base = build_engine()
+    stateless = build_engine(K, client_state="stateless")
+    params = {"w": jnp.ones(D)}
+    s_base = base.init(params)
+    s_less = stateless.init(params)
+    for r in range(3):
+        batches = select_round(make_data(), jax.random.PRNGKey(100 + r))
+        zeroed = s_base._replace(
+            z=jax.tree.map(jnp.zeros_like, s_base.z),
+            **({"dyn": jax.tree.map(jnp.zeros_like, s_base.dyn)}
+               if getattr(s_base, "dyn", None) is not None else {}))
+        s_base = base.round_fn(zeroed, batches)[0]
+        s_less = stateless.round_fn(s_less, batches)[0]
+        assert_trees_equal(s_base, s_less, f"stateless round {r}")
+
+
+def test_stateless_fit_has_no_store():
+    engine = build_engine(K, client_state="stateless")
+    _, hz = api.fit(engine, make_data(), 3, params={"w": jnp.ones(D)})
+    assert hz.population is None
+    with pytest.raises(ValueError, match="no store"):
+        engine.init_population(engine.init({"w": jnp.ones(D)}))
+
+
+# ---------------------------------------------------------------- validation
+
+
+@pytest.mark.parametrize("kw, match", [
+    (dict(client_state="ephemeral"), "unknown client_state"),
+    (dict(cohort_size=K), "set population too"),
+    (dict(client_state="stateless"), "virtual-population contract"),
+    (dict(population=0), "must be >= 1"),
+    (dict(population=2 * K, levels=(G, K, 2), backend="multilevel"),
+     "two-level"),
+    (dict(population=2 * K, backend="multilevel"), "multilevel backend"),
+    (dict(population=2 * K, cohort_size=K + 1), "must equal levels"),
+    (dict(population=K - 1), "sampled without replacement"),
+    (dict(population=2 * K, client_participation=0.5),
+     "participation mechanism"),
+    (dict(population=2 * K, group_participation=0.5),
+     "participation mechanism"),
+])
+def test_validate_rejects_contradictions(kw, match):
+    base = dict(
+        levels=(G, K), algorithm="mtgc", lr=0.05,
+        schedule=api.RoundSchedule(group_rounds=E, local_steps=H))
+    base.update(kw)
+    with pytest.raises(ValueError, match=match):
+        api.ExperimentSpec(**base).validate()
+
+
+def test_validate_accepts_virtual_combinations():
+    for kw in (dict(population=100), dict(population=K),
+               dict(population=100, cohort_size=K),
+               dict(population=100, client_state="stateless")):
+        spec = api.ExperimentSpec(
+            levels=(G, K), algorithm="mtgc", lr=0.05,
+            schedule=api.RoundSchedule(group_rounds=E, local_steps=H), **kw)
+        spec.validate()
+        assert spec.virtual_population == (kw["population"] > K)
+
+
+# ---------------------------------------------------------------- checkpoint
+
+
+def test_checkpoint_roundtrip_and_continuation(tmp_path):
+    """{"state", "population"} survives save -> restore bit-exactly, and a
+    restored pair continues a horizon identically to the original."""
+    P, T1, T2 = 7, 2, 4
+    engine = build_engine(P)
+    params = {"w": jnp.ones(D)}
+    state = engine.init(params, jax.random.PRNGKey(11))
+    store = engine.init_population(state)
+    state, data, _ = run_population_rounds(
+        engine.round_fn, state, store, make_data(), T1, chunk=1)
+
+    save(str(tmp_path), T1, {"state": state, "population": store})
+    like_state = engine.init(params, jax.random.PRNGKey(0))
+    like = {"state": like_state, "population": engine.init_population(like_state)}
+    restored = restore(str(tmp_path), T1, like)
+
+    assert_trees_equal(restored["state"], state, "restored state")
+    rs = restored["population"]
+    assert isinstance(rs, PopulationStore)
+    for key, buf in store.data["z"].items():
+        got = rs.data["z"][key]
+        assert isinstance(got, np.ndarray)          # in-place scatter works
+        np.testing.assert_array_equal(got, buf, err_msg=f"store [{key}]")
+
+    out_a, _, _ = run_population_rounds(
+        engine.round_fn, state, store, data, T2, chunk=2)
+    out_b, _, _ = run_population_rounds(
+        engine.round_fn, restored["state"], rs, data, T2, chunk=2)
+    assert_trees_equal(out_a, out_b, "continuation")
+    for key in store.data["z"]:
+        np.testing.assert_array_equal(store.data["z"][key],
+                                      rs.data["z"][key],
+                                      err_msg=f"continued store [{key}]")
+
+
+# --------------------------------------------------------- packer edge cases
+
+
+class FakeState(NamedTuple):
+    z: Any
+    rng: Any = None
+
+
+EDGE_TEMPLATE = {
+    "scalar": jnp.zeros((), jnp.float32),
+    "empty": jnp.zeros((0,), jnp.float32),
+    "ints": jnp.zeros((3,), jnp.int32),
+    "half": jnp.zeros((2, 2), jnp.bfloat16),
+    "w": jnp.zeros((4,), jnp.float32),
+}
+
+
+def _edge_flat(seed=0):
+    packer = make_packer(EDGE_TEMPLATE)
+    rng = np.random.default_rng(seed)
+    bufs = {}
+    for key, n in packer.buffer_sizes:
+        raw = rng.normal(size=(G, K, n)) * 10
+        bufs[key] = jnp.asarray(raw.astype(np.dtype(key)))
+    return FlatBuffers(bufs, packer)
+
+
+@pytest.mark.parametrize("layout", ["flat", "tree"])
+def test_store_edge_case_leaves_roundtrip(layout):
+    """Scalar, zero-size, and mixed-dtype leaves gather/scatter bit-exactly
+    in both state layouts, and untouched population rows never move."""
+    P = 9
+    flat = _edge_flat()
+    value = flat if layout == "flat" else flat.to_tree()
+    state = FakeState(z=value)
+    store = PopulationStore.from_state(state, P, ("z", "dyn"))
+    assert store.fields == ("z",)                  # absent dyn dropped
+    assert store.state_bytes() == sum(
+        buf.nbytes for buf in store.data["z"].values())
+    assert store.device_bytes(K) == sum(
+        np.asarray(buf).nbytes for buf in flat.bufs.values())
+
+    before = {key: buf.copy() for key, buf in store.data["z"].items()}
+    idx = np.stack([np.array([8, 3, 5]), np.array([0, 7, 4])])
+    staged = store.gather(idx)
+    installed = store.install(state, staged)
+    # Tree states rebuild through the segment table: structure + dtypes of
+    # every edge-case leaf survive.
+    assert_trees_equal(jax.tree.map(jnp.zeros_like, installed.z),
+                       jax.tree.map(jnp.zeros_like, value), "structure")
+
+    host = store.extract(installed)
+    perturbed = {f: {key: arr + np.ones_like(arr) for key, arr in bufs.items()}
+                 for f, bufs in host.items()}
+    store.scatter(idx, perturbed)
+    rows = np.arange(G)[:, None]
+    mask = np.zeros((G, P), bool)
+    mask[rows, idx] = True
+    for key, buf in store.data["z"].items():
+        np.testing.assert_array_equal(buf[rows, idx], perturbed["z"][key],
+                                      err_msg=f"scattered rows [{key}]")
+        np.testing.assert_array_equal(buf[~mask], before[key][~mask],
+                                      err_msg=f"untouched rows [{key}]")
+
+    # Round-trip back through install: the scattered rows come back bit-
+    # exact through gather -> install -> extract.
+    back = store.extract(store.install(state, store.gather(idx)))
+    for key in back["z"]:
+        np.testing.assert_array_equal(back["z"][key], perturbed["z"][key],
+                                      err_msg=f"roundtrip [{key}]")
+
+
+def test_draw_cohort_shape_and_distinctness():
+    idx = draw_cohort(jax.random.PRNGKey(0), G, 50, K)
+    assert idx.shape == (G, K)
+    for g in range(G):
+        assert len(set(idx[g].tolist())) == K
+        assert idx[g].min() >= 0 and idx[g].max() < 50
+    # Same key -> same cohort; different key -> (overwhelmingly) different.
+    again = draw_cohort(jax.random.PRNGKey(0), G, 50, K)
+    np.testing.assert_array_equal(idx, again)
+
+
+def test_population_fields_per_algorithm():
+    assert population_fields("feddyn") == ("z", "dyn")
+    for algo in ("mtgc", "hfedavg", "local_corr", "group_corr", "fedprox"):
+        assert population_fields(algo) == ("z",)
+
+
+# ----------------------------------------------------- memory claim (small)
+
+
+def test_memory_claim_from_segment_table():
+    """Claim (i) of BENCH_population at small scale: device bytes constant
+    in P (and equal to the real cohort buffers), host bytes exactly linear."""
+    engine = build_engine(K)
+    state = engine.init({"w": jnp.ones(D)})
+    populations = (K, 10 * K, 100 * K)
+    stores = [PopulationStore.from_state(state, P) for P in populations]
+    device = [s.device_bytes(K) for s in stores]
+    assert len(set(device)) == 1
+    assert device[0] == sum(np.asarray(b).nbytes for b in state.z.bufs.values())
+    host = [s.state_bytes() for s in stores]
+    slopes = {(host[i + 1] - host[i]) / (populations[i + 1] - populations[i])
+              for i in range(len(host) - 1)}
+    assert len(slopes) == 1 and slopes.pop() > 0
+    for s, P in zip(stores, populations):
+        assert s.state_bytes() == sum(
+            buf.nbytes for bufs in s.data.values() for buf in bufs.values())
+        report = s.size_report(K)
+        assert report["host_bytes"] == s.state_bytes()
+        assert report["device_bytes"] == device[0]
+
+
+@pytest.mark.slow
+def test_bench_population_claims():
+    """Full claim gate (memory + wall-time independence + overlap overhead)
+    at benchmark scale; runs in the non-blocking CI job."""
+    from benchmarks.bench_population import bench
+
+    out = bench(G=2, K=8, n=30_000, T=8, chunk=4, reps=3,
+                populations=(8, 80, 800))
+    assert out["all_claims_ok"], out["claims"]
+
+
+# ------------------------------------------------------------- fit routing
+
+
+def test_fit_virtual_tree_layout_end_to_end():
+    """Virtual mode with the tree state layout: fit auto-creates the store,
+    rides it on Horizon.population, and a second fit continues from it."""
+    P = 12
+    spec = api.ExperimentSpec(
+        levels=(G, K), algorithm="mtgc", lr=0.05,
+        schedule=api.RoundSchedule(group_rounds=E, local_steps=H),
+        state_layout="tree", population=P, cohort_size=K)
+    engine = api.build(spec, quad_loss)
+    state, hz = api.fit(engine, make_data(), 4, params={"w": jnp.ones(D)},
+                        chunk=2)
+    store = hz.population
+    assert isinstance(store, PopulationStore)
+    assert store.population == P and not store.flat["z"]
+    touched = {key: np.any(buf != 0, axis=-1).sum()
+               for key, buf in store.data["z"].items()}
+    assert all(v > 0 for v in touched.values())
+    state2, hz2 = api.fit(engine, hz.data, 4, state=state,
+                          population_store=store, chunk=2)
+    assert hz2.population is store
