@@ -13,9 +13,12 @@ Public API:
   Packer, FlatBuffers, make_packer, as_tree (flat-state plumbing)
   PackedBatches, run_rounds, make_round_step (compiled horizon driver)
   PopulationStore, run_population_rounds, stateless_round (virtual clients)
+  FaultPlan, DefensePlan, GuardSpec (fault injection / self-healing horizon)
 """
 from repro.core.config import HFLConfig
 from repro.core.driver import (
+    GuardReport,
+    GuardSpec,
     Horizon,
     PackedBatches,
     dispatch_chunk,
@@ -24,6 +27,13 @@ from repro.core.driver import (
     pack_lm_shards,
     run_rounds,
     select_round,
+)
+from repro.core.faults import (
+    FAULT_KINDS,
+    DefensePlan,
+    FaultMasks,
+    FaultPlan,
+    fault_masks,
 )
 from repro.core.engine import HFLState, RoundMetrics, global_model, hfl_init, make_global_round
 from repro.core.multilevel import (
@@ -61,6 +71,13 @@ __all__ = [
     "global_model",
     "hfl_init",
     "make_global_round",
+    "FAULT_KINDS",
+    "DefensePlan",
+    "FaultMasks",
+    "FaultPlan",
+    "fault_masks",
+    "GuardReport",
+    "GuardSpec",
     "Horizon",
     "PackedBatches",
     "dispatch_chunk",

@@ -68,12 +68,15 @@ import numpy as np
 
 from repro.core.config import HFLConfig
 from repro.core.driver import (
+    GuardReport,
+    GuardSpec,
     Horizon,
     PackedBatches,
     pack_client_shards,
     pack_lm_shards,
     run_rounds,
 )
+from repro.core.faults import DefensePlan, FAULT_KINDS, FaultPlan
 from repro.core.packer import as_tree
 from repro.core.population import (
     PopulationStore,
@@ -264,6 +267,17 @@ class ExperimentSpec:
     client_state: "stateful" (default) persists per-client corrections in
         the population store; "stateless" zero-initializes them every round
         -- the large-cohort FL assumption -- and needs no store at all.
+    faults: a :class:`~repro.core.faults.FaultPlan` -- deterministic
+        per-round fault injection (client crashes, group timeouts,
+        corrupted uploads) drawn from the state rng after the
+        participation draw, so the zero-fault stream is untouched.
+        None / all-zero rates trace the legacy program bit-for-bit.
+        Two-level simulator/sharded backends only.
+    defense: a :class:`~repro.core.faults.DefensePlan` -- screened
+        aggregation (non-finite and norm screening of per-client deltas,
+        optional norm clipping) applied at the upload boundary; screened
+        contributions never enter aggregates or the z/y corrections, and
+        the per-round ``screened`` metric counts them.
     """
 
     levels: tuple[int, ...] = (2, 2)
@@ -289,6 +303,8 @@ class ExperimentSpec:
     population: int | None = None
     cohort_size: int | None = None
     client_state: str = "stateful"
+    faults: FaultPlan | None = None
+    defense: DefensePlan | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "levels", tuple(int(n) for n in self.levels))
@@ -439,6 +455,27 @@ class ExperimentSpec:
                      "virtual populations require a uniform sync schedule: "
                      "async per-group cadences assume slot occupants "
                      "persist across windows (follow-up work)")
+
+        # Fault tolerance: contradictory combos are rejected up front.
+        if self.faults is not None:
+            self.faults.validate()
+        if self.defense is not None:
+            self.defense.validate()
+        if self.fault_mode or self.defended:
+            _require(self.backend != "multilevel",
+                     "fault injection / screened aggregation are two-level "
+                     "features (simulator and sharded backends); the "
+                     "multilevel backend is follow-up work")
+            _require(self.population is None,
+                     "fault injection with a virtual population is follow-up "
+                     "work: screened slots would need store-side healing")
+            _require(self.correction_init == "zero",
+                     "fault injection / screened aggregation require "
+                     "correction_init='zero' (the gradient init has no "
+                     "crash-consistent analogue)")
+            _require(self.server_lr == 1.0,
+                     "fault injection / screened aggregation require "
+                     "server_lr=1.0")
         return self
 
     # ------------------------------------------------- config conversion
@@ -449,6 +486,16 @@ class ExperimentSpec:
             return all(p >= 1.0 for p in self.level_participation)
         return (self.client_participation >= 1.0
                 and self.group_participation >= 1.0)
+
+    @property
+    def fault_mode(self) -> bool:
+        """True when the spec injects any faults."""
+        return self.faults is not None and self.faults.enabled
+
+    @property
+    def defended(self) -> bool:
+        """True when screened aggregation is active."""
+        return self.defense is not None and self.defense.enabled
 
     @property
     def virtual_population(self) -> bool:
@@ -628,6 +675,35 @@ class _EngineBase:
             batch_size=batch_size, seq_len=seq_len, shards=shards,
             microbatches=self._pack_microbatches, rng=rng, key=key)
 
+    def retry_round_fn(self, retry: int):
+        """Round function for guarded-horizon retry ``retry`` (>= 1).
+
+        When the spec has a norm screen, each retry rebuilds the round
+        with ``screen_norm * retry_widen ** retry`` -- the screen catches
+        exponentially more on every retry, so a chunk that diverged
+        because a corrupted-but-finite delta slipped under the threshold
+        converges on replay. Otherwise the original round is retried
+        as-is (the re-split rng alone changes the fault draw). Rebuilt
+        rounds are cached per retry level so the driver's chunk-runner
+        cache (keyed on function identity) is not thrashed.
+        """
+        spec = self.spec
+        if (retry <= 0 or spec.defense is None
+                or spec.defense.screen_norm is None):
+            return self.round_fn
+        cache = getattr(self, "_retry_round_fns", None)
+        if cache is None:
+            cache = self._retry_round_fns = {}
+        if retry not in cache:
+            widened = dataclasses.replace(
+                spec.defense,
+                screen_norm=(spec.defense.screen_norm
+                             * spec.defense.retry_widen ** retry))
+            rebuilt = build(dataclasses.replace(spec, defense=widened),
+                            self.loss_fn)
+            cache[retry] = rebuilt.round_fn
+        return cache[retry]
+
     def participation_masks(self, rng: jax.Array):
         """(masks, next_rng) the round derives from a pre-round state rng.
 
@@ -667,12 +743,23 @@ class SimulatorEngine(_EngineBase):
         from repro.core.engine import RoundMetrics
         self.metric_fields = RoundMetrics._fields
         return _engine._build_global_round(self.loss_fn, self._cfg,
-                                           plan=self._plan)
+                                           plan=self._plan,
+                                           faults=self.spec.faults,
+                                           defense=self.spec.defense)
 
     def init(self, params: PyTree, rng: jax.Array | None = None) -> PyTree:
         from repro.core.engine import hfl_init
+        spec = self.spec
+        if rng is None and spec.fault_mode:
+            # Fault masks draw from the state rng stream.
+            rng = jax.random.PRNGKey(0)
         snaps = self._plan is not None and self._plan.needs_snapshots
-        return hfl_init(params, self._cfg, rng, staleness_snapshots=snaps)
+        # The download-freshness carry only exists where it is consumed:
+        # async schedules with timeout faults.
+        dl = (spec.fault_mode and spec.faults.timeout_rate > 0
+              and self._plan is not None)
+        return hfl_init(params, self._cfg, rng, staleness_snapshots=snaps,
+                        fault_download=dl)
 
     def global_model(self, state: PyTree) -> PyTree:
         from repro.core.engine import global_model
@@ -760,7 +847,7 @@ class ShardedEngine(_EngineBase):
             group_participation=spec.group_participation,
             participation_mode=spec.participation_mode,
             participation_weighting=spec.participation_weighting,
-            plan=self._plan)
+            plan=self._plan, faults=spec.faults, defense=spec.defense)
 
     @property
     def _pack_microbatches(self) -> int:
@@ -770,19 +857,24 @@ class ShardedEngine(_EngineBase):
         from repro.launch.train import sharded_init
         G, K = self.spec.levels
         if rng is None and (not self.spec.full_participation
-                            or self.spec.virtual_population):
-            # Virtual populations draw their cohorts from the state rng
-            # even under (mandatory) full in-round participation.
+                            or self.spec.virtual_population
+                            or self.spec.fault_mode):
+            # Virtual populations draw their cohorts -- and fault plans
+            # their masks -- from the state rng even under (mandatory)
+            # full in-round participation.
             rng = jax.random.PRNGKey(0)
         dtype = (None if self.spec.correction_dtype is None
                  else jnp.dtype(self.spec.correction_dtype))
         plan = self._plan
+        dl = (self.spec.fault_mode and self.spec.faults.timeout_rate > 0
+              and plan is not None)
         return sharded_init(
             params, G, K,
             use_flat_state=self.spec.state_layout == "flat",
             correction_dtype=dtype, rng=rng,
             round_counter=plan is not None and plan.needs_round_counter,
-            staleness_snapshots=plan is not None and plan.needs_snapshots)
+            staleness_snapshots=plan is not None and plan.needs_snapshots,
+            fault_download=dl)
 
     def global_model(self, state: PyTree) -> PyTree:
         # Under async schedules only a cadence-1 group holds the fresh
@@ -823,6 +915,10 @@ def fit(
     donate: bool = True,
     population_store: PopulationStore | None = None,
     overlap: bool = True,
+    guard: GuardSpec | bool | None = None,
+    checkpoint_every: int | None = None,
+    checkpoint_path: str | None = None,
+    resume: bool = False,
 ) -> tuple[PyTree, Horizon]:
     """Train ``T`` global rounds through the compiled horizon driver.
 
@@ -850,14 +946,48 @@ def fit(
     to continue a run) and scatters them back, with the transfers
     overlapped against device compute unless ``overlap=False``. The store
     rides back on ``horizon.population``.
+
+    ``guard`` (a :class:`GuardSpec`, or ``True`` for the defaults) makes
+    the horizon self-heal: each driver chunk is snapshotted, checked for
+    divergence and rolled back + retried with a re-split rng (see
+    ``core.driver.GuardSpec``). Unless the spec overrides it, retries run
+    ``engine.retry_round_fn`` -- the defense norm screen tightens by
+    ``retry_widen ** retry`` on each attempt. ``horizon.guard`` reports
+    the rollbacks/retries taken.
+
+    ``checkpoint_every=N`` with ``checkpoint_path=dir`` autosaves the
+    state (and the data selection rng) at every driver chunk boundary
+    that is a multiple of N rounds (``chunk`` defaults to N so boundaries
+    align), via ``repro.checkpoint``. ``resume=True`` restores the latest
+    checkpoint in ``checkpoint_path`` (if any) and runs only the
+    remaining ``T - step`` rounds -- bit-exact with the uninterrupted run
+    (tests/test_checkpoint.py).
     """
     if state is None:
         _require(params is not None,
                  "fit() needs either state=... or params=... to start from")
         state = engine.init(params, rng)
+    if checkpoint_every is not None or resume:
+        _require(checkpoint_path is not None,
+                 "checkpoint autosave/resume needs checkpoint_path=")
+    if checkpoint_every is not None:
+        _require(checkpoint_every >= 1,
+                 f"checkpoint_every must be >= 1, got {checkpoint_every}")
+        if chunk is None:
+            chunk = checkpoint_every
+    if guard is True:
+        guard = GuardSpec()
+    if guard is not None and guard.round_fn_for_retry is None \
+            and hasattr(engine, "retry_round_fn"):
+        guard = guard._replace(round_fn_for_retry=engine.retry_round_fn)
+
     spec = getattr(engine, "spec", None)
     if (spec is not None and spec.population is not None
             and spec.client_state == "stateful"):
+        _require(guard is None and checkpoint_every is None and not resume,
+                 "guarded horizons and checkpoint autosave are "
+                 "materialized-path features; the population "
+                 "gather/scatter loop is follow-up work")
         store = (population_store if population_store is not None
                  else engine.init_population(state))
         state, _, horizon = run_population_rounds(
@@ -865,9 +995,34 @@ def fit(
             eval_every=eval_every, eval_fn=eval_fn, donate=donate,
             overlap=overlap)
         return state, horizon
+
+    from repro import checkpoint as _ckpt
+
+    start = 0
+    if resume:
+        step = _ckpt.latest_step(checkpoint_path)
+        if step is not None:
+            like = {"state": state, "data_rng": np.asarray(data.rng)}
+            restored = _ckpt.restore(checkpoint_path, step, like)
+            state = restored["state"]
+            data = data.replace_rng(jnp.asarray(restored["data_rng"]))
+            start = step
+            _require(start < T,
+                     f"checkpoint at round {start} >= T={T}: nothing left "
+                     "to resume")
+
+    on_chunk = None
+    if checkpoint_every is not None:
+        def on_chunk(done, st, da):
+            rounds = start + done
+            if rounds % checkpoint_every == 0 or rounds == T:
+                _ckpt.save(checkpoint_path, rounds,
+                           {"state": st, "data_rng": np.asarray(da.rng)})
+
     state, _, horizon = run_rounds(
-        engine.round_fn, state, data, T, chunk=chunk,
-        eval_every=eval_every, eval_fn=eval_fn, donate=donate)
+        engine.round_fn, state, data, T - start, chunk=chunk,
+        eval_every=eval_every, eval_fn=eval_fn, donate=donate,
+        guard=guard, on_chunk=on_chunk)
     return state, horizon
 
 
@@ -955,7 +1110,34 @@ CLI_FLAGS: tuple[CliFlag, ...] = (
             "stateful persists per-client corrections in the population "
             "store; stateless zero-inits them every round (no store)",
             choices=CLIENT_STATES),
+    CliFlag("faults.crash_rate", "--fault-crash",
+            "per-(round, client) crash probability -- a crashed client "
+            "does no local work and uploads nothing", type=float,
+            optional=True),
+    CliFlag("faults.timeout_rate", "--fault-timeout",
+            "per-(round, group) timeout probability -- the group misses "
+            "the global exchange", type=float, optional=True),
+    CliFlag("faults.corrupt_rate", "--fault-corrupt",
+            "per-(round, client) corrupted-upload probability", type=float,
+            optional=True),
+    CliFlag("faults.corrupt_kind", "--fault-kind",
+            "corrupted-upload payload: nan/inf poison or a norm-exploded "
+            "delta", choices=FAULT_KINDS, optional=True),
+    CliFlag("defense.screen_norm", "--screen-norm",
+            "screen out client deltas whose L2 norm exceeds this",
+            type=float, optional=True),
+    CliFlag("defense.clip_norm", "--clip-norm",
+            "clip surviving client deltas to this L2 norm", type=float,
+            optional=True),
+    CliFlag("defense.screen_nonfinite", "--screen-nonfinite",
+            "screen out non-finite client uploads (1, the plan default; "
+            "0 disables)", type=int, optional=True),
 )
+
+#: Constructors for the nested spec fields CLI rows may target with a
+#: dotted ``field`` -- used when the spec default for that field is None.
+_NESTED_FIELDS = {"schedule": RoundSchedule, "faults": FaultPlan,
+                  "defense": DefensePlan}
 
 
 def _spec_get(spec: ExperimentSpec, field: str):
@@ -999,10 +1181,16 @@ def spec_from_args(args, *, defaults: ExperimentSpec | None = None,
     ``overrides`` (field=value, including ``schedule_*`` shortcuts like
     ``microbatches=1``) win over CLI values -- entry points use them to pin
     backend-specific fields that are not exposed as flags.
+
+    Dotted rows (``schedule.x``, ``faults.x``, ``defense.x``) update the
+    nested dataclass via ``dataclasses.replace``; a nested field whose
+    spec default is None (no fault plan configured) is constructed from
+    its defaults the first time one of its flags is given, so
+    ``--fault-crash 0.05`` alone yields a full :class:`FaultPlan`.
     """
     defaults = defaults or ExperimentSpec()
     spec_kw: dict[str, Any] = {}
-    sched_kw: dict[str, Any] = {}
+    nested_kw: dict[str, dict[str, Any]] = {}
     for row in CLI_FLAGS:
         if not hasattr(args, row.dest):
             continue
@@ -1010,17 +1198,21 @@ def spec_from_args(args, *, defaults: ExperimentSpec | None = None,
         if row.optional and value is None:
             continue
         target, _, sub = row.field.partition(".")
-        if target == "schedule":
-            sched_kw[sub] = value
+        if sub:
+            nested_kw.setdefault(target, {})[sub] = value
         else:
             spec_kw[target] = value
     for name, value in overrides.items():
         if name in ("group_rounds", "local_steps", "microbatches", "periods"):
-            sched_kw[name] = value
+            nested_kw.setdefault("schedule", {})[name] = value
         else:
             spec_kw[name] = value
-    schedule = dataclasses.replace(defaults.schedule, **sched_kw)
-    return dataclasses.replace(defaults, schedule=schedule, **spec_kw)
+    for target, kw in nested_kw.items():
+        base = getattr(defaults, target)
+        if base is None:
+            base = _NESTED_FIELDS[target]()
+        spec_kw[target] = dataclasses.replace(base, **kw)
+    return dataclasses.replace(defaults, **spec_kw)
 
 
 __all__ = [
@@ -1030,9 +1222,14 @@ __all__ = [
     "CLIENT_STATES",
     "CLI_FLAGS",
     "CliFlag",
+    "DefensePlan",
     "Engine",
     "ExperimentSpec",
+    "FAULT_KINDS",
     "FUSIONS",
+    "FaultPlan",
+    "GuardReport",
+    "GuardSpec",
     "Horizon",
     "LAYOUTS",
     "MultiLevelEngine",

@@ -288,6 +288,8 @@ class Horizon(NamedTuple):
     population: the host-side ``PopulationStore`` when the run trained a
         virtual client population (``core.population``), with every cohort's
         corrections scattered back -- None for materialized runs.
+    guard: a :class:`GuardReport` when the run was guarded
+        (``run_rounds(..., guard=...)``); None otherwise.
     """
 
     metrics: Any
@@ -295,6 +297,84 @@ class Horizon(NamedTuple):
     eval_rounds: np.ndarray
     data: Any | None = None
     population: Any | None = None
+    guard: Any | None = None
+
+
+class GuardSpec(NamedTuple):
+    """Self-healing horizon policy for ``run_rounds(..., guard=...)``.
+
+    Before each chunk dispatch the driver snapshots the state (and the
+    data rng) to the host; after the chunk it checks the divergence
+    predicate below, and on divergence rolls the chunk back and retries it
+    with a re-split rng -- up to ``max_retries`` times, then raises
+    ``RuntimeError``. Divergence is:
+
+    * any non-finite value in the chunk's ``metrics.loss``, or
+    * (``check_state``) a non-finite value in the state's correction /
+      global leaves -- the ``z`` / ``y`` / ``dyn`` / ``glob`` fields when
+      the state has them, every leaf otherwise. ``params`` is deliberately
+      NOT checked: under fault injection a frozen replica legitimately
+      carries non-finite bits until its next download heals it, without
+      ever entering an aggregate (see core/faults.py) -- or
+    * the chunk's final-round mean loss exceeding ``loss_spike`` times the
+      last accepted chunk's (losses assumed nonnegative; the first chunk
+      has no reference and only the finiteness checks apply).
+
+    ``round_fn_for_retry(attempt)`` (attempt >= 1) supplies the round
+    function for retries -- e.g. one rebuilt with a tighter screen
+    threshold (``DefensePlan.retry_widen``; ``repro.api.fit`` wires the
+    engine's ``retry_round_fn`` here). None retries the original.
+
+    The per-chunk snapshot + divergence sync serializes the async dispatch
+    pipeline once per chunk -- bench_faults.py gates the zero-fault
+    overhead under 10% per round.
+    """
+
+    max_retries: int = 2
+    loss_spike: float = 10.0
+    check_state: bool = True
+    round_fn_for_retry: Callable[[int], RoundFn] | None = None
+
+
+class GuardReport(NamedTuple):
+    """What the guarded horizon did: how many chunks were rolled back at
+    least once, and the total retry attempts across the run."""
+
+    rollbacks: int
+    retries: int
+
+
+_GUARD_FIELDS = ("z", "y", "dyn", "glob")
+
+
+def _guard_leaves(state: PyTree) -> list:
+    """The leaves the guard's state check covers (see GuardSpec)."""
+    picked = [getattr(state, f) for f in _GUARD_FIELDS
+              if getattr(state, f, None) is not None]
+    return jax.tree.leaves(picked if picked else state)
+
+
+def _finite_chunk(state: PyTree, losses, check_state: bool) -> bool:
+    ok = np.isfinite(np.asarray(losses)).all()
+    if ok and check_state:
+        # Reduce on device: each leaf costs one scalar transfer instead of
+        # pulling the whole state to host every chunk.
+        for leaf in _guard_leaves(state):
+            if (hasattr(leaf, "dtype")
+                    and jnp.issubdtype(leaf.dtype, jnp.floating)
+                    and not bool(jnp.isfinite(leaf).all())):
+                return False
+    return bool(ok)
+
+
+def _host_snapshot(tree: PyTree) -> PyTree:
+    """Host copies of every leaf (syncs; survives donation of the device
+    buffers)."""
+    return jax.tree.map(np.asarray, tree)
+
+
+def _fold_retry(rng, salt: int):
+    return jax.random.fold_in(rng, np.uint32(salt))
 
 
 _RUNNERS_PER_FN = 8
@@ -409,6 +489,8 @@ def run_rounds(
     eval_every: int = 1,
     eval_fn: Callable[[PyTree, PyTree], PyTree] | None = None,
     donate: bool = True,
+    guard: GuardSpec | None = None,
+    on_chunk: Callable[[int, PyTree, PackedBatches], None] | None = None,
 ) -> tuple[PyTree, PackedBatches, Horizon]:
     """Run ``T`` global rounds as ceil(T / chunk) compiled dispatches.
 
@@ -430,6 +512,13 @@ def run_rounds(
     the output state, halving driver peak state memory. Pass
     ``donate=False`` to keep the input alive.
 
+    With ``guard`` (a :class:`GuardSpec`) the horizon self-heals: each
+    chunk is snapshotted before dispatch and rolled back + retried with a
+    re-split rng when it diverges (see GuardSpec for the predicate), and
+    the returned Horizon carries a :class:`GuardReport`. ``on_chunk(done,
+    state, data)`` fires after every accepted chunk -- ``repro.api.fit``
+    hooks checkpoint autosave here.
+
     Returns ``(state, data, Horizon)`` -- ``data`` carries the advanced
     selection rng so horizons can be continued.
     """
@@ -440,16 +529,27 @@ def run_rounds(
 
     mets, evs, masks = [], [], []
     done = 0
+    loss_ref = None
+    rollbacks = retries = 0
     while done < T:
         n = min(chunk, T - done)
         mask = eval_mask_for_chunk(done, n, T, eval_every)
-        state, data, metrics, ev = dispatch_chunk(
-            round_fn, state, data, mask, eval_fn=eval_fn, donate=donate)
+        if guard is None:
+            state, data, metrics, ev = dispatch_chunk(
+                round_fn, state, data, mask, eval_fn=eval_fn, donate=donate)
+        else:
+            state, data, metrics, ev, loss_ref, rb, rt = _guarded_chunk(
+                round_fn, state, data, mask, guard,
+                eval_fn=eval_fn, donate=donate, done=done, loss_ref=loss_ref)
+            rollbacks += rb
+            retries += rt
         mets.append(metrics)
         if eval_fn is not None:
             evs.append(ev)
         masks.append(mask)
         done += n
+        if on_chunk is not None:
+            on_chunk(done, state, data)
 
     def _cat(*xs):
         return np.concatenate([np.asarray(x) for x in xs])
@@ -460,4 +560,64 @@ def run_rounds(
     evals = None
     if eval_fn is not None:
         evals = jax.tree.map(lambda *xs: _cat(*xs)[mask_all], *evs)
-    return state, data, Horizon(metrics, evals, eval_rounds, data)
+    report = GuardReport(rollbacks, retries) if guard is not None else None
+    return state, data, Horizon(metrics, evals, eval_rounds, data, None, report)
+
+
+def _guarded_chunk(
+    round_fn: RoundFn,
+    state: PyTree,
+    data: PackedBatches,
+    eval_mask: np.ndarray,
+    guard: GuardSpec,
+    *,
+    eval_fn: Callable[[PyTree, PyTree], PyTree] | None,
+    donate: bool,
+    done: int,
+    loss_ref: float | None,
+):
+    """One snapshot / dispatch / check / maybe-rollback cycle.
+
+    Returns ``(state, data, metrics, evals, new_loss_ref, rolled_back,
+    retries_used)``. The snapshot is taken to host memory BEFORE dispatch
+    because donation consumes the input buffers; a retry replays the chunk
+    from the snapshot with ``attempt`` folded into the state and data rngs
+    so a different participation / fault draw is realized.
+    """
+    snap_state = _host_snapshot(state)
+    snap_rng = np.asarray(data.rng)
+    attempt = 0
+    while True:
+        if attempt > 0:
+            salt = done * (guard.max_retries + 1) + attempt
+            state = jax.tree.map(jnp.asarray, snap_state)
+            if getattr(state, "rng", None) is not None and hasattr(state, "_replace"):
+                state = state._replace(rng=_fold_retry(jnp.asarray(state.rng), salt))
+            data = data.replace_rng(_fold_retry(jnp.asarray(snap_rng), salt))
+            rf = (guard.round_fn_for_retry(attempt)
+                  if guard.round_fn_for_retry is not None else round_fn)
+        else:
+            rf = round_fn
+        state, data, metrics, ev = dispatch_chunk(
+            rf, state, data, eval_mask, eval_fn=eval_fn, donate=donate)
+
+        losses = getattr(metrics, "loss", None)
+        if losses is None:
+            raise ValueError(
+                "guarded run_rounds needs a `loss` field in the round "
+                "metrics to detect divergence")
+        losses = np.asarray(losses)
+        ok = _finite_chunk(state, losses, guard.check_state)
+        final = float(np.mean(losses[-1])) if ok else np.inf
+        if ok and loss_ref is not None and loss_ref > 0.0:
+            ok = final <= guard.loss_spike * loss_ref
+        if ok:
+            return (state, data, metrics, ev, final,
+                    int(attempt > 0), attempt)
+        if attempt >= guard.max_retries:
+            raise RuntimeError(
+                f"guarded horizon diverged at rounds {done + 1}.."
+                f"{done + len(eval_mask)} and exhausted "
+                f"{guard.max_retries} retries (last final-round loss "
+                f"{final}, reference {loss_ref})")
+        attempt += 1

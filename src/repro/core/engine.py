@@ -101,6 +101,12 @@ class HFLState(NamedTuple):
                          None otherwise (no pytree leaves).
     glob:   [...]        the last aggregated global model, paired with
                          ``snap`` (None otherwise).
+    dl:     [G]          realized-download mask: which groups actually
+                         downloaded at the end of the last window -- only
+                         carried when group-timeout faults meet an async
+                         schedule (``hfl_init(..., fault_download=True)``),
+                         where the static fresh cadence no longer predicts
+                         downloads; None otherwise (no pytree leaves).
     """
 
     params: PyTree
@@ -111,6 +117,7 @@ class HFLState(NamedTuple):
     round: jax.Array
     snap: PyTree | None = None
     glob: PyTree | None = None
+    dl: jax.Array | None = None
 
 
 class RoundMetrics(NamedTuple):
@@ -120,10 +127,12 @@ class RoundMetrics(NamedTuple):
     z_norm: jax.Array        # scalar mean ||z||^2 after the round
     y_norm: jax.Array        # scalar mean ||y||^2 after the round
     participation: jax.Array  # scalar fraction of clients active this round
+    screened: jax.Array      # scalar count of screened contributions (0 undefended)
 
 
 def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None,
-             *, staleness_snapshots: bool = False) -> HFLState:
+             *, staleness_snapshots: bool = False,
+             fault_download: bool = False) -> HFLState:
     """Broadcast a single model to every client and zero the corrections.
 
     With ``cfg.use_flat_state`` the state leaves are contiguous flat
@@ -134,9 +143,15 @@ def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None,
     snapshots (``snap``/``glob``) that delay-compensated async rounds need
     (core/staleness.py); both start at the initial model, so the first
     compensation is exactly zero.
+
+    ``fault_download`` carries the realized-download mask ``dl`` that
+    group-timeout faults under an async schedule need (core/faults.py);
+    every group starts fresh (all ones -- matching the static
+    ``fresh_mask`` at t=0).
     """
     G, K = cfg.num_groups, cfg.clients_per_group
     rng = jax.random.PRNGKey(0) if rng is None else rng
+    dl = jnp.ones((G,), jnp.float32) if fault_download else None
     if cfg.use_flat_state:
         packer = make_packer(params0)
         flat0 = packer.flatten(params0)
@@ -161,6 +176,7 @@ def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None,
             round=jnp.zeros((), jnp.int32),
             snap=snap,
             glob=glob,
+            dl=dl,
         )
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0
@@ -182,6 +198,7 @@ def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None,
         round=jnp.zeros((), jnp.int32),
         snap=snap,
         glob=glob,
+        dl=dl,
     )
 
 
@@ -228,6 +245,8 @@ def _build_global_round(
     loss_fn: Callable[[PyTree, PyTree], jax.Array],
     cfg: HFLConfig,
     plan=None,
+    faults=None,
+    defense=None,
 ) -> Callable[[HFLState, PyTree], tuple[HFLState, RoundMetrics]]:
     """The real round builder behind ``repro.api``'s simulator adapter.
 
@@ -240,8 +259,39 @@ def _build_global_round(
     compensation all from the plan -- see core/staleness.py). With
     ``plan=None`` (the uniform sync schedule) the traced program is the
     legacy round, bit for bit.
+
+    ``faults`` (a ``core.faults.FaultPlan``) injects per-round crash /
+    timeout / corrupted-upload faults drawn from the state rng *after* the
+    participation draw (the zero-fault rng stream is untouched);
+    ``defense`` (a ``core.faults.DefensePlan``) screens/clips uploads
+    before any aggregate or correction update sees them. A disabled (or
+    None) plan traces the legacy program, bit for bit.
     """
     cfg.validate()
+    faults = faults if (faults is not None and faults.enabled) else None
+    defense = defense if (defense is not None and defense.enabled) else None
+    fault_mode = faults is not None
+    defended = defense is not None
+    if fault_mode:
+        faults.validate()
+        f_crash = faults.crash_rate > 0
+        f_timeout = faults.timeout_rate > 0
+        f_corrupt = faults.corrupt_rate > 0
+    else:
+        f_crash = f_timeout = f_corrupt = False
+    if defended:
+        defense.validate()
+    if fault_mode or defended:
+        if cfg.correction_init != "zero":
+            raise ValueError(
+                "fault injection / screened aggregation require "
+                "correction_init='zero' (the gradient init has no "
+                "screened analogue)")
+        if cfg.server_lr != 1.0:
+            raise ValueError(
+                "fault injection / screened aggregation require "
+                "server_lr=1.0")
+        from repro.core import faults as _flt
     algo = cfg.algorithm
     use_z = algo in ("mtgc", "local_corr")
     use_y = algo in ("mtgc", "group_corr")
@@ -292,18 +342,56 @@ def _build_global_round(
             masks, rng = round_masks(state.rng, cfg)
             cmask = masks.client                              # [G, K]
             gmask = masks.group                               # [G]
-            n_active = jnp.maximum(jnp.sum(cmask), 1.0)
         else:
             cmask = None
             rng = state.rng
+
+        if fault_mode:
+            # Fault draw AFTER the participation draw, off the same carried
+            # stream: the zero-fault stream (and trajectory) is untouched.
+            fm, rng = _flt.fault_masks(rng, faults, G, K)
+            if f_crash:
+                # A crashed client is frozen exactly like an unsampled one.
+                alive = 1.0 - fm.crash
+                cmask = alive if cmask is None else cmask * alive
+            if f_timeout:
+                tm_keep = 1.0 - fm.timeout                    # [G]
+        if (fault_mode or defended) and cmask is None:
+            # Force the masked machinery on so screens/faults have a mask
+            # to compose with even under full participation.
+            cmask = jnp.ones((G, K), jnp.float32)
+        masked = cmask is not None
+        if masked:
+            n_active = jnp.maximum(jnp.sum(cmask), 1.0)
 
         if async_mode:
             # Per-window report/fresh masks from the carried round counter
             # (constant ones when every cadence is 1, i.e. policy "sync").
             rep = plan.report_mask(state.round)               # [G]
             fresh = plan.fresh_mask(state.round)              # [G]
+            if f_timeout:
+                # A timed-out group misses its report window; the static
+                # fresh cadence no longer predicts downloads, so freshness
+                # comes from the carried realized-download mask instead.
+                if state.dl is None:
+                    raise ValueError(
+                        "group-timeout faults under an async schedule carry "
+                        "the realized-download mask in the state: build it "
+                        "with hfl_init(..., fault_download=True) "
+                        "(repro.api.build does this for you)")
+                rep = rep * tm_keep
+                fresh = state.dl
 
         def step_loss_mean(loss, am, n_act):
+            if defended:
+                # A corrupted client that has not healed yet (downloaded a
+                # clean model) produces a non-finite loss while its upload
+                # is screened -- keep the loss metric (and the guarded
+                # horizon's divergence predicate) meaningful by screening
+                # the metric the same way.
+                w = am * jnp.isfinite(loss).astype(jnp.float32)
+                return (jnp.sum(jnp.where(w != 0, loss, 0))
+                        / jnp.maximum(jnp.sum(w), 1.0))
             if am is not None:
                 return jnp.sum(jnp.where(am != 0, loss, 0)) / n_act
             return jnp.mean(loss)
@@ -426,42 +514,77 @@ def _build_global_round(
                 # shape), so the group mean, z update and dissemination
                 # below need no further gating.
                 batches_eh, em = inp
-                am = (em[:, None] * cmask if partial
+                am = (em[:, None] * cmask if masked
                       else jnp.broadcast_to(em[:, None], (G, K)))
                 n_act = jnp.maximum(jnp.sum(am), 1.0)
             else:
                 batches_eh = inp
-                am = cmask if partial else None
-                n_act = n_active if partial else None
+                am = cmask if masked else None
+                n_act = n_active if masked else None
             x_end, losses = local_phase(x, z, y, dyn, anchor, batches_eh,
                                         am, n_act)
 
-            # Group aggregation (line 8): xbar_j = mean over (active) clients
-            # (realized-count or expected-count denominator per weighting).
-            if am is not None:
-                xbar = tu.tree_masked_mean(x_end, am, axis=1,
+            # Upload view: corruption faults rewrite the faulted clients'
+            # deltas at the upload boundary; the defense then screens/clips
+            # what actually enters the aggregate (clean uploads keep their
+            # exact bits either way -- where-selects, never arithmetic).
+            x_up = x_end
+            if f_corrupt:
+                x_up = _flt.corrupt_uploads(x, x_end, fm.corrupt * am, faults)
+            if defended:
+                x_up, ok = _flt.screen_and_clip(x, x_up, defense)
+                smask = am * ok
+                scr = jnp.sum(am) - jnp.sum(smask)
+                n_srv = jnp.maximum(jnp.sum(smask), 1.0)
+            else:
+                smask = am
+                n_srv = n_act
+
+            # Group aggregation (line 8): xbar_j = mean over (active,
+            # surviving) clients (realized-count or expected-count
+            # denominator per weighting).
+            if smask is not None:
+                xbar = tu.tree_masked_mean(x_up, smask, axis=1,
                                            denom=cdenom)            # [G, ...]
             else:
-                xbar = tu.tree_mean(x_end, axis=1)                  # [G, ...]
+                xbar = tu.tree_mean(x_up, axis=1)                   # [G, ...]
             xbar_b = tu.tree_broadcast_to_axis(xbar, 1, K)          # [G, K, ...]
 
-            diff = tu.tree_sub(x_end, xbar_b)
-            if am is not None:
-                drift = tu.tree_masked_sq_norm(diff, am) / n_act
+            diff = tu.tree_sub(x_up, xbar_b)
+            if smask is not None:
+                drift = tu.tree_masked_sq_norm(diff, smask) / n_srv
             else:
                 drift = tu.tree_sq_norm(diff) / (G * K)
 
             # Client-group correction update (line 9):
             #   z_i += (x_{i,H} - xbar_j) / (H * lr)
+            # Gated on the screen mask: a screened contribution never
+            # integrates into the correction state.
             if use_z:
                 z_new = jax.tree.map(
-                    lambda zi, xe, xb: zi + (xe - xb) / (H * lr), z, x_end, xbar_b
+                    lambda zi, xe, xb: zi + (xe - xb) / (H * lr), z, x_up, xbar_b
                 )
-                z = tu.tree_select(am, z_new, z) if am is not None else z_new
+                z = tu.tree_select(smask, z_new, z) if smask is not None else z_new
             # Model dissemination: every active client restarts from the
-            # group model; inactive clients stay frozen.
-            x = tu.tree_select(am, xbar_b, x_end) if am is not None else xbar_b
-            return (x, z, y, dyn, anchor), (losses, drift)
+            # group model; inactive clients stay frozen. Under the defense,
+            # active-but-screened clients also download -- that is what
+            # heals a corrupted client -- unless the group has no surviving
+            # contribution at all (its hardened mean is an exact, unusable
+            # zero), in which case the group's active clients revert to
+            # their group-round start model: a screened upload must never
+            # survive in a replica, or the global recovery mean would
+            # integrate it anyway (`x` still holds the round-start
+            # replicas here; for frozen clients it is bit-identical to
+            # x_up, so only the fully-screened case changes).
+            if smask is None:
+                x = xbar_b
+            elif defended:
+                has_srv = (jnp.sum(smask, axis=1) > 0).astype(jnp.float32)
+                x = tu.tree_select(am * has_srv[:, None], xbar_b, x)
+            else:
+                x = tu.tree_select(am, xbar_b, x_up)
+            out = (losses, drift, scr) if defended else (losses, drift)
+            return (x, z, y, dyn, anchor), out
 
         # --- Round initialization (lines 2-4) ---------------------------
         # Group model init is implicit: params enter equal across clients.
@@ -473,12 +596,12 @@ def _build_global_round(
                     # Generalized per report cycle: only groups starting
                     # from a fresh download reset; mid-cycle stragglers
                     # keep accumulating z across windows.
-                    zmask = (fresh[:, None] * cmask if partial
+                    zmask = (fresh[:, None] * cmask if masked
                              else jnp.broadcast_to(fresh[:, None], (G, K)))
                     z = tu.tree_select(zmask, tu.tree_zeros_like(z), z)
                 else:
                     z0 = tu.tree_zeros_like(z)
-                    z = tu.tree_select(cmask, z0, z) if partial else z0
+                    z = tu.tree_select(cmask, z0, z) if masked else z0
             else:
                 # Theoretical init (line 3): z_i = -g_i + mean_group g_i,
                 # evaluated with the first local batch xi_{i,0}^{t,0}.
@@ -543,12 +666,18 @@ def _build_global_round(
                     (xc, zc, y, dyn, anchor), inp)
                 return (xc, zc), out
 
-            (x, z), (losses, drifts) = jax.lax.scan(
+            (x, z), scan_out = jax.lax.scan(
                 group_round_flat, (x, z), scan_xs)
         else:
-            (x, z, y, dyn, _), (losses, drifts) = jax.lax.scan(
+            (x, z, y, dyn, _), scan_out = jax.lax.scan(
                 group_round, (x, z, y, dyn, anchor), scan_xs
             )
+        if defended:
+            losses, drifts, scrs = scan_out
+            screened = jnp.sum(scrs)
+        else:
+            losses, drifts = scan_out
+            screened = jnp.zeros((), jnp.float32)
 
         # --- Global aggregation (line 10) --------------------------------
         if async_mode:
@@ -556,11 +685,19 @@ def _build_global_round(
             # reports enter a weighted mean -- report cadence (rep) x policy
             # weight (dw) x the participation estimator -- and non-reporting
             # groups neither upload nor download (see core/staleness.py).
-            if partial:
+            if masked:
                 gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
                 # Recovery, not estimation: active replicas of group j all
                 # hold the disseminated xbar_j from its last live iteration.
                 xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
+                if defended and defense.screen_nonfinite:
+                    # Backstop group-level screen: a recovered report that
+                    # still carries non-finite bits never enters the merge
+                    # (counts every active client it would have spoken for).
+                    gfin = _flt.all_finite_mask(xbar_j, 1)
+                    screened = screened + jnp.sum(
+                        cmask * ((gact * (1.0 - gfin))[:, None]))
+                    gact = gact * gfin
                 obs = rep * gact
             else:
                 xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)
@@ -590,7 +727,7 @@ def _build_global_round(
                 wsum = w * gmask
                 sup = wsum * gact
                 den = (gdenom / G) * jnp.sum(w)
-            elif partial:
+            elif masked:
                 wsum = w * gact
                 sup = wsum
                 den_raw = jnp.sum(wsum)
@@ -612,6 +749,33 @@ def _build_global_round(
             gdrift = tu.tree_masked_sq_norm(
                 tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G)), obs
             ) / jnp.maximum(jnp.sum(obs), 1.0)
+        elif masked and (fault_mode or defended):
+            # The legacy recovery/estimation split of tree_group_global_mean,
+            # opened up so group-timeout faults and the group-level finite
+            # screen can compose into the estimation mask between the two
+            # stages (recovery over active replicas is unchanged).
+            xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
+            gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
+            if f_timeout:
+                # A timed-out group misses the global exchange entirely:
+                # no upload, no y update, no download -- frozen this round.
+                gact = gact * tm_keep
+            if defended and defense.screen_nonfinite:
+                gfin = _flt.all_finite_mask(xbar_j, 1)
+                screened = screened + jnp.sum(
+                    cmask * ((gact * (1.0 - gfin))[:, None]))
+                gact = gact * gfin
+            if ht:
+                xbar_j0 = jax.tree.map(
+                    lambda v: jnp.where(tu.expand_mask(gact, v) != 0, v, 0),
+                    xbar_j)
+                xbar = tu.tree_masked_mean(xbar_j0, gmask, axis=0,
+                                           denom=gdenom)
+            else:
+                xbar = tu.tree_masked_mean(xbar_j, gact, axis=0)
+            gdrift = tu.tree_masked_sq_norm(
+                tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G)), gact
+            ) / jnp.maximum(jnp.sum(gact), 1.0)
         elif partial:
             # A group with zero sampled clients never feeds the y update or
             # dissemination of its own replicas (gact gating). Under
@@ -651,14 +815,14 @@ def _build_global_round(
                 y_new = jax.tree.map(
                     lambda yj, xj, xg: yj + (xj - xg) / (H * E * lr), y, xbar_j, xbar
                 )
-                y = tu.tree_select(gact, y_new, y) if partial else y_new
+                y = tu.tree_select(gact, y_new, y) if masked else y_new
 
         # FedDyn gradient-memory update (per client, after its local work).
         if use_dyn:
             dyn_new = jax.tree.map(
                 lambda mi, xi, ai: mi - cfg.feddyn_alpha * (xi - ai), dyn, x, anchor
             )
-            dyn = tu.tree_select(cmask, dyn_new, dyn) if partial else dyn_new
+            dyn = tu.tree_select(cmask, dyn_new, dyn) if masked else dyn_new
 
         # Dissemination: active clients restart from the (server-lr) global
         # model; frozen clients keep what they have.
@@ -674,14 +838,35 @@ def _build_global_round(
             lambda xg: jnp.broadcast_to(xg, (G, K) + xg.shape), xbar
         )
         if async_mode:
-            # Only reporting groups download; stragglers keep their
-            # mid-cycle replicas (that lag is exactly what makes their
-            # next report stale).
-            dmask = (rep[:, None] * cmask if partial
-                     else jnp.broadcast_to(rep[:, None], (G, K)))
+            if fault_mode or defended:
+                # Reporting groups download only when the window actually
+                # aggregated something: with the defense decoupling "has
+                # active clients" from "entered the merge", a window whose
+                # every report was screened must not disseminate its
+                # hardened (exact-zero) merge.
+                any_obs = (jnp.sum(obs) > 0).astype(jnp.float32)
+                dmask = rep[:, None] * cmask * any_obs
+            elif masked:
+                # Only reporting groups download; stragglers keep their
+                # mid-cycle replicas (that lag is exactly what makes their
+                # next report stale).
+                dmask = rep[:, None] * cmask
+            else:
+                dmask = jnp.broadcast_to(rep[:, None], (G, K))
             x = tu.tree_select(dmask, x_glob, x)
         else:
-            x = tu.tree_select(cmask, x_glob, x) if partial else x_glob
+            if fault_mode or defended:
+                # Timed-out groups miss the download too (frozen), and no
+                # one downloads a global mean with zero surviving groups.
+                any_g = (jnp.sum(gact) > 0).astype(jnp.float32)
+                dm = cmask * any_g
+                if f_timeout:
+                    dm = dm * tm_keep[:, None]
+                x = tu.tree_select(dm, x_glob, x)
+            elif masked:
+                x = tu.tree_select(cmask, x_glob, x)
+            else:
+                x = x_glob
 
         snap, glob = state.snap, state.glob
         if async_mode and plan.needs_snapshots:
@@ -694,18 +879,25 @@ def _build_global_round(
                 obs, tu.tree_broadcast_to_axis(xbar, 0, G), snap)
             glob = tu.tree_select(any_obs, xbar, glob)
 
+        dl = state.dl
+        if async_mode and f_timeout:
+            # Realized downloads this window (rep already excludes timed-out
+            # groups): next round's freshness for the z re-init.
+            dl = rep * any_obs
+
         metrics = RoundMetrics(
             loss=losses,
             client_drift=drifts,
             group_drift=gdrift,
             z_norm=tu.tree_sq_norm(z) / (G * K),
             y_norm=tu.tree_sq_norm(y) / G,
-            participation=(jnp.sum(cmask) / (G * K)) if partial
+            participation=(jnp.sum(cmask) / (G * K)) if masked
             else jnp.ones((), jnp.float32),
+            screened=screened,
         )
         new_state = HFLState(
             params=x, z=z, y=y, dyn=dyn, rng=rng, round=state.round + 1,
-            snap=snap, glob=glob,
+            snap=snap, glob=glob, dl=dl,
         )
         return new_state, metrics
 

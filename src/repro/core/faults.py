@@ -1,0 +1,250 @@
+"""Deterministic fault injection and screened-aggregation defense plans.
+
+Real hierarchical deployments lose updates three ways the paper's clean
+simulation never sees: clients *crash* mid-round (their update never
+uploads), whole groups *time out* (the group misses its report window),
+and uploads arrive *corrupted* (non-finite bits, or deltas whose norm
+exploded). MTGC is unusually exposed to the last kind -- the correction
+variables ``z``/``y`` integrate deltas over time, so one poisoned upload
+contaminates the correction state for the rest of the horizon, not just
+one aggregate.
+
+This module makes all three failure modes first-class scenario axes:
+
+* :class:`FaultPlan` declares per-round fault *rates*;
+  :func:`fault_masks` draws the per-round 0/1 fault masks from the engine
+  state rng under exactly the ``round_masks`` key discipline (one split
+  off the stream, sub-keys per fault kind), so every fault scenario is
+  static-shape, bit-reproducible, and replayable by tests and oracles.
+  A disabled plan consumes no keys: the zero-fault rng stream -- and
+  therefore the zero-fault trajectory -- is untouched.
+* :class:`DefensePlan` declares the screened-aggregation defense the
+  round engines apply to uploads *before* any aggregate or correction
+  update sees them: non-finite screening, an optional hard norm screen,
+  and optional norm clipping. Screened contributions are masked out with
+  the same where-gated machinery as participation masks and reweighted by
+  the engines' existing realized-count / Horvitz-Thompson estimators, so
+  the aggregate stays exact over the survivors.
+
+Fault semantics in the two-level engines (core/engine.py, launch/train.py):
+
+* **crash** (``[G, K]``): folds into the round's activity mask -- a
+  crashed client is frozen exactly like an unsampled one (no local work
+  observed, no upload, no z reset/update, no download), composing with
+  partial participation and riding into the fused Pallas kernel
+  in-register.
+* **timeout** (``[G]``): the group's clients still run their local
+  phases and group aggregations, but the group misses the *global*
+  exchange -- no upload into the global mean, no y update, no download.
+  Under an async schedule the miss is routed through the staleness
+  machinery instead: the group's report mask is cleared for the window
+  and the state carries the realized download mask (``dl``), so the
+  group simply continues as a straggler and its z does not spuriously
+  re-initialize.
+* **corrupt** (``[G, K]``): applied to the *upload* at each group
+  aggregation -- the client's delta is replaced by the fault payload
+  (``nan``/``inf`` injection, or ``explode`` = delta scaled by
+  ``explode_factor``). Active corrupted clients re-download the clean
+  group model when the defense screens them, so corruption heals at the
+  next dissemination instead of persisting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as tu
+
+FAULT_KINDS = ("nan", "inf", "explode")
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Per-round fault rates, drawn i.i.d. per round from the state rng.
+
+    crash_rate: P(client crashes this round) -- update never uploads.
+    timeout_rate: P(group misses its report this round).
+    corrupt_rate: P(an active client's upload is corrupted this round).
+    corrupt_kind: payload of a corrupted upload -- ``"nan"`` / ``"inf"``
+        add a non-finite constant to the delta; ``"explode"`` scales the
+        delta by ``explode_factor`` (finite but norm-exploded).
+    explode_factor: the ``"explode"`` scale (> 1).
+    """
+
+    crash_rate: float = 0.0
+    timeout_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    corrupt_kind: str = "nan"
+    explode_factor: float = 1e4
+
+    @property
+    def enabled(self) -> bool:
+        """True when any fault kind can actually fire."""
+        return (self.crash_rate > 0 or self.timeout_rate > 0
+                or self.corrupt_rate > 0)
+
+    def validate(self) -> "FaultPlan":
+        for name in ("crash_rate", "timeout_rate", "corrupt_rate"):
+            rate = getattr(self, name)
+            _require(0.0 <= rate < 1.0,
+                     f"{name} must be in [0, 1), got {rate}")
+        _require(self.corrupt_kind in FAULT_KINDS,
+                 f"unknown corrupt_kind {self.corrupt_kind!r} "
+                 f"(choose from {FAULT_KINDS})")
+        _require(self.explode_factor > 1.0,
+                 f"explode_factor must be > 1, got {self.explode_factor}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class DefensePlan:
+    """Screened aggregation applied to uploads before they enter anything.
+
+    screen_nonfinite: mask out per-client deltas with any non-finite
+        entry, and (backstop) per-group means that still come back
+        non-finite at the global stage.
+    screen_norm: mask out any client delta with L2 norm above this
+        (non-finite norms compare False, so the norm screen also catches
+        them). None = no norm screen.
+    clip_norm: clip (not screen) finite client deltas to this L2 norm.
+        None = no clipping.
+    retry_widen: each guarded-horizon retry (core/driver.py) widens the
+        screen by multiplying ``screen_norm`` by this factor (< 1), so
+        repeated rollbacks catch progressively smaller explosions.
+
+    Screened contributions are where-masked out of the group/global means
+    (reweighted by the engines' realized-count / Horvitz-Thompson
+    estimators) and the z/y correction updates are gated on the same
+    screen mask, so corrections never integrate a screened contribution.
+    Screened-but-active clients still download the clean group/global
+    model, which is what heals a corrupted client.
+    """
+
+    screen_nonfinite: bool = True
+    screen_norm: float | None = None
+    clip_norm: float | None = None
+    retry_widen: float = 0.5
+
+    @property
+    def enabled(self) -> bool:
+        return (self.screen_nonfinite or self.screen_norm is not None
+                or self.clip_norm is not None)
+
+    def validate(self) -> "DefensePlan":
+        _require(self.screen_norm is None or self.screen_norm > 0,
+                 f"screen_norm must be None or > 0, got {self.screen_norm}")
+        _require(self.clip_norm is None or self.clip_norm > 0,
+                 f"clip_norm must be None or > 0, got {self.clip_norm}")
+        _require(0.0 < self.retry_widen < 1.0,
+                 f"retry_widen must be in (0, 1), got {self.retry_widen}")
+        return self
+
+
+class FaultMasks(NamedTuple):
+    """One round's realized faults (0/1 float masks, 1 = faulted)."""
+
+    crash: jax.Array    # [G, K] client crashed: update never uploads
+    timeout: jax.Array  # [G]    group missed its report window
+    corrupt: jax.Array  # [G, K] client upload corrupted
+
+
+def fault_masks(rng: jax.Array, plan: FaultPlan, G: int,
+                K: int) -> tuple[FaultMasks, jax.Array]:
+    """Draw one round's fault masks; returns ``(masks, next_rng)``.
+
+    Key discipline mirrors ``participation.round_masks``: one split off
+    the carried stream, then fixed per-kind sub-keys -- so each fault
+    kind's realization is independent of the other kinds' rates, and the
+    whole scenario replays bit-for-bit from the state rng. Callers must
+    only invoke this when ``plan.enabled`` (a disabled plan must not
+    advance the zero-fault rng stream).
+    """
+    fkey, next_rng = jax.random.split(rng)
+    kc, kt, ku = jax.random.split(fkey, 3)
+
+    def draw(key, rate, shape):
+        if rate <= 0:
+            return jnp.zeros(shape, jnp.float32)
+        return jax.random.bernoulli(key, rate, shape).astype(jnp.float32)
+
+    return FaultMasks(
+        crash=draw(kc, plan.crash_rate, (G, K)),
+        timeout=draw(kt, plan.timeout_rate, (G,)),
+        corrupt=draw(ku, plan.corrupt_rate, (G, K)),
+    ), next_rng
+
+
+def corrupt_uploads(x_start, x_end, bad: jax.Array, plan: FaultPlan):
+    """The upload view of ``x_end``: clients with ``bad != 0`` replace
+    their delta ``x_end - x_start`` with the fault payload.
+
+    ``bad`` is ``[G, K]`` (corrupt mask x activity: only clients that
+    actually worked this group round can upload garbage). Clean clients'
+    uploads keep their exact bits (``where``-select, never arithmetic).
+    """
+    delta = tu.tree_sub(x_end, x_start)
+    if plan.corrupt_kind == "explode":
+        payload = jax.tree.map(lambda d: d * plan.explode_factor, delta)
+    else:
+        val = jnp.nan if plan.corrupt_kind == "nan" else jnp.inf
+        payload = jax.tree.map(lambda d: d + val, delta)
+    return tu.tree_select(bad, tu.tree_add(x_start, payload), x_end)
+
+
+def all_finite_mask(t, lead_ndim: int) -> jax.Array:
+    """0/1 float mask over the first ``lead_ndim`` axes: 1 where every
+    entry of every leaf under that index is finite."""
+    out = None
+    for leaf in jax.tree.leaves(t):
+        axes = tuple(range(lead_ndim, leaf.ndim))
+        fin = jnp.all(jnp.isfinite(leaf), axis=axes) if axes \
+            else jnp.isfinite(leaf)
+        out = fin if out is None else out & fin
+    return out.astype(jnp.float32)
+
+
+def client_delta_sq_norm(delta) -> jax.Array:
+    """[G, K] squared L2 norm of each client's whole-model delta (f32)."""
+    out = None
+    for leaf in jax.tree.leaves(delta):
+        f = leaf.astype(jnp.float32)
+        s = jnp.sum(f * f, axis=tuple(range(2, f.ndim)))
+        out = s if out is None else out + s
+    return out
+
+
+def screen_and_clip(x_start, x_up, defense: DefensePlan):
+    """Apply the defense to one group round's uploads.
+
+    Returns ``(x_up', ok)`` -- the (possibly clipped) upload view and the
+    ``[G, K]`` 0/1 survivor mask. Callers AND ``ok`` into the activity
+    mask to form the screen mask every aggregate and correction update is
+    gated on. Clipping only rewrites clipped clients (``where``-select),
+    so unclipped uploads keep their exact bits.
+    """
+    delta = tu.tree_sub(x_up, x_start)
+    sqn = client_delta_sq_norm(delta)
+    ok = jnp.ones(sqn.shape, jnp.float32)
+    if defense.screen_nonfinite:
+        ok = ok * all_finite_mask(x_up, 2)
+    if defense.screen_norm is not None:
+        thr = jnp.float32(defense.screen_norm) ** 2
+        # NaN/Inf squared norms compare False -> also screened here.
+        ok = ok * (sqn <= thr).astype(jnp.float32)
+    if defense.clip_norm is not None:
+        c = jnp.float32(defense.clip_norm)
+        hit = jnp.isfinite(sqn) & (sqn > c * c)
+        scale = jnp.where(hit, c * jax.lax.rsqrt(jnp.maximum(sqn, c * c)), 1.0)
+        x_clip = jax.tree.map(
+            lambda xs, d: xs + tu.expand_mask(scale, d).astype(d.dtype) * d,
+            x_start, delta)
+        x_up = tu.tree_select(hit.astype(jnp.float32), x_clip, x_up)
+    return x_up, ok

@@ -156,8 +156,8 @@ def _masked_levels_ht(x: PyTree, chains: tuple, leaf_act: jax.Array,
     vals, acts = _masked_levels(x, leaf_act, to_level + 1, dims)
     top, act_top = vals[to_level + 1], acts[to_level + 1]
     # Subtrees with no active leaf contribute an exact zero to the HT sum
-    # (where, not multiplication: the recovery fallback is an unmasked
-    # mean that may include non-finite frozen replicas).
+    # (where, not multiplication, so frozen non-finite replicas can't
+    # leak through the recovered value).
     top0 = jax.tree.map(
         lambda v: jnp.where(tu.expand_mask(act_top, v) != 0, v, 0), top)
     vals[to_level] = tu.tree_masked_mean(

@@ -64,10 +64,13 @@ def tree_masked_mean(a: PyTree, mask: jax.Array, axis: int,
 
     With ``denom=None`` (realized-count weighting) the masked sum is
     divided by the number of active entries; slices with no active entries
-    fall back to the unmasked mean -- callers gate those slices out
-    downstream (their activity indicator is zero), so the fallback value is
-    never observed, it just keeps the program NaN-free (gated by the
-    all-empty-group freeze tests in tests/test_weighting.py).
+    return exact zeros (masked sum 0 over a clamped count of 1) -- callers
+    gate those slices out downstream (their activity indicator is zero), so
+    the value is never observed, it just keeps the program NaN-free even
+    when *every* contribution in a slice was screened out or carries
+    non-finite bits (gated by the all-empty-group freeze tests in
+    tests/test_weighting.py and the empty-slice test in
+    tests/test_participation.py).
 
     With a fixed ``denom`` (inverse-probability weighting: the *expected*
     active count ``inclusion_prob * axis_size``, see
@@ -89,14 +92,12 @@ def tree_masked_mean(a: PyTree, mask: jax.Array, axis: int,
         return jax.tree.map(_ht, a)
 
     cnt = jnp.sum(mask, axis=axis)
-    has = cnt != 0
     dn = jnp.maximum(cnt, 1)
 
     def _m(x):
         w = expand_mask(mask, x) != 0
         s = jnp.sum(jnp.where(w, x, 0), axis=axis)
-        mm = s / expand_mask(dn, s)
-        return jnp.where(expand_mask(has, mm), mm, jnp.mean(x, axis=axis))
+        return s / expand_mask(dn, s)
 
     return jax.tree.map(_m, a)
 
@@ -116,9 +117,9 @@ def tree_group_global_mean(x: PyTree, cmask: jax.Array,
     one active client; with a fixed ``gdenom`` (inverse-probability
     weighting: expected reachable-group count) the Horvitz-Thompson sum
     over the *reachable*-group mask ``gmask``, an empty reachable group
-    contributing an exact zero (``where``, not multiplication -- the
-    recovery fallback is an unmasked mean that may include non-finite
-    frozen replicas).
+    contributing an exact zero (``where``, not multiplication -- an empty
+    group's recovered mean is an exact zero, never an unmasked mean over
+    possibly non-finite frozen replicas).
 
     Returns ``(xbar_j [G, ...], xbar [...], gact [G])``.
     """

@@ -93,6 +93,7 @@ class ShardedHFLState(NamedTuple):
     round: jax.Array | None = None  # window counter (async cadences only)
     snap: PyTree | None = None   # [G, ...] last-downloaded global per group
     glob: PyTree | None = None   # [...]    last global model (delay comp.)
+    dl: jax.Array | None = None  # [G] realized downloads (timeout faults + async)
 
 
 class ShardedMetrics(NamedTuple):
@@ -101,6 +102,7 @@ class ShardedMetrics(NamedTuple):
     z_norm: jax.Array
     y_norm: jax.Array
     participation: jax.Array  # fraction of clients active this round
+    screened: jax.Array      # count of screened contributions (0 undefended)
 
 
 def sharded_init(params0: PyTree, G: int, K: int,
@@ -108,7 +110,8 @@ def sharded_init(params0: PyTree, G: int, K: int,
                  correction_dtype=None,
                  rng: jax.Array | None = None,
                  round_counter: bool = False,
-                 staleness_snapshots: bool = False) -> ShardedHFLState:
+                 staleness_snapshots: bool = False,
+                 fault_download: bool = False) -> ShardedHFLState:
     """Stacked per-client state. ``correction_dtype`` stores z/y in a
     narrower dtype (bf16) -- a beyond-paper memory optimization; the update
     math still runs in the params' dtype. Incompatible with flat states
@@ -119,8 +122,11 @@ def sharded_init(params0: PyTree, G: int, K: int,
     ``round_counter`` carries the window counter async report cadences are
     derived from; ``staleness_snapshots`` adds the per-group download
     snapshots (``snap``/``glob``) delay-compensated async rounds need (see
-    core/staleness.py). Both default off: the sync state is unchanged."""
+    core/staleness.py); ``fault_download`` carries the realized-download
+    mask group-timeout faults under an async schedule need
+    (core/faults.py). All default off: the sync state is unchanged."""
     rnd = jnp.zeros((), jnp.int32) if round_counter else None
+    dl = jnp.ones((G,), jnp.float32) if fault_download else None
     if use_flat_state:
         if correction_dtype is not None:
             raise ValueError(
@@ -142,7 +148,7 @@ def sharded_init(params0: PyTree, G: int, K: int,
             )
         return ShardedHFLState(
             params=stacked, z=packer.zeros((G, K)), y=packer.zeros((G,)),
-            rng=rng, round=rnd, snap=snap, glob=glob,
+            rng=rng, round=rnd, snap=snap, glob=glob, dl=dl,
         )
     stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0)
     cdt = correction_dtype
@@ -156,7 +162,7 @@ def sharded_init(params0: PyTree, G: int, K: int,
         snap = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (G,) + x.shape), params0)
     return ShardedHFLState(params=stacked, z=z0, y=y0, rng=rng,
-                           round=rnd, snap=snap, glob=glob)
+                           round=rnd, snap=snap, glob=glob, dl=dl)
 
 
 def make_sharded_round(
@@ -234,6 +240,8 @@ def _build_sharded_round(
     participation_mode: str = "uniform",
     participation_weighting: str = "none",
     plan=None,
+    faults=None,
+    defense=None,
 ) -> Callable[[ShardedHFLState, PyTree], tuple[ShardedHFLState, ShardedMetrics]]:
     """The real production-round builder behind ``repro.api``'s adapter.
 
@@ -249,6 +257,12 @@ def _build_sharded_round(
     reporting this window -- identical semantics to the simulator engine's
     async path (see core/engine.py and core/staleness.py). ``plan=None``
     traces the legacy sync program bit for bit.
+
+    ``faults`` / ``defense`` (``core.faults.FaultPlan`` /
+    ``DefensePlan``) inject per-round crash / timeout / corrupted-upload
+    faults and screen/clip uploads before aggregation -- identical
+    semantics to the simulator engine's fault path (see core/faults.py).
+    Disabled (or None) plans trace the legacy program, bit for bit.
     """
     use_corr = algorithm == "mtgc"
     if algorithm not in ("mtgc", "hfedavg"):
@@ -270,6 +284,21 @@ def _build_sharded_round(
     fmode = fused_mode or "auto"
     partial = client_participation < 1.0 or group_participation < 1.0
     ht = partial and participation_weighting == "inverse_prob"
+    faults = faults if (faults is not None and faults.enabled) else None
+    defense = defense if (defense is not None and defense.enabled) else None
+    fault_mode = faults is not None
+    defended = defense is not None
+    if fault_mode:
+        faults.validate()
+        f_crash = faults.crash_rate > 0
+        f_timeout = faults.timeout_rate > 0
+        f_corrupt = faults.corrupt_rate > 0
+    else:
+        f_crash = f_timeout = f_corrupt = False
+    if defended:
+        defense.validate()
+    if fault_mode or defended:
+        from repro.core import faults as _flt
     vg = jax.vmap(jax.vmap(jax.value_and_grad(loss_fn)))  # over [G, K]
     async_mode = plan is not None
     if async_mode:
@@ -298,7 +327,6 @@ def _build_sharded_round(
                 mkey, G, K, client_participation, group_participation,
                 participation_mode)
             cmask, gmask = masks.client, masks.group       # [G, K], [G]
-            n_active = jnp.maximum(jnp.sum(cmask), 1.0)
             cdenom = (inclusion_prob(client_participation, K,
                                      participation_mode) * K if ht else None)
             gdenom = (inclusion_prob(group_participation, G,
@@ -307,6 +335,25 @@ def _build_sharded_round(
             cmask = None
             cdenom = gdenom = None
             rng = state.rng
+
+        if fault_mode:
+            if rng is None:
+                raise ValueError(
+                    "fault injection draws per-round masks from the state: "
+                    "build it with sharded_init(..., rng=key)")
+            # Fault draw AFTER the participation draw, off the same carried
+            # stream: the zero-fault rng stream is untouched.
+            fm, rng = _flt.fault_masks(rng, faults, G, K)
+            if f_crash:
+                alive = 1.0 - fm.crash
+                cmask = alive if cmask is None else cmask * alive
+            if f_timeout:
+                tm_keep = 1.0 - fm.timeout                 # [G]
+        if (fault_mode or defended) and cmask is None:
+            cmask = jnp.ones((G, K), jnp.float32)
+        masked = cmask is not None
+        if masked:
+            n_active = jnp.maximum(jnp.sum(cmask), 1.0)
 
         if async_mode:
             if plan.num_groups != G:
@@ -321,6 +368,15 @@ def _build_sharded_round(
             t = state.round if state.round is not None else 0
             rep = plan.report_mask(t)                      # [G]
             fresh = plan.fresh_mask(t)                     # [G]
+            if f_timeout:
+                if state.dl is None:
+                    raise ValueError(
+                        "group-timeout faults under an async schedule carry "
+                        "the realized-download mask in the state: build it "
+                        "with sharded_init(..., fault_download=True) "
+                        "(repro.api.build does this for you)")
+                rep = rep * tm_keep
+                fresh = state.dl
 
         if use_corr:
             # Alg. 1 line 3 (with the experimental zero init of footnote 2):
@@ -329,21 +385,30 @@ def _build_sharded_round(
             # persists across rounds. Async: restarts per report *cycle*
             # (only groups starting from a fresh download reset).
             if async_mode:
-                zmask = (fresh[:, None] * cmask if partial
+                zmask = (fresh[:, None] * cmask if masked
                          else jnp.broadcast_to(fresh[:, None], (G, K)))
                 z = tu.tree_select(zmask, tu.tree_zeros_like(z), z)
             else:
                 z0 = tu.tree_zeros_like(z)
-                z = tu.tree_select(cmask, z0, z) if partial else z0
+                z = tu.tree_select(cmask, z0, z) if masked else z0
 
         def step_loss_mean(lsum_gk, inv_a, am, n_act):
             """Scalar step loss from the per-client sums over A chunks."""
             lpc = lsum_gk * inv_a
+            if defended:
+                # Screen not-yet-healed corrupted clients out of the metric
+                # (their uploads are screened; see core/engine.py).
+                w = am * jnp.isfinite(lpc).astype(jnp.float32)
+                return (jnp.sum(jnp.where(w != 0, lpc, 0))
+                        / jnp.maximum(jnp.sum(w), 1.0))
             if am is not None:
                 return jnp.sum(jnp.where(am != 0, lpc, 0)) / n_act
             return jnp.mean(lpc)
 
         def step_grad_norm(g, inv_a, am):
+            if defended:
+                w = am * _flt.all_finite_mask(g, 2)
+                return tu.tree_masked_sq_norm(g, w) * inv_a * inv_a
             if am is not None:
                 return tu.tree_masked_sq_norm(g, am) * inv_a * inv_a
             return tu.tree_sq_norm(g) * inv_a * inv_a
@@ -457,13 +522,14 @@ def _build_sharded_round(
                 # exactly like an unsampled client, so aggregation, z
                 # update and dissemination below need no further gating.
                 batch_e, em = inp
-                am = (em[:, None] * cmask if partial
+                am = (em[:, None] * cmask if masked
                       else jnp.broadcast_to(em[:, None], (G, K)))
                 n_act = jnp.maximum(jnp.sum(am), 1.0)
             else:
                 batch_e = inp
-                am = cmask if partial else None
-                n_act = n_active if partial else None
+                am = cmask if masked else None
+                n_act = n_active if masked else None
+            x_start = x  # phase-start model: upload deltas are vs this
             if flat:
                 x, (losses, gnorm) = local_phase_flat(x, z, y, batch_e,
                                                       am, n_act)
@@ -471,13 +537,27 @@ def _build_sharded_round(
                 (x, z, y), (losses, gnorm) = jax.lax.scan(
                     lambda c, b: local_step(c, b, am, n_act), (x, z, y),
                     batch_e)
+            # Upload view: corruption faults rewrite faulted clients'
+            # deltas at the upload boundary; the defense screens/clips what
+            # enters the aggregate (clean uploads keep their exact bits).
+            if f_corrupt:
+                x = _flt.corrupt_uploads(x_start, x, fm.corrupt * am, faults)
+            if defended:
+                x, ok = _flt.screen_and_clip(x_start, x, defense)
+                smask = am * ok
+                scr = jnp.sum(am) - jnp.sum(smask)
+            else:
+                smask = am
             with jax.named_scope("group_agg"):
-                # Group aggregation: mean over (active) clients; under
-                # inverse_prob the masked sum divides by the expected count.
-                xbar = (tu.tree_masked_mean(x, am, axis=1, denom=cdenom)
-                        if am is not None else tu.tree_mean(x, axis=1))
+                # Group aggregation: mean over (active, surviving) clients;
+                # under inverse_prob the masked sum divides by the expected
+                # count.
+                xbar = (tu.tree_masked_mean(x, smask, axis=1, denom=cdenom)
+                        if smask is not None else tu.tree_mean(x, axis=1))
             if use_corr:
                 # z_i += (x_{i,H} - xbar_j) / (H * lr)   (Alg. 1 line 9)
+                # Gated on the screen mask: screened contributions never
+                # integrate into the correction state.
                 z_new = jax.tree.map(
                     lambda zi, xe, xb: (
                         zi.astype(jnp.float32)
@@ -485,18 +565,36 @@ def _build_sharded_round(
                     ).astype(zi.dtype),
                     z, x, xbar,
                 )
-                z = tu.tree_select(am, z_new, z) if am is not None else z_new
+                z = tu.tree_select(smask, z_new, z) if smask is not None else z_new
             # dissemination: every active client restarts from its group
-            # model; frozen clients keep their params.
+            # model; frozen clients keep their params. Under the defense,
+            # screened-but-active clients also download (healing) -- unless
+            # the whole group was screened (hardened zero mean), in which
+            # case its active clients revert to the phase-start model so a
+            # screened upload never survives into the global recovery mean
+            # (x_start is bit-identical to x for frozen clients).
             xbar_b = jax.tree.map(
                 lambda xb, xi: jnp.broadcast_to(xb[:, None], xi.shape), xbar, x
             )
-            x = tu.tree_select(am, xbar_b, x) if am is not None else xbar_b
-            return (x, z, y), (losses, gnorm)
+            if smask is None:
+                x = xbar_b
+            elif defended:
+                has_srv = (jnp.sum(smask, axis=1) > 0).astype(jnp.float32)
+                x = tu.tree_select(am * has_srv[:, None], xbar_b, x_start)
+            else:
+                x = tu.tree_select(am, xbar_b, x)
+            out = (losses, gnorm, scr) if defended else (losses, gnorm)
+            return (x, z, y), out
 
-        (x, z, y), (losses, gnorms) = jax.lax.scan(
+        (x, z, y), scan_out = jax.lax.scan(
             group_round, (x, z, y),
             (batches, em_all) if async_mode else batches)
+        if defended:
+            losses, gnorms, scrs = scan_out
+            screened = jnp.sum(scrs)
+        else:
+            losses, gnorms = scan_out
+            screened = jnp.zeros((), jnp.float32)
 
         # --- global aggregation + y update (Alg. 1 lines 10-11) ----------
         if async_mode:
@@ -504,10 +602,16 @@ def _build_sharded_round(
             # same semantics as the simulator engine's async path (see
             # core/engine.py and core/staleness.py), f32 math for narrow
             # correction dtypes.
-            if partial:
+            if masked:
                 gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
                 with jax.named_scope("global_agg"):
                     xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
+                if defended and defense.screen_nonfinite:
+                    # Backstop group-level screen before the merge.
+                    gfin = _flt.all_finite_mask(xbar_j, 1)
+                    screened = screened + jnp.sum(
+                        cmask * ((gact * (1.0 - gfin))[:, None]))
+                    gact = gact * gfin
                 obs = rep * gact
             else:
                 xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)
@@ -530,7 +634,7 @@ def _build_sharded_round(
                 wsum = w * gmask
                 sup = wsum * gact
                 den = (gdenom / G) * jnp.sum(w)
-            elif partial:
+            elif masked:
                 wsum = w * gact
                 sup = wsum
                 den_raw = jnp.sum(wsum)
@@ -548,6 +652,28 @@ def _build_sharded_round(
 
             with jax.named_scope("global_agg"):
                 xbar = jax.tree.map(_stale_merge, xbar_used)
+        elif masked and (fault_mode or defended):
+            # The recovery/estimation split opened up so timeouts and the
+            # group-level finite screen compose into the estimation mask
+            # (identical to the simulator engine's fault path).
+            with jax.named_scope("global_agg"):
+                xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
+                gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
+                if f_timeout:
+                    gact = gact * tm_keep
+                if defended and defense.screen_nonfinite:
+                    gfin = _flt.all_finite_mask(xbar_j, 1)
+                    screened = screened + jnp.sum(
+                        cmask * ((gact * (1.0 - gfin))[:, None]))
+                    gact = gact * gfin
+                if ht:
+                    xbar_j0 = jax.tree.map(
+                        lambda v: jnp.where(
+                            tu.expand_mask(gact, v) != 0, v, 0), xbar_j)
+                    xbar = tu.tree_masked_mean(xbar_j0, gmask, axis=0,
+                                               denom=gdenom)
+                else:
+                    xbar = tu.tree_masked_mean(xbar_j, gact, axis=0)
         elif partial:
             with jax.named_scope("global_agg"):
                 # Same recovery-then-estimate aggregate as the simulator
@@ -585,18 +711,36 @@ def _build_sharded_round(
                     ).astype(yj.dtype),
                     y, xbar_j, xbar,
                 )
-                y = tu.tree_select(gact, y_new, y) if partial else y_new
+                y = tu.tree_select(gact, y_new, y) if masked else y_new
         x_glob = jax.tree.map(
             lambda xg: jnp.broadcast_to(xg, (G, K) + xg.shape), xbar
         )
         if async_mode:
-            # Only reporting groups download; stragglers keep their
-            # mid-cycle replicas.
-            dmask = (rep[:, None] * cmask if partial
-                     else jnp.broadcast_to(rep[:, None], (G, K)))
+            if fault_mode or defended:
+                # No download from a window that aggregated nothing (every
+                # report screened/timed out: hardened exact-zero merge).
+                any_obs = (jnp.sum(obs) > 0).astype(jnp.float32)
+                dmask = rep[:, None] * cmask * any_obs
+            elif masked:
+                # Only reporting groups download; stragglers keep their
+                # mid-cycle replicas.
+                dmask = rep[:, None] * cmask
+            else:
+                dmask = jnp.broadcast_to(rep[:, None], (G, K))
             x = tu.tree_select(dmask, x_glob, x)
         else:
-            x = tu.tree_select(cmask, x_glob, x) if partial else x_glob
+            if fault_mode or defended:
+                # Timed-out groups miss the download too; no one downloads
+                # a global mean with zero surviving groups.
+                any_g = (jnp.sum(gact) > 0).astype(jnp.float32)
+                dm = cmask * any_g
+                if f_timeout:
+                    dm = dm * tm_keep[:, None]
+                x = tu.tree_select(dm, x_glob, x)
+            elif masked:
+                x = tu.tree_select(cmask, x_glob, x)
+            else:
+                x = x_glob
 
         snap, glob = state.snap, state.glob
         if async_mode and plan.needs_snapshots:
@@ -607,17 +751,23 @@ def _build_sharded_round(
                         jnp.expand_dims(xg, 0), sn.shape), xbar, snap),
                 snap)
             glob = tu.tree_select(any_obs, xbar, glob)
+        dl = state.dl
+        if async_mode and f_timeout:
+            # Realized downloads this window (rep already excludes timed-out
+            # groups): next round's freshness for the z re-init.
+            dl = rep * any_obs
         new_round = None if state.round is None else state.round + 1
         metrics = ShardedMetrics(
             loss=losses,
             grad_norm=gnorms[-1, -1],
             z_norm=tu.tree_sq_norm(z) / (G * K),
             y_norm=tu.tree_sq_norm(y) / G,
-            participation=(jnp.sum(cmask) / (G * K)) if partial
+            participation=(jnp.sum(cmask) / (G * K)) if masked
             else jnp.ones((), jnp.float32),
+            screened=screened,
         )
         return ShardedHFLState(params=x, z=z, y=y, rng=rng, round=new_round,
-                               snap=snap, glob=glob), metrics
+                               snap=snap, glob=glob, dl=dl), metrics
 
     return round_fn
 

@@ -41,6 +41,137 @@ def mtgc_round(x0, grads, G, K, E, H, lr, z=None, y=None, use_z=True, use_y=True
     return xbar, z, y
 
 
+def mtgc_faulty_run(x0, grads, G, K, E, H, lr, rounds, *, crash=None,
+                    timeout=None, corrupt=None, corrupt_kind="nan",
+                    explode_factor=1e4, screen_nonfinite=False,
+                    screen_norm=None, clip_norm=None):
+    """``rounds`` sync MTGC global rounds under explicit fault masks
+    (core/faults.py semantics), as literal loops. Full participation.
+
+    crash [rounds, G, K] / timeout [rounds, G] / corrupt [rounds, G, K]
+    are 0/1 masks (replay the engine's ``fault_masks`` draws to get the
+    identical realization). A crashed client is frozen exactly like an
+    unsampled one; a timed-out group works locally but misses the global
+    exchange (no upload, no y update, no download); a corrupted client's
+    upload is rewritten at the upload boundary. The defense keywords
+    mirror ``DefensePlan``: screened uploads never enter a mean or a
+    correction, a screened-but-active client still downloads (heals);
+    if its whole group was screened out it reverts to the group-round
+    start model instead, so no screened upload survives in a replica.
+
+    Returns (x [G, K, d] replicas, z, y, screened) -- ``screened`` is the
+    total screened-contribution count across all rounds (the engine's
+    ``screened`` metric summed).
+    """
+    d = x0.shape[0]
+    defended = (screen_nonfinite or screen_norm is not None
+                or clip_norm is not None)
+    crash = np.zeros((rounds, G, K)) if crash is None else np.asarray(crash)
+    timeout = np.zeros((rounds, G)) if timeout is None else np.asarray(timeout)
+    corrupt = np.zeros((rounds, G, K)) if corrupt is None else np.asarray(corrupt)
+
+    x = np.stack([[x0.copy() for _ in range(K)] for _ in range(G)])
+    z = np.zeros((G, K, d))
+    y = np.zeros((G, d))
+    screened = 0.0
+
+    for t in range(rounds):
+        cmask = 1.0 - crash[t]
+        tm_keep = 1.0 - timeout[t]
+        for g in range(G):
+            for k in range(K):
+                if cmask[g, k]:
+                    z[g, k] = 0.0                       # participants only
+        for e in range(E):
+            x_start = x.copy()
+            for h in range(H):
+                for g in range(G):
+                    for k in range(K):
+                        if cmask[g, k]:
+                            grad = grads(g, k, x[g, k])
+                            x[g, k] = x[g, k] - lr * (grad + z[g, k] + y[g])
+            x_up = x.copy()
+            for g in range(G):
+                for k in range(K):
+                    if corrupt[t, g, k] and cmask[g, k]:
+                        delta = x_up[g, k] - x_start[g, k]
+                        if corrupt_kind == "explode":
+                            payload = delta * explode_factor
+                        else:
+                            bad = np.nan if corrupt_kind == "nan" else np.inf
+                            payload = delta + bad
+                        x_up[g, k] = x_start[g, k] + payload
+            if defended:
+                ok = np.ones((G, K))
+                for g in range(G):
+                    for k in range(K):
+                        delta = x_up[g, k] - x_start[g, k]
+                        sqn = float(np.sum(delta * delta))
+                        if screen_nonfinite and not np.isfinite(x_up[g, k]).all():
+                            ok[g, k] = 0.0
+                        if screen_norm is not None and not (sqn <= screen_norm ** 2):
+                            ok[g, k] = 0.0              # NaN norms fail too
+                        if (clip_norm is not None and np.isfinite(sqn)
+                                and sqn > clip_norm ** 2):
+                            scale = clip_norm / np.sqrt(max(sqn, clip_norm ** 2))
+                            x_up[g, k] = x_start[g, k] + scale * delta
+                smask = cmask * ok
+                screened += float(np.sum(cmask) - np.sum(smask))
+            else:
+                smask = cmask
+            xbar_g = np.zeros((G, d))
+            for g in range(G):
+                n = smask[g].sum()
+                if n > 0:
+                    xbar_g[g] = (smask[g][:, None] * np.where(
+                        smask[g][:, None] != 0, x_up[g], 0)).sum(axis=0) / n
+            for g in range(G):
+                for k in range(K):
+                    if smask[g, k]:
+                        z[g, k] = z[g, k] + (x_up[g, k] - xbar_g[g]) / (H * lr)
+            for g in range(G):
+                has_srv = smask[g].sum() > 0
+                for k in range(K):
+                    if cmask[g, k] and (has_srv or not defended):
+                        x[g, k] = xbar_g[g].copy()
+                    elif cmask[g, k]:
+                        # Defended, whole group screened: revert to the
+                        # group-round start model so the screened upload
+                        # never survives into the global recovery mean.
+                        x[g, k] = x_start[g, k].copy()
+                    else:
+                        x[g, k] = x_up[g, k]
+        # Global exchange: recovery over active replicas, then the
+        # estimation mask composes activity, timeouts and the group-level
+        # finite backstop.
+        xbar_j = np.zeros((G, d))
+        gact = np.zeros(G)
+        for g in range(G):
+            n = cmask[g].sum()
+            if n > 0:
+                xbar_j[g] = (np.where(cmask[g][:, None] != 0, x[g], 0)).sum(
+                    axis=0) / n
+                gact[g] = 1.0
+        gact = gact * tm_keep
+        if defended and screen_nonfinite:
+            for g in range(G):
+                if gact[g] and not np.isfinite(xbar_j[g]).all():
+                    screened += float(cmask[g].sum())
+                    gact[g] = 0.0
+        ng = gact.sum()
+        xbar = ((gact[:, None] * np.where(gact[:, None] != 0, xbar_j, 0))
+                .sum(axis=0) / ng if ng > 0 else np.zeros(d))
+        for g in range(G):
+            if gact[g]:
+                y[g] = y[g] + (xbar_j[g] - xbar) / (H * E * lr)
+        any_g = ng > 0
+        for g in range(G):
+            for k in range(K):
+                if cmask[g, k] and any_g and tm_keep[g]:
+                    x[g, k] = xbar.copy()
+    return x, z, y, screened
+
+
 def mtgc_async_run(x0, grads, G, K, group_rounds, H, lr, windows, *,
                    policy="naive", max_staleness=None):
     """``windows`` async MTGC global rounds (core/staleness.py semantics),

@@ -22,9 +22,14 @@ EXPECTED_ALL = [
     "CLIENT_STATES",
     "CLI_FLAGS",
     "CliFlag",
+    "DefensePlan",
     "Engine",
     "ExperimentSpec",
+    "FAULT_KINDS",
     "FUSIONS",
+    "FaultPlan",
+    "GuardReport",
+    "GuardSpec",
     "Horizon",
     "LAYOUTS",
     "MultiLevelEngine",
@@ -66,6 +71,8 @@ EXPECTED_SPEC_FIELDS = {
     "population": None,
     "cohort_size": None,
     "client_state": "stateful",
+    "faults": None,
+    "defense": None,
 }
 
 EXPECTED_SCHEDULE_FIELDS = {
@@ -98,12 +105,16 @@ def test_cli_table_covers_spec_and_round_trips():
     import argparse
 
     spec_fields = {f.name for f in dataclasses.fields(api.ExperimentSpec)}
-    sched_fields = {f.name for f in dataclasses.fields(api.RoundSchedule)}
+    nested_fields = {
+        "schedule": {f.name for f in dataclasses.fields(api.RoundSchedule)},
+        "faults": {f.name for f in dataclasses.fields(api.FaultPlan)},
+        "defense": {f.name for f in dataclasses.fields(api.DefensePlan)},
+    }
     for row in api.CLI_FLAGS:
         target, _, sub = row.field.partition(".")
         assert target in spec_fields, row.field
-        if target == "schedule":
-            assert sub in sched_fields, row.field
+        if sub:
+            assert sub in nested_fields[target], row.field
 
     ap = argparse.ArgumentParser()
     api.add_spec_args(ap)
@@ -154,6 +165,19 @@ def test_cli_table_covers_spec_and_round_trips():
     spec_sl = api.spec_from_args(args_sl)
     assert spec_sl.client_state == "stateless"
     spec_sl.validate()
+
+    # Fault / defense flags construct the nested plans on demand; unset
+    # they stay None (the zero-fault legacy program).
+    assert (spec.faults, spec.defense) == (None, None)
+    args_flt = ap.parse_args([
+        "--fault-crash", "0.05", "--fault-corrupt", "0.1",
+        "--fault-kind", "explode", "--screen-norm", "4.0",
+        "--clip-norm", "2.0"])
+    spec_flt = api.spec_from_args(args_flt)
+    assert spec_flt.faults == api.FaultPlan(
+        crash_rate=0.05, corrupt_rate=0.1, corrupt_kind="explode")
+    assert spec_flt.defense == api.DefensePlan(screen_norm=4.0, clip_norm=2.0)
+    spec_flt.validate()
 
     # Overrides (entry-point pins) win over parsed values.
     pinned = api.spec_from_args(args, backend="sharded", microbatches=1,

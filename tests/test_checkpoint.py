@@ -113,3 +113,50 @@ def test_restore_structure_mismatch_raises(tmp_path):
     wide = hfl_init({"w": jnp.ones(D + 1)}, cfg)
     with pytest.raises(ValueError):
         restore(str(tmp_path), 1, wide)    # shape mismatch
+
+
+def test_fit_autosave_and_resume_bitexact(tmp_path):
+    """fit(checkpoint_every=, checkpoint_path=) autosaves at chunk
+    boundaries; fit(resume=True) restores the latest checkpoint and runs
+    only the remaining rounds -- bit-exact vs the uninterrupted run."""
+    spec = api.ExperimentSpec(
+        levels=(G, K), state_layout="flat", lr=0.05,
+        schedule=api.RoundSchedule(group_rounds=E, local_steps=H),
+        client_participation=0.5)
+    engine = api.build(spec, quad_loss)
+    data = make_data()
+    params = {"w": jnp.ones(D)}
+
+    sA, hA = api.fit(engine, data, 6, params=params,
+                     rng=jax.random.PRNGKey(3), checkpoint_every=2,
+                     checkpoint_path=str(tmp_path), donate=False)
+    assert latest_step(str(tmp_path)) == 6
+    assert sorted(p.name for p in tmp_path.glob("*.npz")) == [
+        "ckpt_00000002.npz", "ckpt_00000004.npz", "ckpt_00000006.npz"]
+
+    # Simulate a crash after round 4: drop the final checkpoint, resume.
+    for p in tmp_path.glob("*0006*"):
+        p.unlink()
+    sB, hB = api.fit(engine, data, 6, params=params,
+                     rng=jax.random.PRNGKey(3), checkpoint_every=2,
+                     checkpoint_path=str(tmp_path), resume=True,
+                     donate=False)
+    assert_states_equal(sA, sB, "resume")
+    assert len(np.asarray(hB.metrics.loss)) == 2      # rounds 5-6 only
+    assert latest_step(str(tmp_path)) == 6            # re-saved on the way
+
+    # resume past the horizon is an explicit error, not a silent no-op.
+    with pytest.raises(ValueError, match="nothing left"):
+        api.fit(engine, data, 4, params=params, rng=jax.random.PRNGKey(3),
+                checkpoint_every=2, checkpoint_path=str(tmp_path),
+                resume=True, donate=False)
+
+
+def test_fit_checkpoint_needs_path():
+    spec = api.ExperimentSpec(levels=(G, K), lr=0.05,
+                              schedule=api.RoundSchedule(group_rounds=E,
+                                                         local_steps=H))
+    engine = api.build(spec, quad_loss)
+    with pytest.raises(ValueError, match="checkpoint_path"):
+        api.fit(engine, make_data(), 2, params={"w": jnp.ones(D)},
+                checkpoint_every=2)

@@ -195,3 +195,54 @@ def test_model_rwkv_path_matches_kernel():
         st.reshape(2 * Hn, D // Hn, D // Hn), chunk=8, interpret=True)
     np.testing.assert_allclose(
         s_kern.reshape(2, Hn, D // Hn, D // Hn), st_model, rtol=1e-4, atol=1e-4)
+
+
+def test_mtgc_update_flat_nonfinite_row_isolation():
+    """Fault-injection contract: the participation/crash mask is a
+    where-select in-register, so a masked-out replica keeps its exact bits
+    even when its g/z operands carry NaN/Inf -- and a poisoned ACTIVE row
+    contaminates only itself (no cross-row leak through the block layout).
+    """
+    G, K, N = 2, 3, 300
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(G, K, N)), jnp.float32)
+    g = np.asarray(rng.normal(size=(G, K, N)), np.float32)
+    z = np.asarray(rng.normal(size=(G, K, N)), np.float32)
+    y = jnp.asarray(rng.normal(size=(G, N)), jnp.float32)
+    # Poison one masked-out replica and one active replica.
+    g[0, 1] = np.nan
+    z[0, 1] = np.inf
+    g[1, 2] = np.nan
+    mask = np.ones((G, K), np.float32)
+    mask[0, 1] = 0.0
+    got = np.asarray(mtgc_update_flat(x, jnp.asarray(g), jnp.asarray(z), y,
+                                      jnp.asarray(mask), lr=0.07,
+                                      interpret=True, block_rows=16))
+    # Masked-out poisoned row: exact input bits, no NaN leak.
+    np.testing.assert_array_equal(got[0, 1], np.asarray(x)[0, 1])
+    # Active poisoned row: documented propagation -- NaN stays in-row.
+    assert not np.isfinite(got[1, 2]).any()
+    # Every other row is the clean reference update.
+    want = np.asarray(ref.mtgc_update_flat_ref(
+        x, jnp.asarray(g), jnp.asarray(z), y, jnp.asarray(mask), 0.07, 1.0))
+    for gi in range(G):
+        for ki in range(K):
+            if (gi, ki) in ((0, 1), (1, 2)):
+                continue
+            np.testing.assert_allclose(got[gi, ki], want[gi, ki],
+                                       rtol=1e-6, atol=1e-6)
+
+
+def test_mtgc_update_tree_nonfinite_propagates():
+    """The unmasked single-leaf kernel has no gate: non-finite operands
+    propagate into the output (callers gate with masks-as-data upstream --
+    that is the engines' job, not the kernel's)."""
+    rng = np.random.default_rng(1)
+    x, z, y = (jnp.asarray(rng.normal(size=(40,)), jnp.float32)
+               for _ in range(3))
+    g = np.asarray(rng.normal(size=(40,)), np.float32)
+    g[7] = np.nan
+    got = np.asarray(mtgc_update(x, jnp.asarray(g), z, y, lr=0.05,
+                                 interpret=True, block_rows=8))
+    assert np.isnan(got[7])
+    assert np.isfinite(np.delete(got, 7)).all()

@@ -50,14 +50,19 @@ def test_masked_mean_ignores_masked_entries():
     np.testing.assert_allclose(np.asarray(got), 1.0)
 
 
-def test_masked_mean_empty_slice_falls_back_finite():
-    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, 4)), jnp.float32)
+def test_masked_mean_empty_slice_is_exact_zero():
+    """An all-masked slice recovers exact zeros -- even when the frozen
+    (masked-out) entries it would have read are non-finite. Screened
+    aggregation relies on this: a group whose every contribution was
+    screened must not emit NaN into the (gated, unobserved) aggregate."""
+    raw = np.random.default_rng(0).normal(size=(2, 3, 4)).astype(np.float32)
+    raw[0, 1] = np.nan  # garbage in the empty slice's masked-out entries
+    x = jnp.asarray(raw)
     mask = jnp.asarray([[0, 0, 0], [1, 1, 0]], jnp.float32)
-    got = tu.tree_masked_mean({"w": x}, mask, axis=1)["w"]
-    assert np.isfinite(np.asarray(got)).all()
-    # the empty group's fallback is the unmasked mean
-    np.testing.assert_allclose(np.asarray(got)[0],
-                               np.asarray(jnp.mean(x[0], axis=0)), rtol=1e-6)
+    got = np.asarray(tu.tree_masked_mean({"w": x}, mask, axis=1)["w"])
+    assert np.isfinite(got).all()
+    np.testing.assert_array_equal(got[0], np.zeros((4,), np.float32))
+    np.testing.assert_allclose(got[1], raw[1, :2].mean(axis=0), rtol=1e-6)
 
 
 def test_tree_select_keeps_frozen_bits():
