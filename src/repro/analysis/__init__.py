@@ -1,0 +1,15 @@
+"""Static program analysis for the HFL reproduction.
+
+Audits the *lowered* programs -- jaxpr + optimized HLO of every
+representative :class:`repro.api.ExperimentSpec`, obtained through
+``Engine.lower_chunk`` without executing a round -- plus an AST lint of
+the source tree's PRNG key discipline. Front door:
+``python -m repro.launch.audit``.
+
+Submodules: :mod:`specs` (the audited case matrix), :mod:`invariants`
+(donation / host-sync / f64 / correction-dtype / fusion / retrace),
+:mod:`keys` (key-discipline lint), :mod:`budgets` (compiled-cost bands).
+"""
+from repro.analysis.invariants import Finding  # noqa: F401
+from repro.analysis.keys import KeyFinding  # noqa: F401
+from repro.analysis.specs import AuditCase, audit_cases  # noqa: F401

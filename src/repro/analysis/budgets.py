@@ -1,0 +1,117 @@
+"""Compiled-cost budgets: the audited programs' roofline, pinned to disk.
+
+For every audit case, ``launch/hlo_analysis.analyze`` extracts
+trip-count-aware FLOPs / HBM bytes / collective bytes from the optimized
+HLO of the lowered driver chunk. Those numbers are checked into
+``analysis/budgets.json`` with a relative tolerance band; an accidental
+retrace-shaped blowup, a lost fusion, or a fattened collective then
+fails the audit *before* any benchmark runs.
+
+Budgets are a property of the compiler as much as of this repo, so the
+file records the jax version and backend it was generated on. On a
+mismatched environment the drift check degrades to notes (severity
+``"note"``) rather than failures -- refresh with::
+
+    python -m repro.launch.audit --update
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+
+from repro.analysis.invariants import Finding
+from repro.launch import hlo_analysis
+
+BUDGET_PATH = Path(__file__).with_name("budgets.json")
+METRICS = ("flops", "bytes", "collective_bytes")
+DEFAULT_RTOL = 0.2
+
+
+def measure(lc) -> dict[str, float]:
+    """Roofline terms of one lowered chunk (per device, whole chunk)."""
+    costs = hlo_analysis.analyze(lc.hlo)
+    return {"flops": float(costs.flops),
+            "bytes": float(costs.bytes),
+            "collective_bytes": float(costs.collective_bytes)}
+
+
+def load(path: Path | str = BUDGET_PATH) -> dict:
+    path = Path(path)
+    if not path.exists():
+        return {}
+    return json.loads(path.read_text())
+
+
+def save(measured: dict[str, dict[str, float]],
+         path: Path | str = BUDGET_PATH,
+         rtol: float = DEFAULT_RTOL) -> dict:
+    doc = {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "rtol": rtol,
+        "specs": {name: {k: round(v, 3) for k, v in m.items()}
+                  for name, m in sorted(measured.items())},
+    }
+    Path(path).write_text(json.dumps(doc, indent=1) + "\n")
+    return doc
+
+
+def environment_matches(doc: dict) -> bool:
+    return (doc.get("jax") == jax.__version__
+            and doc.get("backend") == jax.default_backend())
+
+
+def check(measured: dict[str, dict[str, float]],
+          doc: dict | None = None,
+          *,
+          strict: bool | None = None,
+          complete: bool = True) -> list[Finding]:
+    """Compare measured costs to the checked-in budgets.
+
+    ``strict=None`` enforces only when the budget file was generated on
+    this jax version + backend (compiler drift legitimately moves the
+    numbers); pass ``strict=True``/``False`` to force either mode.
+    """
+    doc = load() if doc is None else doc
+    if not doc:
+        return [Finding(name, "budget",
+                        "no budgets.json checked in (run audit --update)",
+                        "note")
+                for name in sorted(measured)]
+    if strict is None:
+        strict = environment_matches(doc)
+    severity = "error" if strict else "note"
+    rtol = float(doc.get("rtol", DEFAULT_RTOL))
+    budgets = doc.get("specs", {})
+    out: list[Finding] = []
+    if not strict:
+        out.append(Finding(
+            "*", "budget",
+            f"budgets generated on jax {doc.get('jax')}/"
+            f"{doc.get('backend')}, running jax {jax.__version__}/"
+            f"{jax.default_backend()}: drift reported but not enforced",
+            "note"))
+    for name in sorted(measured):
+        ref = budgets.get(name)
+        if ref is None:
+            out.append(Finding(name, "budget",
+                               "no budget entry (run audit --update)",
+                               severity))
+            continue
+        for metric in METRICS:
+            got, want = measured[name][metric], float(ref.get(metric, 0.0))
+            tol = rtol * max(abs(want), 1.0)
+            if abs(got - want) > tol:
+                out.append(Finding(
+                    name, "budget",
+                    f"{metric} drifted: measured {got:.6g}, budget "
+                    f"{want:.6g} (|delta| {abs(got - want):.6g} > "
+                    f"{rtol:.0%} band {tol:.6g})", severity))
+    stale = sorted(set(budgets) - set(measured)) if complete else []
+    if stale:
+        out.append(Finding("*", "budget",
+                           f"stale budget entries (cases gone): {stale}",
+                           "note"))
+    return out

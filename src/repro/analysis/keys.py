@@ -1,0 +1,360 @@
+"""AST lint for jax PRNG key discipline.
+
+The whole reproduction leans on one rng contract (``core.participation``
+round_masks, the fault draws, the cohort sampler, the driver's shard
+selection): *every* key is consumed exactly once -- you either ``split``
+it (consuming it, yielding fresh keys) or ``fold_in`` static data (a
+derivation that leaves the parent usable) -- and host ``numpy.random``
+never appears inside traced code, where it would bake one draw into the
+compiled program. PRs 1/6/7/8 each re-proved this by hand; this module
+is the static form.
+
+Rules (findings carry the rule name):
+
+* ``key-reuse`` -- a key expression is passed to a consuming
+  ``jax.random`` function (``split``, ``normal``, ``randint``, ...) after
+  already having been consumed on a reaching path in the same scope.
+  ``fold_in`` and the key constructors (``PRNGKey``/``key``/...) do not
+  consume; rebinding a name (``mkey, rng = split(rng)``) resets it.
+  Loop bodies are analyzed twice, so consuming a loop-invariant key
+  inside a ``for``/``while``/comprehension is caught as second-iteration
+  reuse.
+* ``host-random`` -- a ``numpy.random.*`` module-level call (the global
+  stream: ``np.random.normal`` etc.) inside a function that also touches
+  ``jax.numpy``/``jax.lax``. Explicit ``np.random.default_rng`` /
+  ``Generator`` objects are host-side by construction and fine.
+
+False-positive escape hatch: append ``# key-ok: <reason>`` to the
+flagged line. The audit CLI requires *zero unsuppressed findings* over
+``src/``, ``examples/`` and ``benchmarks/``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+SUPPRESS_MARK = "# key-ok"
+
+# jax.random.* that mint or derive keys without consuming the argument.
+KEY_CONSTRUCTORS = frozenset({
+    "PRNGKey", "key", "key_data", "wrap_key_data", "clone", "key_impl",
+})
+NON_CONSUMING = KEY_CONSTRUCTORS | {"fold_in"}
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyFinding:
+    path: str
+    line: int
+    rule: str  # "key-reuse" | "host-random"
+    message: str
+    suppressed: bool = False
+
+    def __str__(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}{tag}"
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """`a.b.c` -> "a.b.c" for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Aliases(ast.NodeVisitor):
+    """Module-level import aliases for jax / jax.random / numpy."""
+
+    def __init__(self):
+        self.jax: set[str] = set()
+        self.jax_random: set[str] = set()
+        self.numpy: set[str] = set()
+        self.direct: dict[str, str] = {}  # local name -> jax.random fn
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            name, bound = a.name, a.asname or a.name.split(".")[0]
+            if name == "jax":
+                self.jax.add(bound)
+            elif name == "jax.random":
+                # `import jax.random` binds "jax"; with asname it binds
+                # the submodule.
+                (self.jax_random if a.asname else self.jax).add(bound)
+            elif name == "numpy":
+                self.numpy.add(bound)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module == "jax":
+            for a in node.names:
+                if a.name == "random":
+                    self.jax_random.add(a.asname or a.name)
+        elif node.module == "jax.random":
+            for a in node.names:
+                self.direct[a.asname or a.name] = a.name
+        elif node.module == "numpy":
+            for a in node.names:
+                if a.name == "random":
+                    self.numpy.add(a.asname or "random")  # numpy.random alias
+
+    def random_fn(self, call: ast.Call) -> str | None:
+        """The jax.random function name this call invokes, if any."""
+        f = call.func
+        if isinstance(f, ast.Name):
+            return self.direct.get(f.id)
+        chain = _dotted(f)
+        if chain is None:
+            return None
+        parts = chain.split(".")
+        # jr.split -- jr aliases jax.random (import ... as / from jax import)
+        if len(parts) == 2 and parts[0] in self.jax_random:
+            return parts[1]
+        # jax.random.split -- any alias of the jax module
+        if len(parts) == 3 and parts[0] in self.jax and parts[1] == "random":
+            return parts[2]
+        return None
+
+    def host_random_fn(self, call: ast.Call) -> str | None:
+        chain = _dotted(call.func)
+        if chain is None:
+            return None
+        parts = chain.split(".")
+        if len(parts) == 3 and parts[0] in self.numpy and parts[1] == "random":
+            return parts[2]
+        return None
+
+
+class _ScopeLint:
+    """Consumed-key dataflow over one function (or module) body.
+
+    Branches fork the consumed set and merge by union; loop bodies run
+    twice so loop-carried reuse surfaces. Precision over soundness: a key
+    smuggled through a container or a helper call is not tracked -- the
+    goal is catching the overwhelmingly common direct-reuse shape, not
+    proving the program correct.
+    """
+
+    def __init__(self, lint: "KeyLint"):
+        self.lint = lint
+        self.consumed: dict[str, int] = {}  # key expr -> line consumed
+
+    # ---- dataflow ----------------------------------------------------
+    def _kill(self, target: ast.AST):
+        name = _dotted(target)
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._kill(elt)
+            return
+        if isinstance(target, ast.Starred):
+            self._kill(target.value)
+            return
+        if name is None:
+            return
+        prefix = name + "."
+        for k in [k for k in self.consumed
+                  if k == name or k.startswith(prefix)]:
+            del self.consumed[k]
+
+    def _consume(self, arg: ast.AST, fn: str, line: int):
+        expr = _dotted(arg)
+        if expr is None:
+            return  # fresh subexpression (split(...)[0], fold_in(...)...)
+        prev = self.consumed.get(expr)
+        if prev is not None:
+            self.lint._emit(line, "key-reuse",
+                            f"key `{expr}` consumed by jax.random.{fn} was "
+                            f"already consumed at line {prev}")
+        else:
+            self.consumed[expr] = line
+
+    # ---- statement walk ----------------------------------------------
+    def run(self, body: list[ast.stmt]):
+        for stmt in body:
+            self.stmt(stmt)
+
+    def stmt(self, node: ast.stmt):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                self.expr(dec)
+            self.lint._lint_scope(node.body)
+            return
+        if isinstance(node, ast.ClassDef):
+            self.lint._lint_scope(node.body)
+            return
+        if isinstance(node, (ast.If,)):
+            self.expr(node.test)
+            self._fork(node.body, node.orelse)
+            return
+        if isinstance(node, ast.Try):
+            branches = [node.body + node.orelse] + \
+                [h.body for h in node.handlers]
+            self._fork(*branches)
+            for stmt in node.finalbody:
+                self.stmt(stmt)
+            return
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            self.expr(node.iter)
+            self._loop([node.target], node.body)
+            for stmt in node.orelse:
+                self.stmt(stmt)
+            return
+        if isinstance(node, ast.While):
+            self.expr(node.test)
+            self._loop([], node.body)
+            for stmt in node.orelse:
+                self.stmt(stmt)
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                self.expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._kill(item.optional_vars)
+            self.run(node.body)
+            return
+        # plain statement: visit expressions, then apply kills
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.expr(child)
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                self._kill(t)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            self._kill(node.target)
+
+    def _fork(self, *branches: list[ast.stmt]):
+        base = dict(self.consumed)
+        merged: dict[str, int] = dict(base)
+        for body in branches:
+            self.consumed = dict(base)
+            self.run(body)
+            merged.update(self.consumed)
+        self.consumed = merged
+
+    def _loop(self, targets: list[ast.AST], body: list[ast.stmt]):
+        # Two passes: pass 2 sees pass 1's consumptions, so consuming a
+        # loop-invariant key flags as reuse -- while keys rebound by the
+        # loop target (``for k in keys``) reset every iteration. Findings
+        # dedup on (line, rule), so straight-line reuse inside the body
+        # does not double-report.
+        for _ in range(2):
+            for target in targets:
+                self._kill(target)
+            self.run(body)
+
+    # ---- expression walk ---------------------------------------------
+    def expr(self, node: ast.expr):
+        if isinstance(node, ast.Lambda):
+            # Separate scope; its body only runs when called, so key flow
+            # does not join this scope's.
+            self.lint._lint_scope([ast.Expr(value=node.body)])
+            return
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            self._comprehension(node)
+            return
+        if isinstance(node, ast.Call):
+            self._call(node)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.expr(child)
+            elif isinstance(child, ast.keyword):
+                self.expr(child.value)
+
+    def _comprehension(self, node):
+        for gen in node.generators:
+            self.expr(gen.iter)  # evaluated once, outside the loop
+        elts = ([node.key, node.value] if isinstance(node, ast.DictComp)
+                else [node.elt])
+        conds = [c for gen in node.generators for c in gen.ifs]
+        body = [ast.Expr(value=e) for e in elts + conds]
+        self._loop([gen.target for gen in node.generators], body)
+
+    def _call(self, node: ast.Call):
+        fn = self.lint.aliases.random_fn(node)
+        if fn is not None and fn not in NON_CONSUMING and node.args:
+            self._consume(node.args[0], fn, node.lineno)
+            return
+        host = self.lint.aliases.host_random_fn(node)
+        if host is not None and host not in ("default_rng", "Generator",
+                                             "SeedSequence", "RandomState"):
+            if self.lint.traced_scope:
+                self.lint._emit(
+                    node.lineno, "host-random",
+                    f"numpy.random.{host} (host global stream) inside a "
+                    "function that uses jax.numpy -- a traced call bakes "
+                    "one draw into the compiled program")
+
+
+class KeyLint:
+    """Lint one python source file; collect findings."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.aliases = _Aliases()
+        self.aliases.visit(self.tree)
+        self.findings: list[KeyFinding] = []
+        self._seen: set[tuple[int, str]] = set()
+        self.traced_scope = False
+        self._scope_stack: list[list[ast.stmt]] = []
+
+    def _emit(self, line: int, rule: str, message: str):
+        if (line, rule) in self._seen:
+            return
+        self._seen.add((line, rule))
+        text = self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        suppressed = SUPPRESS_MARK in text
+        self.findings.append(KeyFinding(self.path, line, rule, message,
+                                        suppressed))
+
+    def _scope_uses_jnp(self, body: list[ast.stmt]) -> bool:
+        markers = {"jnp", "lax"} | self.aliases.jax | self.aliases.jax_random
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                chain = _dotted(sub) if isinstance(sub, ast.Attribute) else None
+                if chain and chain.split(".")[0] in markers:
+                    return True
+        return False
+
+    def _lint_scope(self, body: list[ast.stmt]):
+        outer = self.traced_scope
+        self.traced_scope = self._scope_uses_jnp(body)
+        _ScopeLint(self).run(body)
+        self.traced_scope = outer
+
+    def run(self) -> list[KeyFinding]:
+        self._lint_scope(self.tree.body)
+        return self.findings
+
+
+def lint_source(source: str, path: str = "<string>") -> list[KeyFinding]:
+    return KeyLint(path, source).run()
+
+
+def lint_file(path: Path | str) -> list[KeyFinding]:
+    p = Path(path)
+    try:
+        return lint_source(p.read_text(), str(p))
+    except SyntaxError as e:
+        return [KeyFinding(str(p), e.lineno or 0, "parse-error", str(e))]
+
+
+def lint_paths(roots: list[Path | str]) -> list[KeyFinding]:
+    """Lint every ``.py`` under the given files/directories."""
+    out: list[KeyFinding] = []
+    for root in roots:
+        root = Path(root)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            out.extend(lint_file(f))
+    return out
+
+
+def unsuppressed(findings: list[KeyFinding]) -> list[KeyFinding]:
+    return [f for f in findings if not f.suppressed]

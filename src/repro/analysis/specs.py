@@ -1,0 +1,194 @@
+"""The representative spec matrix the static auditor lowers.
+
+One :class:`AuditCase` per load-bearing corner of the configuration
+space -- algorithms x {tree, flat} x {simulator, sharded, multilevel} x
+{sync, async} x {faults, population} -- each small enough that
+trace + lower + compile on CPU takes well under a second, because the
+auditor inspects *programs*, never runs them: shapes only matter insofar
+as they exercise distinct lowering paths (flat vs tree state, fused vs
+unfused kernels, padded async inner loops, screened aggregation, the
+M-level recursion).
+
+Fused cases pin an interpret-mode kernel dispatch off-TPU (the sharded
+backend via ``fused_mode="interpret"``; the simulator engine picks
+interpret itself) so the ``pallas_call`` fusion contract is auditable on
+the CPU CI container, where ``"auto"`` would fall back to the pure-jnp
+reference and lower zero kernels.
+
+Everything an audit pass needs is derived here with zero allocation:
+``abstract_params`` / ``Engine.abstract_state`` / ``abstract_data``
+produce ShapeDtypeStruct pytrees that flow through
+``Engine.lower_chunk`` untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import (
+    DefensePlan,
+    ExperimentSpec,
+    FaultPlan,
+    PackedBatches,
+    RoundSchedule,
+    build,
+)
+
+# Tiny but non-degenerate: every topology axis >= 2 so a transposed or
+# dropped axis cannot lower to the same program by coincidence.
+DIM = 6
+BATCH = 2
+SHARDS = 3
+CHUNK = 2
+
+
+def quad_loss(params, batch):
+    """0.5 * ||a * w - b||^2 -- the conformance-suite loss; one dense
+    param leaf keeps per-leaf kernel counts and cost budgets readable."""
+    r = batch["a"] * params["w"] - batch["b"]
+    return 0.5 * jnp.sum(r * r)
+
+
+def abstract_params(dim: int = DIM):
+    return {"w": jax.ShapeDtypeStruct((dim,), jnp.float32)}
+
+
+def abstract_data(engine, *, dim: int = DIM, batch: int = BATCH,
+                  shards: int = SHARDS) -> PackedBatches:
+    """Abstract :class:`PackedBatches` in this engine's driver layout.
+
+    Leaves are ``[*levels, S, steps, B, D]`` ShapeDtypeStructs with
+    ``steps = local_steps * microbatches`` -- exactly what the engine's
+    ``pack_arrays`` would upload, minus the upload.
+    """
+    spec = engine.spec
+    steps = engine._pack_steps * (engine._pack_microbatches or 1)
+    shape = tuple(spec.levels) + (shards, steps, batch, dim)
+
+    def leaf():
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    return PackedBatches(
+        {"a": leaf(), "b": leaf()},
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+        engine._pack_rounds,
+        engine._pack_steps,
+        engine._pack_microbatches,
+        topo_ndim=len(spec.levels),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditCase:
+    """One audited configuration.
+
+    name: stable identifier -- the key into ``analysis/budgets.json``.
+    spec: the :class:`ExperimentSpec` lowered through ``build``.
+    fast: included in the blocking ``audit --fast`` subset.
+    fused_leaves: expected ``pallas_call`` count per audited program when
+        ``spec.fusion == "fused"`` -- one per correction buffer the round
+        updates (1 for the single-dtype flat layout, one per param leaf
+        for tree). Unfused specs must lower to exactly zero.
+    """
+
+    name: str
+    spec: ExperimentSpec
+    fast: bool = True
+
+    @property
+    def fused_leaves(self) -> int:
+        if self.spec.fusion != "fused":
+            return 0
+        # Flat state packs all same-dtype leaves into one buffer; the
+        # quad-loss model is single-leaf f32 either way, so both layouts
+        # expect one kernel per round phase that touches z.
+        return 1
+
+    def build_engine(self, loss_fn=quad_loss):
+        return build(self.spec, loss_fn)
+
+
+def _spec(**kw) -> ExperimentSpec:
+    kw.setdefault("levels", (2, 3))
+    kw.setdefault("schedule", RoundSchedule(group_rounds=2, local_steps=2))
+    return ExperimentSpec(**kw).validate()
+
+
+def audit_cases(fast_only: bool = False) -> list[AuditCase]:
+    """The audited matrix; ``fast_only`` selects the blocking-CI subset."""
+    cases = [
+        # -- simulator backend: both layouts, fused and reference paths.
+        AuditCase("sim_mtgc_tree", _spec(
+            algorithm="mtgc", state_layout="tree")),
+        AuditCase("sim_mtgc_flat_fused", _spec(
+            algorithm="mtgc", state_layout="flat", fusion="fused")),
+        AuditCase("sim_hfedavg_flat", _spec(
+            algorithm="hfedavg", state_layout="flat")),
+        # -- sharded production round: fused flat (interpret off-TPU) and
+        #    the narrow-correction tree path.
+        AuditCase("sharded_mtgc_flat_fused", _spec(
+            algorithm="mtgc", backend="sharded", state_layout="flat",
+            fusion="fused", fused_mode="interpret",
+            schedule=RoundSchedule(group_rounds=2, local_steps=2,
+                                   microbatches=2))),
+        AuditCase("sharded_mtgc_tree_bf16", _spec(
+            algorithm="mtgc", backend="sharded", state_layout="tree",
+            correction_dtype="bfloat16",
+            schedule=RoundSchedule(group_rounds=2, local_steps=2,
+                                   microbatches=2))),
+        # -- M-level recursion (Appendix E), 3-level client-edge-cloud.
+        AuditCase("multilevel_mtgc_3level", _spec(
+            algorithm="mtgc", backend="multilevel", levels=(2, 2, 2),
+            state_layout="tree",
+            schedule=RoundSchedule(periods=(4, 2, 1)))),
+        # -- async group rounds: padded straggler loop + staleness merge.
+        AuditCase("sim_async_discount_flat", _spec(
+            algorithm="mtgc", state_layout="flat", staleness="discount",
+            schedule=RoundSchedule(group_rounds=(2, 1), local_steps=2))),
+        # -- fault injection + screened aggregation + HT weighting.
+        AuditCase("sim_faults_defended_flat", _spec(
+            algorithm="mtgc", state_layout="flat",
+            client_participation=0.7,
+            participation_weighting="inverse_prob",
+            faults=FaultPlan(crash_rate=0.1, timeout_rate=0.1,
+                             corrupt_rate=0.1, corrupt_kind="explode"),
+            defense=DefensePlan(screen_nonfinite=True, screen_norm=10.0))),
+        # -- virtual population: cohort-shaped buffers + stateless wrap.
+        AuditCase("sim_population_flat", _spec(
+            algorithm="mtgc", state_layout="flat", population=8,
+            cohort_size=3)),
+        AuditCase("sim_stateless_flat", _spec(
+            algorithm="mtgc", state_layout="flat", population=8,
+            client_state="stateless")),
+        # -- full-matrix extras (cheap, but redundant for the blocking
+        #    gate): remaining simulator algorithms.
+        AuditCase("sim_local_corr_tree", _spec(
+            algorithm="local_corr", state_layout="tree"), fast=False),
+        AuditCase("sim_group_corr_flat", _spec(
+            algorithm="group_corr", state_layout="flat"), fast=False),
+        AuditCase("sim_fedprox_flat", _spec(
+            algorithm="fedprox", state_layout="flat", prox_mu=0.1),
+            fast=False),
+        AuditCase("sim_feddyn_flat", _spec(
+            algorithm="feddyn", state_layout="flat", feddyn_alpha=0.1),
+            fast=False),
+        AuditCase("sharded_hfedavg_flat", _spec(
+            algorithm="hfedavg", backend="sharded", state_layout="flat",
+            schedule=RoundSchedule(group_rounds=2, local_steps=2,
+                                   microbatches=2)), fast=False),
+    ]
+    if fast_only:
+        cases = [c for c in cases if c.fast]
+    names = [c.name for c in cases]
+    assert len(names) == len(set(names)), "duplicate audit case names"
+    return cases
+
+
+def case_by_name(name: str) -> AuditCase:
+    for c in audit_cases():
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown audit case {name!r} "
+                   f"(see `python -m repro.launch.audit --list`)")

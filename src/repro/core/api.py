@@ -71,10 +71,12 @@ from repro.core.driver import (
     GuardReport,
     GuardSpec,
     Horizon,
+    LoweredChunk,
     PackedBatches,
     pack_client_shards,
     pack_lm_shards,
     run_rounds,
+    trace_chunk,
 )
 from repro.core.faults import DefensePlan, FAULT_KINDS, FaultPlan
 from repro.core.packer import as_tree
@@ -675,6 +677,44 @@ class _EngineBase:
             batch_size=batch_size, seq_len=seq_len, shards=shards,
             microbatches=self._pack_microbatches, rng=rng, key=key)
 
+    def abstract_state(self, params: PyTree) -> PyTree:
+        """ShapeDtypeStructs of this engine's round state, zero allocation.
+
+        ``params`` may itself be abstract -- ``init`` (and the flat-layout
+        packer behind it) is traced with ``jax.eval_shape``, so nothing is
+        materialized. The rng passed to ``init`` is a concrete throwaway
+        key: only its shape/dtype survive into the abstract state.
+        """
+        return jax.eval_shape(
+            lambda p: self.init(p, jax.random.PRNGKey(0)), params)
+
+    def lower_chunk(
+        self,
+        data: PackedBatches,
+        *,
+        params: PyTree | None = None,
+        state: PyTree | None = None,
+        chunk: int = 2,
+        eval_fn=None,
+        donate: bool = True,
+        compile: bool = True,
+    ) -> LoweredChunk:
+        """Trace + lower (+ compile) this engine's driver chunk, no execution.
+
+        The static-analysis front door (``repro.analysis`` and ``python -m
+        repro.launch.audit`` audit the lowered artifacts this returns).
+        ``data`` leaves may be ``jax.ShapeDtypeStruct``s with the packed
+        driver layout (``[*levels, S, steps, ...]`` plus the microbatch
+        axis on the sharded backend); pass either an abstract ``state`` or
+        the ``params`` to derive one from via :meth:`abstract_state`.
+        """
+        if state is None:
+            _require(params is not None,
+                     "lower_chunk needs `state` or `params` to trace over")
+            state = self.abstract_state(params)
+        return trace_chunk(self.round_fn, state, data, chunk,
+                           eval_fn=eval_fn, donate=donate, compile=compile)
+
     def retry_round_fn(self, retry: int):
         """Round function for guarded-horizon retry ``retry`` (>= 1).
 
@@ -1232,6 +1272,7 @@ __all__ = [
     "GuardSpec",
     "Horizon",
     "LAYOUTS",
+    "LoweredChunk",
     "MultiLevelEngine",
     "MultiLevelMetrics",
     "PackedBatches",

@@ -442,6 +442,73 @@ def _chunk_runner(round_fn: RoundFn, eval_fn, donate: bool):
     return runner
 
 
+class LoweredChunk(NamedTuple):
+    """Compiled-but-never-executed artifacts of one driver chunk.
+
+    What the static auditor (``repro.analysis``) inspects: the AOT trace
+    of the chunk runner over fully abstract inputs -- jaxpr for
+    primitive-level invariants (fusion contract, no host callbacks in
+    loop bodies), optimized HLO for donation aliases / f64 / cost
+    budgets, and the abstract in/out states for dtype contracts. Nothing
+    here ever touched device data beyond compilation.
+
+    traced / lowered / compiled: the ``jax.jit(...).trace -> lower ->
+        compile`` chain (``compiled`` is None when ``trace_chunk`` was
+        asked not to compile).
+    state: the abstract (ShapeDtypeStruct) input state the runner was
+        traced over; ``out_state`` is the matching output state.
+    data: the abstract :class:`PackedBatches` it was traced over.
+    donate: whether the state argument was donated.
+    """
+
+    traced: Any
+    lowered: Any
+    compiled: Any
+    state: PyTree
+    data: PackedBatches
+    donate: bool
+
+    @property
+    def jaxpr(self):
+        return self.traced.jaxpr
+
+    @property
+    def hlo(self) -> str:
+        """Optimized (post-layout, post-fusion) HLO text."""
+        return self.compiled.as_text()
+
+    @property
+    def out_state(self) -> PyTree:
+        """Abstract output state (run_chunk returns ``(state, rng, ...)``)."""
+        return self.traced.out_info[0]
+
+
+def trace_chunk(
+    round_fn: RoundFn,
+    state: PyTree,
+    data: PackedBatches,
+    chunk: int = 2,
+    *,
+    eval_fn: Callable[[PyTree, PyTree], PyTree] | None = None,
+    donate: bool = True,
+    compile: bool = True,
+) -> LoweredChunk:
+    """Trace + lower (+ compile) one ``chunk``-round dispatch, no execution.
+
+    ``state`` and ``data`` leaves may be ``jax.ShapeDtypeStruct``s (build
+    them with ``jax.eval_shape``); the AOT path never allocates them. Uses
+    the same cached runner as :func:`dispatch_chunk`, so a subsequent
+    identical trace must hit the jit tracing cache -- the retrace gate in
+    ``repro.analysis`` is built on exactly this property.
+    """
+    runner = _chunk_runner(round_fn, eval_fn, donate)
+    mask = jax.ShapeDtypeStruct((int(chunk),), jnp.bool_)
+    traced = runner.trace(state, data, mask)
+    lowered = traced.lower()
+    compiled = lowered.compile() if compile else None
+    return LoweredChunk(traced, lowered, compiled, state, data, bool(donate))
+
+
 def dispatch_chunk(
     round_fn: RoundFn,
     state: PyTree,

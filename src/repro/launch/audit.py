@@ -1,0 +1,187 @@
+"""Static program auditor: ``python -m repro.launch.audit``.
+
+Lowers every representative :class:`repro.api.ExperimentSpec` through
+``build(spec)`` + ``Engine.lower_chunk`` -- trace, lower, compile; never
+execute -- and gates four static properties (see ``repro.analysis``):
+
+1. invariants: donation aliases, no host sync in loop bodies, no f64,
+   ``correction_dtype`` end-to-end, the fused-kernel contract;
+2. rng key-discipline lint over ``src/``, ``examples/``, ``benchmarks/``;
+3. compiled-cost budgets vs ``analysis/budgets.json`` (FLOPs / HBM bytes
+   / collective bytes within a tolerance band);
+4. retrace detection: an identical abstract re-trace must hit the jit
+   tracing cache.
+
+Usage::
+
+    python -m repro.launch.audit --fast          # blocking-CI subset
+    python -m repro.launch.audit                 # full matrix
+    python -m repro.launch.audit --update        # regenerate budgets.json
+    python -m repro.launch.audit --report out.json
+    python -m repro.launch.audit --cases sim_mtgc_flat_fused --list
+
+Exit status is nonzero iff any unsuppressed error-severity finding
+remains. Budget drift is enforced only when ``budgets.json`` was
+generated on this jax version + backend (pass ``--strict-budgets`` to
+force enforcement anywhere).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def _lint_roots() -> list[Path]:
+    """src/repro plus the repo's examples/ and benchmarks/ when present
+    (absent in an installed-wheel context -- the audit notes, not fails)."""
+    import repro
+
+    # ``repro`` is a namespace package (no __init__.py): locate it by path.
+    pkg = Path(next(iter(repro.__path__))).resolve()
+    roots = [pkg]
+    repo = pkg.parent.parent
+    for name in ("examples", "benchmarks"):
+        d = repo / name
+        if d.is_dir():
+            roots.append(d)
+    return roots
+
+
+def run_audit(fast: bool = False, case_names: list[str] | None = None,
+              update: bool = False, strict_budgets: bool | None = None,
+              budget_path: Path | None = None, verbose: bool = True) -> dict:
+    """Run every pass; returns the report dict (see ``findings`` key)."""
+    import jax
+
+    from repro.analysis import budgets, invariants, keys
+    from repro.analysis.specs import (
+        abstract_data, abstract_params, audit_cases, case_by_name)
+
+    t0 = time.time()
+    if case_names:
+        cases = [case_by_name(n) for n in case_names]
+    else:
+        cases = audit_cases(fast_only=fast)
+
+    findings: list = []
+    measured: dict[str, dict[str, float]] = {}
+    programs: dict[str, dict] = {}
+    for case in cases:
+        if verbose:
+            print(f"[audit] lowering {case.name} ...", flush=True)
+        engine = case.build_engine()
+        params = abstract_params()
+        state = engine.abstract_state(params)
+        data = abstract_data(engine)
+        lc = engine.lower_chunk(data, state=state)
+        findings += invariants.run_invariants(case, lc)
+        findings += invariants.check_retrace(case.name, engine, state, data)
+        measured[case.name] = measure = budgets.measure(lc)
+        programs[case.name] = {
+            "pallas_calls": invariants.count_primitive(lc.jaxpr,
+                                                       "pallas_call"),
+            "donated_leaves": len(jax.tree.leaves(state)),
+            "aliased_params": sorted(invariants.aliased_parameters(lc.hlo)),
+            **measure,
+        }
+
+    # -- key-discipline lint over the source tree
+    roots = _lint_roots()
+    key_findings = keys.lint_paths(roots)
+    open_keys = keys.unsuppressed(key_findings)
+    for f in open_keys:
+        findings.append(invariants.Finding(
+            "keys", f.rule, f"{f.path}:{f.line}: {f.message}"))
+
+    # -- budgets: regenerate or drift-check
+    budget_path = budget_path or budgets.BUDGET_PATH
+    if update:
+        doc = budgets.save(measured, budget_path)
+        if verbose:
+            print(f"[audit] wrote {len(measured)} budgets -> {budget_path}")
+    else:
+        doc = budgets.load(budget_path)
+        findings += budgets.check(measured, doc, strict=strict_budgets,
+                                  complete=not (fast or case_names))
+
+    errors = [f for f in findings if f.severity == "error"]
+    notes = [f for f in findings if f.severity != "error"]
+    report = {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "mode": ("update" if update else "fast" if fast else "full"),
+        "cases": sorted(c.name for c in cases),
+        "programs": programs,
+        "lint": {
+            "roots": [str(r) for r in roots],
+            "files": len({f.path for f in key_findings}) or None,
+            "suppressed": [str(f) for f in key_findings if f.suppressed],
+        },
+        "errors": [str(f) for f in errors],
+        "notes": [str(f) for f in notes],
+        "elapsed_s": round(time.time() - t0, 2),
+        "ok": not errors,
+    }
+    return report
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.audit", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--fast", action="store_true",
+                    help="blocking-CI subset of the case matrix")
+    ap.add_argument("--cases", default=None,
+                    help="comma-separated case names (see --list)")
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate analysis/budgets.json from this run")
+    ap.add_argument("--strict-budgets", action="store_true",
+                    help="enforce budget drift even on a mismatched "
+                         "jax version/backend")
+    ap.add_argument("--budget-file", default=None,
+                    help="alternate budgets.json path (tests)")
+    ap.add_argument("--report", default=None,
+                    help="write the full JSON report here")
+    ap.add_argument("--list", action="store_true", dest="list_cases",
+                    help="list audit case names and exit")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_cases:
+        from repro.analysis.specs import audit_cases
+        for c in audit_cases():
+            print(f"{c.name:32s} fast={c.fast} backend={c.spec.backend} "
+                  f"layout={c.spec.state_layout} fusion={c.spec.fusion}")
+        return 0
+
+    if args.update and args.fast:
+        ap.error("--update needs the full matrix (drop --fast)")
+
+    report = run_audit(
+        fast=args.fast,
+        case_names=args.cases.split(",") if args.cases else None,
+        update=args.update,
+        strict_budgets=True if args.strict_budgets else None,
+        budget_path=Path(args.budget_file) if args.budget_file else None,
+        verbose=not args.quiet,
+    )
+    if args.report:
+        out = Path(args.report)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=1))
+    if not args.quiet:
+        for line in report["notes"]:
+            print(f"[audit] note: {line}")
+    for line in report["errors"]:
+        print(f"[audit] FAIL: {line}")
+    n_cases = len(report["cases"])
+    status = "ok" if report["ok"] else f"{len(report['errors'])} errors"
+    print(f"[audit] {n_cases} cases, {report['mode']} mode, "
+          f"{report['elapsed_s']}s: {status}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,7 +32,6 @@ Usage:
 """
 import argparse
 import json
-import re
 import time
 import traceback
 from pathlib import Path
@@ -42,47 +41,9 @@ PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # bytes/s / chip
 LINK_BW = 50e9           # bytes/s / link (ICI)
 
-COLLECTIVES = (
-    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-    "collective-permute",
-)
-
-_DT_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
-
-
-def _shape_bytes(tok_dtype: str, dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DT_BYTES.get(tok_dtype, 4)
-
-
-def collective_bytes(hlo_text: str) -> dict[str, int]:
-    """Sum operand bytes of every collective op in the partitioned module.
-
-    HLO lines look like ``%x = bf16[8,128] all-reduce(bf16[8,128] %y), ...``;
-    we take the operand shapes (right of the opcode). ``*-start`` variants
-    (async collectives) are counted; ``*-done`` are not (same transfer).
-    """
-    out = {c: 0 for c in COLLECTIVES}
-    for line in hlo_text.splitlines():
-        for c in COLLECTIVES:
-            m = re.search(rf" {c}(?:-start)?\(", line)
-            if not m:
-                continue
-            operands = line[m.end():]
-            b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(operands))
-            if b == 0:  # operand shapes elided: fall back to result shape
-                b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(line[: m.start()]))
-            out[c] += b
-            break
-    return out
+# Collective-byte / shape parsing lives in launch/hlo_analysis.py (the
+# trip-count-aware walker run_case already uses); the local duplicates
+# that predated it are gone.
 
 
 def _active_params(params_shape, num_experts: int, top_k: int):
@@ -139,9 +100,9 @@ def build_case(arch_id: str, shape_id: str, *, multi_pod: bool, overrides=None):
         G, K = axis_sizes["group"], axis_sizes["client"]
         batch_sds = train_specs(cfg, plan, multi_pod=multi_pod)
         state_sds = {
-            "params": sp._with_lead(params_sds, (G, K)),
-            "z": sp._with_lead(params_sds, (G, K)),
-            "y": sp._with_lead(params_sds, (G,)),
+            "params": sp.with_lead(params_sds, (G, K)),
+            "z": sp.with_lead(params_sds, (G, K)),
+            "y": sp.with_lead(params_sds, (G,)),
         }
         st_specs = sp.train_state_specs(params_sds, axis_sizes, cfg)
         from repro.launch.train import ShardedHFLState

@@ -37,6 +37,10 @@ _DT_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"\b([a-z][0-9a-z]*)\[([0-9,]*)\]")
+# dtype-shaped tokens missing from _DT_BYTES (new narrow float formats
+# etc.) fall back to 4 bytes/elem rather than silently costing zero.
+_DT_FALLBACK_RE = re.compile(r"^(?:[fsuc]|bf)[0-9]")
+_DT_FALLBACK_BYTES = 4
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{$")
 _NAME_RE = re.compile(r"%([\w.\-]+)")
@@ -196,8 +200,11 @@ def _shape_of(text: str):
     b = e = 0
     first_dims = None
     for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DT_BYTES:
-            continue
+        nbytes = _DT_BYTES.get(dt)
+        if nbytes is None:
+            if not _DT_FALLBACK_RE.match(dt):
+                continue  # not a dtype token (identifier-ish match)
+            nbytes = _DT_FALLBACK_BYTES
         dd = [int(d) for d in dims.split(",") if d]
         n = 1
         for d in dd:
@@ -205,7 +212,7 @@ def _shape_of(text: str):
         if first_dims is None:
             first_dims = dd
         e += n
-        b += n * _DT_BYTES[dt]
+        b += n * nbytes
     return b, e, (first_dims or [])
 
 

@@ -167,11 +167,20 @@ def param_spec_tree(
     return jax.tree_util.tree_map_with_path(f, params_shape)
 
 
-def _with_lead(params_shape: PyTree, lead_shape: tuple) -> PyTree:
+def with_lead(params_shape: PyTree, lead_shape: tuple) -> PyTree:
     """ShapeDtypeStructs with FL topology axes prepended (for eval_shape)."""
     return jax.tree.map(
         lambda s: jax.ShapeDtypeStruct(lead_shape + s.shape, s.dtype), params_shape
     )
+
+
+def _with_lead(params_shape: PyTree, lead_shape: tuple) -> PyTree:
+    """Deprecated alias of :func:`with_lead` (kept for old callers)."""
+    import warnings
+
+    warnings.warn("sharding.specs._with_lead is deprecated; use with_lead",
+                  DeprecationWarning, stacklevel=2)
+    return with_lead(params_shape, lead_shape)
 
 
 def train_state_specs(params_shape: PyTree, axis_sizes: dict,

@@ -32,6 +32,7 @@ EXPECTED_ALL = [
     "GuardSpec",
     "Horizon",
     "LAYOUTS",
+    "LoweredChunk",
     "MultiLevelEngine",
     "MultiLevelMetrics",
     "PackedBatches",

@@ -1,0 +1,243 @@
+"""The static program auditor (repro.analysis + repro.launch.audit).
+
+Every gate must be able to FAIL: each test seeds the violation the pass
+exists to catch (missing donation aliases, an unfused program under the
+fused contract, a doubled-E FLOPs blowout, f64 leakage, a host callback
+in a scanned body) and asserts the finding fires -- plus the clean-path
+assertions that the shipped matrix passes.
+"""
+import dataclasses
+import json
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import budgets, invariants, specs
+from repro.launch import audit
+
+
+@pytest.fixture(scope="module")
+def sim_case():
+    return specs.case_by_name("sim_mtgc_tree")
+
+
+@pytest.fixture(scope="module")
+def sim_lowered(sim_case):
+    engine = sim_case.build_engine()
+    params = specs.abstract_params()
+    state = engine.abstract_state(params)
+    data = specs.abstract_data(engine)
+    lc = engine.lower_chunk(data, state=state)
+    return engine, state, data, lc
+
+
+# ------------------------------------------------------------ artifacts
+
+
+def test_lower_chunk_is_abstract_and_complete(sim_lowered):
+    engine, state, data, lc = sim_lowered
+    # never executed: inputs stayed ShapeDtypeStructs
+    assert all(isinstance(x, jax.ShapeDtypeStruct)
+               for x in jax.tree.leaves(state))
+    assert lc.jaxpr.eqns
+    assert "HloModule" in lc.hlo
+    # the output state mirrors the input structure (scan carry contract)
+    assert (jax.tree.structure(lc.out_state) == jax.tree.structure(state))
+    for a, b in zip(jax.tree.leaves(lc.out_state), jax.tree.leaves(state)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_lowered_chunk_exported_on_api_surface():
+    from repro import api
+
+    assert "LoweredChunk" in api.__all__
+    assert hasattr(api.SimulatorEngine, "lower_chunk")
+
+
+# ------------------------------------------------------------- donation
+
+
+def test_donation_clean_and_tripped_by_missing_aliases(sim_lowered):
+    engine, state, data, lc = sim_lowered
+    assert invariants.check_donation("c", lc) == []
+
+    # Seed the violation: a runner that claims donation but whose
+    # compiled module carries no aliases (traced with donate=False).
+    undonated = engine.lower_chunk(data, state=state, donate=False)
+    broken = undonated._replace(donate=True)
+    found = invariants.check_donation("c", broken)
+    assert found and found[0].check == "donation"
+    assert found[0].severity == "error"
+    n_leaves = len(jax.tree.leaves(state))
+    assert f"{n_leaves}/{n_leaves}" in found[0].message
+
+    # donate=False is an audited *choice*, reported as a note, not a fail
+    noted = invariants.check_donation("c", undonated)
+    assert [f.severity for f in noted] == ["note"]
+
+
+# --------------------------------------------------------------- fusion
+
+
+def test_fusion_contract_both_directions(sim_lowered):
+    engine, state, data, lc = sim_lowered
+    # unfused spec: exactly zero pallas_call sites
+    assert invariants.check_fusion("c", lc, expected=0) == []
+    # the same unfused program audited under a fused contract trips
+    trip = invariants.check_fusion("c", lc, expected=1)
+    assert trip and "expected 1" in trip[0].message
+
+    fused = specs.case_by_name("sim_mtgc_flat_fused")
+    eng_f = fused.build_engine()
+    lc_f = eng_f.lower_chunk(specs.abstract_data(eng_f),
+                             params=specs.abstract_params())
+    assert fused.fused_leaves == 1
+    assert invariants.check_fusion("f", lc_f, fused.fused_leaves) == []
+    # and a fused program audited as unfused trips too
+    assert invariants.check_fusion("f", lc_f, expected=0)
+
+
+# ----------------------------------------------------- correction dtype
+
+
+def test_correction_dtype_honored_and_tripped():
+    case = specs.case_by_name("sharded_mtgc_tree_bf16")
+    engine = case.build_engine()
+    params = specs.abstract_params()
+    state = engine.abstract_state(params)
+    data = specs.abstract_data(engine)
+    lc = engine.lower_chunk(data, state=state)
+    assert invariants.check_correction_dtype("c", lc, case.spec) == []
+
+    # Seed the violation: a state whose z silently widened back to f32.
+    wide_z = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), state.z)
+    bad = lc._replace(state=state._replace(z=wide_z))
+    found = invariants.check_correction_dtype("c", bad, case.spec)
+    assert found and "float32" in found[0].message
+
+
+# ------------------------------------------------------ f64 / host-sync
+
+
+def _fake_lc(fn, *args, hlo="HloModule t"):
+    closed = jax.make_jaxpr(fn)(*args)
+    return types.SimpleNamespace(jaxpr=closed.jaxpr, hlo=hlo)
+
+
+def test_f64_check_trips_on_hlo_and_clean_otherwise(sim_lowered):
+    *_, lc = sim_lowered
+    assert invariants.check_no_f64("c", lc) == []
+    fake = _fake_lc(lambda x: x + 1.0, jnp.ones((2,)),
+                    hlo="ENTRY %m { %x = f64[4]{0} parameter(0) }")
+    found = invariants.check_no_f64("c", fake)
+    assert found and "f64" in found[0].message
+
+
+def test_host_sync_check_trips_inside_scan_only():
+    def noisy(x):
+        def body(c, _):
+            jax.debug.callback(lambda v: None, c)
+            return c + 1.0, None
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out
+
+    found = invariants.check_host_sync("c", _fake_lc(noisy, 0.0))
+    assert found and "loop body" in found[0].message
+
+    def quiet(x):
+        jax.debug.callback(lambda v: None, x)  # outside any loop: allowed
+        def body(c, _):
+            return c + 1.0, None
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out
+
+    assert invariants.check_host_sync("c", _fake_lc(quiet, 0.0)) == []
+
+
+# -------------------------------------------------------------- retrace
+
+
+def test_retrace_hits_cache(sim_lowered):
+    engine, state, data, _ = sim_lowered
+    assert invariants.check_retrace("c", engine, state, data) == []
+
+
+# -------------------------------------------------------------- budgets
+
+
+def test_budget_doubled_E_trips_flops(tmp_path):
+    case = specs.case_by_name("sim_mtgc_tree")
+    engine = case.build_engine()
+    lc = engine.lower_chunk(specs.abstract_data(engine),
+                            params=specs.abstract_params())
+    ref = budgets.measure(lc)
+    doc = budgets.save({case.name: ref}, tmp_path / "budgets.json")
+    assert budgets.check({case.name: ref}, doc, strict=True) == []
+
+    doubled = dataclasses.replace(
+        case.spec, schedule=dataclasses.replace(
+            case.spec.schedule,
+            group_rounds=2 * case.spec.schedule.group_rounds)).validate()
+    eng2 = specs.build(doubled, specs.quad_loss)
+    lc2 = eng2.lower_chunk(specs.abstract_data(eng2),
+                           params=specs.abstract_params())
+    drifted = budgets.measure(lc2)
+    assert drifted["flops"] > 1.5 * ref["flops"]
+    found = budgets.check({case.name: drifted}, doc, strict=True)
+    assert any(f.check == "budget" and "flops drifted" in f.message
+               for f in found)
+
+
+def test_budget_env_mismatch_degrades_to_notes():
+    doc = {"jax": "0.0.0", "backend": "nonesuch", "rtol": 0.2,
+           "specs": {"c": {"flops": 1.0, "bytes": 1.0,
+                           "collective_bytes": 0.0}}}
+    found = budgets.check(
+        {"c": {"flops": 100.0, "bytes": 100.0, "collective_bytes": 0.0}},
+        doc)
+    assert found and all(f.severity == "note" for f in found)
+    # forced strict still fails
+    forced = budgets.check(
+        {"c": {"flops": 100.0, "bytes": 100.0, "collective_bytes": 0.0}},
+        doc, strict=True)
+    assert any(f.severity == "error" for f in forced)
+
+
+def test_checked_in_budgets_cover_the_full_matrix():
+    doc = budgets.load()
+    assert doc, "analysis/budgets.json missing"
+    names = {c.name for c in specs.audit_cases()}
+    assert set(doc["specs"]) == names
+
+
+# ------------------------------------------------------------------ CLI
+
+
+def test_audit_cli_single_case_and_report(tmp_path):
+    report_path = tmp_path / "report.json"
+    rc = audit.main(["--cases", "sim_mtgc_tree", "-q",
+                     "--report", str(report_path)])
+    assert rc == 0
+    report = json.loads(report_path.read_text())
+    assert report["ok"] and report["cases"] == ["sim_mtgc_tree"]
+    prog = report["programs"]["sim_mtgc_tree"]
+    assert prog["pallas_calls"] == 0
+    assert prog["aliased_params"] == list(range(prog["donated_leaves"]))
+    assert prog["flops"] > 0
+
+
+def test_audit_cli_update_roundtrip(tmp_path):
+    path = tmp_path / "budgets.json"
+    rc = audit.main(["--cases", "sim_mtgc_tree", "-q", "--update",
+                     "--budget-file", str(path)])
+    assert rc == 0
+    rc = audit.main(["--cases", "sim_mtgc_tree", "-q", "--strict-budgets",
+                     "--budget-file", str(path)])
+    assert rc == 0
+
+
+def test_audit_cli_list():
+    assert audit.main(["--list"]) == 0

@@ -108,3 +108,114 @@ ENTRY %main (buf: f32[1024,128], upd: f32[1,128]) -> f32[1024,128] {
     res = H.analyze(hlo)
     # in-place: ~2x the update slice, NOT 2x the megabyte buffer
     assert res.bytes <= 4 * 1 * 128 * 4 + 16
+
+
+def test_async_collective_start_done_counted_once():
+    """Async all-reduce-start/-done pairs are one transfer, not two."""
+    hlo = """
+HloModule t
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[64,128]) -> f32[64,128] {
+  %x = f32[64,128] parameter(0)
+  %ars = f32[64,128] all-reduce-start(%x), replica_groups={}, to_apply=%sum
+  ROOT %ard = f32[64,128] all-reduce-done(%ars)
+}
+"""
+    res = H.analyze(hlo)
+    assert res.per_collective["all-reduce"] == 64 * 128 * 4
+    assert res.collective_bytes == 64 * 128 * 4
+
+
+def test_collective_elided_operand_falls_back_to_result_shape():
+    """Operands printed as bare %names that resolve nowhere (e.g. a
+    module sliced out of context) must fall back to the result shape
+    instead of counting zero bytes."""
+    hlo = """
+HloModule t
+
+ENTRY %main (x: f32[8]) -> f32[32,32] {
+  %x = f32[8] parameter(0)
+  ROOT %ar = f32[32,32] all-reduce(%ghost), replica_groups={}
+}
+"""
+    res = H.analyze(hlo)
+    assert res.per_collective["all-reduce"] == 32 * 32 * 4
+
+
+def test_unknown_dtype_bytes_fall_back_conservatively():
+    """A dtype token missing from the byte table (new narrow-float
+    formats) costs the 4-byte fallback, not zero."""
+    hlo = """
+HloModule t
+
+ENTRY %main (x: f8e8m0fnu[64]) -> f8e8m0fnu[64] {
+  %x = f8e8m0fnu[64] parameter(0)
+  ROOT %ar = f8e8m0fnu[64] all-reduce(f8e8m0fnu[64] %x), replica_groups={}
+}
+"""
+    res = H.analyze(hlo)
+    assert res.per_collective["all-reduce"] == 64 * H._DT_FALLBACK_BYTES
+
+
+def test_nested_while_trip_counts_multiply():
+    """Hand-written nested whiles: inner body runs outer*inner times."""
+    hlo = """
+HloModule t
+
+%inner_body (p: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %p = (s32[], f32[16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[16] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %nx = f32[16] add(%x, %x)
+  ROOT %t = (s32[], f32[16]) tuple(%ni, %nx)
+}
+
+%inner_cond (p: (s32[], f32[16])) -> pred[] {
+  %p = (s32[], f32[16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%outer_body (q: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %q = (s32[], f32[16]) parameter(0)
+  %j = s32[] get-tuple-element(%q), index=0
+  %y = f32[16] get-tuple-element(%q), index=1
+  %one = s32[] constant(1)
+  %nj = s32[] add(%j, %one)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16]) tuple(%zero, %y)
+  %w = (s32[], f32[16]) while(%init), condition=%inner_cond, body=%inner_body
+  %ny = f32[16] get-tuple-element(%w), index=1
+  ROOT %t = (s32[], f32[16]) tuple(%nj, %ny)
+}
+
+%outer_cond (q: (s32[], f32[16])) -> pred[] {
+  %q = (s32[], f32[16]) parameter(0)
+  %j = s32[] get-tuple-element(%q), index=0
+  %m = s32[] constant(3)
+  ROOT %lt = pred[] compare(%j, %m), direction=LT
+}
+
+ENTRY %main (x: f32[16]) -> f32[16] {
+  %x = f32[16] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16]) tuple(%zero, %x)
+  %w = (s32[], f32[16]) while(%init), condition=%outer_cond, body=%outer_body
+  ROOT %out = f32[16] get-tuple-element(%w), index=1
+}
+"""
+    res = H.analyze(hlo)
+    # inner f32[16] add executes 3 * 4 = 12 times; the counter adds and
+    # loop compares contribute 1 flop per execution on top.
+    inner_adds = 3 * 4 * 16
+    scalar_ops = 12 + 12 + 3 + 3  # inner iv add + inner cmp + outer iv + cmp
+    assert res.flops == inner_adds + scalar_ops

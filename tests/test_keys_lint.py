@@ -1,0 +1,213 @@
+"""The rng key-discipline linter (repro.analysis.keys).
+
+Positive cases prove the lint *can* fire (seeded violations); negative
+cases pin the blessed repo patterns (split-and-rebind, fold_in
+derivation, per-iteration rebinding) as clean; and the repo-wide gate
+asserts the tree the audit CLI lints lands at zero unsuppressed
+findings.
+"""
+from pathlib import Path
+
+import textwrap
+
+from repro.analysis import keys
+
+
+def lint(src: str):
+    return keys.lint_source(textwrap.dedent(src))
+
+
+def rules(findings):
+    return [f.rule for f in keys.unsuppressed(findings)]
+
+
+def test_straight_line_reuse_flagged():
+    out = lint("""
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key, (2,))
+            b = jax.random.uniform(key, (2,))
+            return a + b
+    """)
+    assert rules(out) == ["key-reuse"]
+    assert out[0].line == 6
+
+
+def test_split_and_rebind_clean():
+    out = lint("""
+        import jax
+
+        def f(rng):
+            k1, rng = jax.random.split(rng)
+            a = jax.random.normal(k1, (2,))
+            k2, rng = jax.random.split(rng)
+            return a + jax.random.normal(k2, (2,))
+    """)
+    assert rules(out) == []
+
+
+def test_split_then_reuse_parent_flagged():
+    out = lint("""
+        import jax
+
+        def f(rng):
+            k1, k2 = jax.random.split(rng)
+            return jax.random.normal(rng, (2,))
+    """)
+    assert rules(out) == ["key-reuse"]
+
+
+def test_fold_in_derivation_clean():
+    out = lint("""
+        import jax
+
+        def f(key):
+            draws = []
+            for i in range(4):
+                draws.append(jax.random.normal(jax.random.fold_in(key, i), (2,)))
+            return draws
+    """)
+    assert rules(out) == []
+
+
+def test_loop_invariant_consumption_flagged():
+    out = lint("""
+        import jax
+
+        def f(key):
+            out = []
+            for _ in range(4):
+                out.append(jax.random.normal(key, (2,)))
+            return out
+    """)
+    assert rules(out) == ["key-reuse"]
+
+
+def test_loop_rebinding_clean():
+    out = lint("""
+        import jax
+
+        def f(seeds):
+            out = []
+            for s in seeds:
+                key = jax.random.PRNGKey(s)
+                out.append(jax.random.normal(key, (2,)))
+            return out
+    """)
+    assert rules(out) == []
+
+
+def test_comprehension_target_rebinds_clean():
+    out = lint("""
+        import jax
+
+        def f(key, n):
+            return [jax.random.normal(k, (2,)) for k in jax.random.split(key, n)]
+    """)
+    assert rules(out) == []
+
+
+def test_comprehension_invariant_key_flagged():
+    out = lint("""
+        import jax
+
+        def f(key, n):
+            return [jax.random.normal(key, (2,)) for _ in range(n)]
+    """)
+    assert rules(out) == ["key-reuse"]
+
+
+def test_exclusive_branches_clean_but_join_reuse_flagged():
+    out = lint("""
+        import jax
+
+        def f(key, flag):
+            if flag:
+                x = jax.random.normal(key, (2,))
+            else:
+                x = jax.random.uniform(key, (2,))
+            return x + jax.random.normal(key, (2,))
+    """)
+    assert rules(out) == ["key-reuse"]
+    assert out[0].line == 9  # the post-join use, not either branch
+
+
+def test_attribute_keys_tracked_and_rebinding_resets():
+    out = lint("""
+        import jax
+
+        def f(state):
+            mkey, rng = jax.random.split(state.rng)
+            state = state._replace(rng=rng)
+            k2, rng = jax.random.split(state.rng)
+            return mkey, k2
+    """)
+    assert rules(out) == []
+
+
+def test_alias_forms_resolve():
+    out = lint("""
+        import jax.random as jr
+        from jax import random
+        from jax.random import normal
+
+        def f(key):
+            a = jr.uniform(key, (2,))
+            b = random.normal(key, (2,))
+            c = normal(key, (2,))
+            return a + b + c
+    """)
+    assert rules(out) == ["key-reuse", "key-reuse"]
+
+
+def test_suppression_comment():
+    out = lint("""
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key, (2,))
+            b = jax.random.normal(key, (2,))  # key-ok: intentional replay
+            return a + b
+    """)
+    assert [f.rule for f in out] == ["key-reuse"]
+    assert out[0].suppressed
+    assert keys.unsuppressed(out) == []
+
+
+def test_host_random_inside_traced_function_flagged():
+    out = lint("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def loss(params, batch):
+            noise = np.random.normal(size=(2,))
+            return jnp.sum(params * batch) + noise.sum()
+    """)
+    assert rules(out) == ["host-random"]
+
+
+def test_host_random_generator_and_pure_host_scope_clean():
+    out = lint("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def traced(params):
+            rng = np.random.default_rng(0)
+            return jnp.sum(params) + rng.normal()
+
+        def host_only(n):
+            return np.random.normal(size=(n,))
+    """)
+    assert rules(out) == []
+
+
+def test_repo_tree_has_zero_unsuppressed_findings():
+    """The gate the audit CLI enforces, as a plain tier-1 test: src/,
+    examples/ and benchmarks/ are clean (or explicitly `# key-ok`d)."""
+    root = Path(__file__).resolve().parents[1]
+    roots = [root / "src" / "repro"]
+    roots += [d for d in (root / "examples", root / "benchmarks")
+              if d.is_dir()]
+    findings = keys.unsuppressed(keys.lint_paths(roots))
+    assert findings == [], "\n".join(str(f) for f in findings)
