@@ -1,0 +1,182 @@
+"""Compression benchmark: wire savings + error-feedback necessity.
+
+The claims behind ``core.compression`` (ISSUE 10), measured on the
+state-heavy ``[G, K, n]`` flat quadratic from ``bench_faults`` (shared
+optimum ``w* ~= 1.5`` with a small noise floor, heterogeneous per-client
+coefficients so the corrections work):
+
+1. **int8 + EF is free accuracy-wise** (claim ``int8_ef_loss_ok``):
+   stochastic-rounding int8 uploads on both links with per-link error
+   feedback end within ``LOSS_GAP`` (2%) of the uncompressed final loss.
+2. **...at a real wire discount** (claim ``int8_bytes_ratio_ok``): the
+   *measured* ``comm_bytes`` metric (not the analytic model) shrinks by
+   at least ``BYTES_RATIO`` (3.5x) per round vs the uncompressed run.
+3. **Error feedback is load-bearing** (claim ``ef_off_worse``): the same
+   top-k plan with ``error_feedback=False`` ends at least
+   ``EF_WORSE_FACTOR``x worse than with EF on -- biased sparsification
+   needs the residual memory; int8 stochastic rounding is unbiased, so
+   top-k is the ablation that isolates EF.
+
+Results land in ``benchmarks/results/BENCH_comm.json`` (uploaded by the
+non-blocking CI bench job).
+
+    PYTHONPATH=src python -m benchmarks.bench_compression --quick
+    PYTHONPATH=src python -m benchmarks.bench_compression --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core import PackedBatches
+
+RESULTS = Path(__file__).parent / "results"
+LOSS_GAP = 0.02
+BYTES_RATIO = 3.5
+EF_WORSE_FACTOR = 1.2
+TOPK_FRAC = 0.25
+
+
+def build_problem(G: int = 4, K: int = 16, n: int = 20_000, E: int = 2,
+                  H: int = 8, shards: int = 4, seed: int = 0,
+                  compression: api.CompressionPlan | None = None):
+    """(engine, params0, data) for one compression scenario.
+
+    Same problem family as ``bench_faults.build_problem`` -- scalar-
+    coefficient sum-loss quadratic on a flat ``[G, K, n]`` state with a
+    shared optimum (``b = 1.5 a + noise``) -- except for a fixed
+    per-coordinate curvature ``c``: without it every coordinate of ``w``
+    evolves identically (the batch coefficients broadcast one scalar over
+    ``n``), uploads are constant rows, and top-k's keep-ties rule keeps
+    *everything* -- compression would be a no-op. With ``c`` spread over
+    ``[0.5, 1.5]`` the per-coordinate deltas differ, so sparsification
+    actually drops mass and the EF ablation has something to recover. All
+    scenarios share the data and init rng; only the plan differs.
+    """
+    c = jnp.linspace(0.5, 1.5, n, dtype=jnp.float32)
+
+    def loss_fn(p, batch):
+        return 0.5 * jnp.sum((batch["a"] * c * p["w"] - batch["b"]) ** 2)
+
+    spec = api.ExperimentSpec(
+        levels=(G, K),
+        schedule=api.RoundSchedule(group_rounds=E, local_steps=H),
+        algorithm="mtgc", lr=0.1, backend="simulator", state_layout="flat",
+        compression=compression)
+    engine = api.build(spec, loss_fn)
+    rng = np.random.default_rng(seed)
+    steps = E * H
+    a = rng.normal(size=(G, K, shards, steps, 1)) * 0.3 + 1.0
+    b = 1.5 * a + 0.05 * rng.normal(size=a.shape)
+    arrays = {"a": jnp.asarray(a, jnp.float32),
+              "b": jnp.asarray(b, jnp.float32)}
+    data = PackedBatches(arrays, jax.random.PRNGKey(seed + 1), E, H, None)
+    params0 = {"w": jnp.zeros((n,), jnp.float32)}
+    return engine, params0, data
+
+
+def _run(scenario: str, T: int, chunk: int, *,
+         compression: api.CompressionPlan | None = None,
+         **problem_kw) -> dict:
+    engine, params0, data = build_problem(compression=compression,
+                                          **problem_kw)
+    state, hz = api.fit(engine, data, T, params=params0,
+                        rng=jax.random.PRNGKey(7), chunk=chunk)
+    loss = np.asarray(hz.metrics.loss, dtype=np.float64)
+    comm = np.asarray(hz.metrics.comm_bytes, dtype=np.float64).reshape(-1)
+    return {
+        "scenario": scenario,
+        "initial_loss": float(np.mean(loss[0])),
+        "final_loss": float(np.mean(loss[-1])),
+        "bytes_per_round": float(np.mean(comm)),
+        "total_bytes": float(np.sum(comm)),
+    }
+
+
+def bench(G: int = 4, K: int = 16, n: int = 20_000, T: int = 12,
+          chunk: int = 4) -> dict:
+    kw = dict(G=G, K=K, n=n)
+    print(f"[bench_compression] backend={jax.default_backend()} G={G} "
+          f"K={K} n={n} T={T} chunk={chunk}")
+
+    int8 = api.CompressionPlan(client_mode="int8_stochastic",
+                               group_mode="int8_stochastic")
+    topk = api.CompressionPlan(client_mode="topk", group_mode="topk",
+                               topk_frac=TOPK_FRAC)
+    runs = {
+        "uncompressed": _run("uncompressed", T, chunk, **kw),
+        "int8_ef": _run("int8_ef", T, chunk, compression=int8, **kw),
+        "int8_noef": _run("int8_noef", T, chunk, **kw, compression=(
+            api.CompressionPlan(client_mode="int8_stochastic",
+                                group_mode="int8_stochastic",
+                                error_feedback=False))),
+        "topk_ef": _run("topk_ef", T, chunk, compression=topk, **kw),
+        "topk_noef": _run("topk_noef", T, chunk, **kw, compression=(
+            api.CompressionPlan(client_mode="topk", group_mode="topk",
+                                topk_frac=TOPK_FRAC,
+                                error_feedback=False))),
+    }
+    for name, r in runs.items():
+        print(f"  {name:14s} loss {r['initial_loss']:10.3e} -> "
+              f"{r['final_loss']:10.3e}  "
+              f"{r['bytes_per_round'] / 1e6:8.3f} MB/round")
+
+    base = runs["uncompressed"]
+    rel_gap = (runs["int8_ef"]["final_loss"] - base["final_loss"]) \
+        / max(base["final_loss"], 1e-12)
+    bytes_ratio = base["bytes_per_round"] \
+        / max(runs["int8_ef"]["bytes_per_round"], 1.0)
+    ef_factor = runs["topk_noef"]["final_loss"] \
+        / max(runs["topk_ef"]["final_loss"], 1e-12)
+    claims = {
+        "int8_ef_loss_ok": rel_gap <= LOSS_GAP,
+        "int8_bytes_ratio_ok": bytes_ratio >= BYTES_RATIO,
+        "ef_off_worse": ef_factor >= EF_WORSE_FACTOR,
+    }
+    print(f"[bench_compression] int8+EF rel loss gap {rel_gap:+.4f} "
+          f"(target <= {LOSS_GAP}), bytes ratio {bytes_ratio:.2f}x "
+          f"(target >= {BYTES_RATIO}), EF-off worse {ef_factor:.2f}x "
+          f"(target >= {EF_WORSE_FACTOR})")
+
+    out = {
+        "backend": jax.default_backend(),
+        "config": {"G": G, "K": K, "n": n, "T": T, "chunk": chunk,
+                   "topk_frac": TOPK_FRAC},
+        "runs": runs,
+        "int8_ef_rel_loss_gap": rel_gap,
+        "int8_bytes_ratio": bytes_ratio,
+        "ef_off_factor": ef_factor,
+        "targets": {"loss_gap": LOSS_GAP, "bytes_ratio": BYTES_RATIO,
+                    "ef_worse_factor": EF_WORSE_FACTOR},
+        "claims": claims,
+        "all_claims_ok": all(claims.values()),
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / "BENCH_comm.json"
+    path.write_text(json.dumps(out, indent=2))
+    print(f"[bench_compression] claims "
+          f"{'all OK' if out['all_claims_ok'] else 'FAILED: ' + str(claims)} "
+          f"-> {path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    group = ap.add_mutually_exclusive_group()
+    group.add_argument("--quick", action="store_true", default=True,
+                       help="CI-sized config (default)")
+    group.add_argument("--full", action="store_true",
+                       help="bigger state, longer horizon")
+    args = ap.parse_args()
+    if args.full:
+        out = bench(n=100_000, T=24)
+    else:
+        out = bench()
+    if not out["all_claims_ok"]:
+        raise SystemExit("compression claims FAILED")

@@ -69,8 +69,12 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
                   group_participation: float = 1.0,
                   participation_mode: str = "uniform",
                   participation_weighting: str = "none",
+                  compression=None,
                   chunk: int | None = None):
-    """Train one algorithm; returns dict(acc=[...], loss=[...], rounds=[...]).
+    """Train one algorithm; returns dict(acc=[...], loss=[...], rounds=[...],
+    comm_bytes=[...]) -- ``comm_bytes`` is the engine-measured upload bytes
+    per round (every round, not just eval rounds), so cost axes come from
+    the wire model, not hand-written per-algorithm multiples.
 
     Construction goes through the unified front door (``repro.api``): one
     ``ExperimentSpec`` declares the experiment, ``build``/``fit`` compose
@@ -109,7 +113,8 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
         client_participation=client_participation,
         group_participation=group_participation,
         participation_mode=participation_mode,
-        participation_weighting=participation_weighting)
+        participation_weighting=participation_weighting,
+        compression=compression)
     engine = build(spec, loss_fn)
     data = engine.pack_arrays({"x": train.x, "y": train.y}, idx,
                               batch_size=setup.batch, shards=setup.shards,
@@ -134,9 +139,11 @@ def run_algorithm(setup: BenchSetup, algorithm: str, *, eval_every: int = 1,
                     chunk=chunk or setup.chunk,
                     eval_every=eval_every, eval_fn=eval_fn)
     loss_t = np.asarray(hz.metrics.loss).reshape(rounds, -1).mean(axis=1)
+    comm_t = np.asarray(hz.metrics.comm_bytes, dtype=np.float64).reshape(-1)
     return {"round": [int(r) for r in hz.eval_rounds],
             "acc": [float(a) for a in hz.evals["acc"]],
-            "loss": [float(loss_t[r - 1]) for r in hz.eval_rounds]}
+            "loss": [float(loss_t[r - 1]) for r in hz.eval_rounds],
+            "comm_bytes": [float(b) for b in comm_t]}
 
 
 def rounds_to_accuracy(hist: dict, target: float) -> float:

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import (
+    CompressionPlan,
     DefensePlan,
     ExperimentSpec,
     FaultPlan,
@@ -90,7 +91,11 @@ class AuditCase:
     fused_leaves: expected ``pallas_call`` count per audited program when
         ``spec.fusion == "fused"`` -- one per correction buffer the round
         updates (1 for the single-dtype flat layout, one per param leaf
-        for tree). Unfused specs must lower to exactly zero.
+        for tree), plus one per compressed upload link that is
+        kernel-backed (``int8_stochastic`` / ``topk``; ``bf16`` is a
+        pure cast and lowers no kernel). Unfused specs must lower to
+        exactly zero -- including compressed ones, whose round trips
+        then route through the jnp reference.
     """
 
     name: str
@@ -104,7 +109,12 @@ class AuditCase:
         # Flat state packs all same-dtype leaves into one buffer; the
         # quad-loss model is single-leaf f32 either way, so both layouts
         # expect one kernel per round phase that touches z.
-        return 1
+        n = 1
+        comp = self.spec.compression
+        if comp is not None:
+            n += sum(1 for mode in (comp.client_mode, comp.group_mode)
+                     if mode in ("int8_stochastic", "topk"))
+        return n
 
     def build_engine(self, loss_fn=quad_loss):
         return build(self.spec, loss_fn)
@@ -155,6 +165,20 @@ def audit_cases(fast_only: bool = False) -> list[AuditCase]:
             faults=FaultPlan(crash_rate=0.1, timeout_rate=0.1,
                              corrupt_rate=0.1, corrupt_kind="explode"),
             defense=DefensePlan(screen_nonfinite=True, screen_norm=10.0))),
+        # -- compressed uploads: kernel-backed quantize/top-k round trips
+        #    at both links ride the fused dispatch (1 MTGC + 2 link
+        #    kernels expected), plus the modeled comm-budget shrink gate.
+        AuditCase("sim_compressed_int8_flat", _spec(
+            algorithm="mtgc", state_layout="flat", fusion="fused",
+            compression=CompressionPlan(client_mode="int8_stochastic",
+                                        group_mode="int8_stochastic"))),
+        AuditCase("sharded_compressed_topk_tree", _spec(
+            algorithm="mtgc", backend="sharded", state_layout="tree",
+            fusion="fused", fused_mode="interpret",
+            compression=CompressionPlan(client_mode="topk",
+                                        group_mode="bf16", topk_frac=0.1),
+            schedule=RoundSchedule(group_rounds=2, local_steps=2,
+                                   microbatches=2)), fast=False),
         # -- virtual population: cohort-shaped buffers + stateless wrap.
         AuditCase("sim_population_flat", _spec(
             algorithm="mtgc", state_layout="flat", population=8,

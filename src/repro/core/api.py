@@ -78,6 +78,7 @@ from repro.core.driver import (
     run_rounds,
     trace_chunk,
 )
+from repro.core.compression import COMPRESSION_MODES, CompressionPlan
 from repro.core.faults import DefensePlan, FAULT_KINDS, FaultPlan
 from repro.core.packer import as_tree
 from repro.core.population import (
@@ -280,6 +281,14 @@ class ExperimentSpec:
         optional norm clipping) applied at the upload boundary; screened
         contributions never enter aggregates or the z/y corrections, and
         the per-round ``screened`` metric counts them.
+    compression: a :class:`~repro.core.compression.CompressionPlan` --
+        per-link quantized/sparsified uploads (client->group and
+        group->global independently: bf16 | int8_stochastic | topk) with
+        optional error-feedback residuals carried in the state, applied
+        at the same upload boundary the faults/defense use (compress ->
+        corrupt -> screen). Every engine reports the modeled per-round
+        ``comm_bytes`` metric whether or not a plan is set. Two-level
+        simulator/sharded backends, sync schedules only.
     """
 
     levels: tuple[int, ...] = (2, 2)
@@ -307,6 +316,7 @@ class ExperimentSpec:
     client_state: str = "stateful"
     faults: FaultPlan | None = None
     defense: DefensePlan | None = None
+    compression: CompressionPlan | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "levels", tuple(int(n) for n in self.levels))
@@ -478,6 +488,40 @@ class ExperimentSpec:
             _require(self.server_lr == 1.0,
                      "fault injection / screened aggregation require "
                      "server_lr=1.0")
+
+        # Compressed uploads: contradictory combos are rejected up front.
+        if self.compression is not None:
+            self.compression.validate()
+        if self.compressed:
+            _require(self.backend != "multilevel",
+                     "compressed uploads are a two-level feature (simulator "
+                     "and sharded backends); per-level plans for the "
+                     "multilevel backend are follow-up work")
+            _require(self.staleness == "sync" and self.schedule.is_uniform,
+                     "compressed uploads under an async schedule are not "
+                     "supported yet: stale reports would need their own "
+                     "residual timeline (see ROADMAP)")
+            _require(self.correction_init == "zero",
+                     "compressed uploads require correction_init='zero' "
+                     "(the gradient init predates the upload seam)")
+            _require(self.server_lr == 1.0,
+                     "compressed uploads require server_lr=1.0")
+            if self.compression.error_feedback:
+                _require(self.client_state == "stateful",
+                         "error feedback is per-client persistent state; "
+                         "client_state='stateless' contradicts it -- set "
+                         "CompressionPlan(error_feedback=False)")
+                _require(self.population is None,
+                         "error feedback with a virtual population is "
+                         "follow-up work: per-client residuals would need "
+                         "store-side gather/scatter like z; set "
+                         "CompressionPlan(error_feedback=False)")
+            else:
+                _require(self.population is None
+                         or self.compression.client_mode == "none",
+                         "client-link compression with a virtual population "
+                         "is follow-up work (the cohort seam predates the "
+                         "upload seam)")
         return self
 
     # ------------------------------------------------- config conversion
@@ -498,6 +542,11 @@ class ExperimentSpec:
     def defended(self) -> bool:
         """True when screened aggregation is active."""
         return self.defense is not None and self.defense.enabled
+
+    @property
+    def compressed(self) -> bool:
+        """True when any upload link carries a non-trivial compressor."""
+        return self.compression is not None and self.compression.enabled
 
     @property
     def virtual_population(self) -> bool:
@@ -785,13 +834,17 @@ class SimulatorEngine(_EngineBase):
         return _engine._build_global_round(self.loss_fn, self._cfg,
                                            plan=self._plan,
                                            faults=self.spec.faults,
-                                           defense=self.spec.defense)
+                                           defense=self.spec.defense,
+                                           compression=self.spec.compression)
 
     def init(self, params: PyTree, rng: jax.Array | None = None) -> PyTree:
         from repro.core.engine import hfl_init
         spec = self.spec
-        if rng is None and spec.fault_mode:
-            # Fault masks draw from the state rng stream.
+        comp = spec.compression if spec.compressed else None
+        if rng is None and (spec.fault_mode
+                            or (comp is not None and comp.stochastic)):
+            # Fault masks -- and stochastic rounding noise -- draw from
+            # the state rng stream.
             rng = jax.random.PRNGKey(0)
         snaps = self._plan is not None and self._plan.needs_snapshots
         # The download-freshness carry only exists where it is consumed:
@@ -799,7 +852,9 @@ class SimulatorEngine(_EngineBase):
         dl = (spec.fault_mode and spec.faults.timeout_rate > 0
               and self._plan is not None)
         return hfl_init(params, self._cfg, rng, staleness_snapshots=snaps,
-                        fault_download=dl)
+                        fault_download=dl,
+                        ef_client=comp is not None and comp.ef_client,
+                        ef_group=comp is not None and comp.ef_group)
 
     def global_model(self, state: PyTree) -> PyTree:
         from repro.core.engine import global_model
@@ -887,7 +942,8 @@ class ShardedEngine(_EngineBase):
             group_participation=spec.group_participation,
             participation_mode=spec.participation_mode,
             participation_weighting=spec.participation_weighting,
-            plan=self._plan, faults=spec.faults, defense=spec.defense)
+            plan=self._plan, faults=spec.faults, defense=spec.defense,
+            compression=spec.compression)
 
     @property
     def _pack_microbatches(self) -> int:
@@ -896,12 +952,15 @@ class ShardedEngine(_EngineBase):
     def init(self, params: PyTree, rng: jax.Array | None = None) -> PyTree:
         from repro.launch.train import sharded_init
         G, K = self.spec.levels
+        comp = self.spec.compression if self.spec.compressed else None
         if rng is None and (not self.spec.full_participation
                             or self.spec.virtual_population
-                            or self.spec.fault_mode):
-            # Virtual populations draw their cohorts -- and fault plans
-            # their masks -- from the state rng even under (mandatory)
-            # full in-round participation.
+                            or self.spec.fault_mode
+                            or (comp is not None and comp.stochastic)):
+            # Virtual populations draw their cohorts -- fault plans their
+            # masks, stochastic compressors their rounding noise -- from
+            # the state rng even under (mandatory) full in-round
+            # participation.
             rng = jax.random.PRNGKey(0)
         dtype = (None if self.spec.correction_dtype is None
                  else jnp.dtype(self.spec.correction_dtype))
@@ -914,7 +973,9 @@ class ShardedEngine(_EngineBase):
             correction_dtype=dtype, rng=rng,
             round_counter=plan is not None and plan.needs_round_counter,
             staleness_snapshots=plan is not None and plan.needs_snapshots,
-            fault_download=dl)
+            fault_download=dl,
+            ef_client=comp is not None and comp.ef_client,
+            ef_group=comp is not None and comp.ef_group)
 
     def global_model(self, state: PyTree) -> PyTree:
         # Under async schedules only a cadence-1 group holds the fresh
@@ -1172,12 +1233,24 @@ CLI_FLAGS: tuple[CliFlag, ...] = (
     CliFlag("defense.screen_nonfinite", "--screen-nonfinite",
             "screen out non-finite client uploads (1, the plan default; "
             "0 disables)", type=int, optional=True),
+    CliFlag("compression.client_mode", "--compress-client",
+            "client->group upload compressor",
+            choices=COMPRESSION_MODES, optional=True),
+    CliFlag("compression.group_mode", "--compress-group",
+            "group->global upload compressor",
+            choices=COMPRESSION_MODES, optional=True),
+    CliFlag("compression.error_feedback", "--error-feedback",
+            "carry per-link error-feedback residuals (1, the plan "
+            "default; 0 disables)", type=int, optional=True),
+    CliFlag("compression.topk_frac", "--topk-frac",
+            "fraction of entries a topk link keeps per upload",
+            type=float, optional=True),
 )
 
 #: Constructors for the nested spec fields CLI rows may target with a
 #: dotted ``field`` -- used when the spec default for that field is None.
 _NESTED_FIELDS = {"schedule": RoundSchedule, "faults": FaultPlan,
-                  "defense": DefensePlan}
+                  "defense": DefensePlan, "compression": CompressionPlan}
 
 
 def _spec_get(spec: ExperimentSpec, field: str):
@@ -1261,7 +1334,9 @@ __all__ = [
     "BACKEND_ALGORITHMS",
     "CLIENT_STATES",
     "CLI_FLAGS",
+    "COMPRESSION_MODES",
     "CliFlag",
+    "CompressionPlan",
     "DefensePlan",
     "Engine",
     "ExperimentSpec",

@@ -1,0 +1,208 @@
+"""Compressed hierarchical uploads: per-link quantization/sparsification
+plans, error-feedback residuals, and bytes-on-the-wire accounting.
+
+In a client-edge-cloud deployment the binding constraint is upload
+bandwidth at each aggregation level, not FLOPs. This module makes the
+two upload links first-class compression boundaries:
+
+* **client -> group**: each active client uploads its local-phase delta
+  ``x_end - x_start`` once per group round (E times per global round);
+* **group -> global**: each reporting group uploads its aggregate delta
+  ``xbar_g - x_start_g`` once per global round.
+
+:class:`CompressionPlan` configures each link independently with one of
+``none | bf16 | int8_stochastic | topk``:
+
+* ``bf16`` -- deterministic truncation to bfloat16 (2 bytes/elem);
+* ``int8_stochastic`` -- per-row scale ``amax(|u|)/127`` + stochastic
+  rounding to int8 (1 byte/elem + one f32 scale per row), unbiased:
+  ``E[deq] = u``;
+* ``topk`` -- keep the ``ceil(topk_frac * N)`` largest-magnitude entries
+  per row (8 bytes per kept entry: value + index), biased.
+
+**Error feedback** (Seide et al. 2014; Karimireddy et al. 2019): with
+``error_feedback=True`` each link carries a residual state field (``efc``
+[G, K, ...] per client, ``efg`` [G, ...] per group). The link compresses
+``u = delta + residual`` and carries ``residual' = u - Q(u)`` forward, so
+compression error re-enters the next upload instead of accumulating as
+bias -- the difference between topk converging and stalling. Residuals
+update only for contributions that actually enter an aggregate: a
+screened or inactive client/group leaves its residual untouched.
+
+The engines apply a plan at exactly the seam ``corrupt_uploads`` /
+``screen_and_clip`` use, *before* fault injection -- so the defense
+screens the dequantized upload, and the quantize -> dequantize round
+trip runs through the batched Pallas kernels (kernels/quantize.py) when
+the spec's fusion knob is on, the jnp reference otherwise. Both paths
+are bit-identical; a disabled plan adds no state leaves and traces the
+legacy program bit-for-bit.
+
+Bytes on the wire are *modeled* (the simulation never materializes the
+int8 payload): :func:`upload_bytes` maps one model's leaves x mode to
+the per-upload wire size, and :func:`round_comm_bytes` multiplies by the
+realized upload counts -- the ``comm_bytes`` metric every engine reports
+per round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+COMPRESSION_MODES = ("none", "bf16", "int8_stochastic", "topk")
+
+# Wire-format constants for the modeled byte accounting.
+_SCALE_BYTES = 4        # one f32 scale per int8 row
+_TOPK_ENTRY_BYTES = 8   # f32 value + int32 index per kept entry
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan:
+    """Per-link upload compression config.
+
+    client_mode: compressor on the client -> group upload link.
+    group_mode: compressor on the group -> global upload link.
+    error_feedback: carry per-link residuals (``efc``/``efg`` state
+        fields) so compression error re-enters the next upload instead
+        of becoming bias. Applies to every non-``none`` link.
+    topk_frac: fraction of entries a ``topk`` link keeps per row
+        (``k = ceil(topk_frac * N)``, at least 1).
+    """
+
+    client_mode: str = "none"
+    group_mode: str = "none"
+    error_feedback: bool = True
+    topk_frac: float = 0.01
+
+    @property
+    def enabled(self) -> bool:
+        return self.client_mode != "none" or self.group_mode != "none"
+
+    @property
+    def stochastic(self) -> bool:
+        """True when either link draws rounding noise from the state rng."""
+        return "int8_stochastic" in (self.client_mode, self.group_mode)
+
+    @property
+    def ef_client(self) -> bool:
+        return self.error_feedback and self.client_mode != "none"
+
+    @property
+    def ef_group(self) -> bool:
+        return self.error_feedback and self.group_mode != "none"
+
+    def validate(self) -> "CompressionPlan":
+        for name in ("client_mode", "group_mode"):
+            mode = getattr(self, name)
+            _require(mode in COMPRESSION_MODES,
+                     f"unknown {name} {mode!r} "
+                     f"(choose from {COMPRESSION_MODES})")
+        _require(0.0 < self.topk_frac <= 1.0,
+                 f"topk_frac must be in (0, 1], got {self.topk_frac}")
+        return self
+
+
+def _leaf_roundtrip(leaf, lead_ndim: int, mode: str, frac: float,
+                    key, dispatch: str):
+    """Quantize + dequantize one [*, lead, ...] leaf, row = one upload."""
+    lead = leaf.shape[:lead_ndim]
+    rows = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    n = int(np.prod(leaf.shape[lead_ndim:], dtype=np.int64)) if \
+        leaf.ndim > lead_ndim else 1
+    u = leaf.reshape(rows, n)
+    if mode == "bf16":
+        deq = u.astype(jnp.bfloat16).astype(u.dtype)
+    elif mode == "int8_stochastic":
+        amax = jnp.max(jnp.abs(u).astype(jnp.float32), axis=1)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        noise = jax.random.uniform(key, u.shape, jnp.float32)
+        deq = kops.int8_roundtrip(u, scale, noise, mode=dispatch)
+    elif mode == "topk":
+        k = max(1, min(n, math.ceil(frac * n)))
+        thresh = jax.lax.top_k(jnp.abs(u), k)[0][:, -1]
+        deq = kops.topk_mask(u, thresh, mode=dispatch)
+    else:
+        raise ValueError(f"unknown compression mode {mode!r}")
+    return deq.reshape(leaf.shape)
+
+
+def roundtrip(delta, *, mode: str, lead_ndim: int, frac: float = 0.01,
+              key=None, dispatch: str = "ref"):
+    """Quantize + dequantize every leaf of an upload-delta pytree.
+
+    ``lead_ndim`` leading axes index independent uploads (2 for the
+    [G, K, ...] client link, 1 for the [G, ...] group link); each upload
+    row gets its own scale/threshold. ``key`` is required (and consumed
+    per leaf via ``fold_in``) only for ``int8_stochastic``; the other
+    modes are deterministic and consume no keys.
+    """
+    if mode == "none":
+        return delta
+    leaves, treedef = jax.tree.flatten(delta)
+    out = []
+    for i, leaf in enumerate(leaves):
+        lk = None if key is None else jax.random.fold_in(key, i)  # key-ok
+        out.append(_leaf_roundtrip(leaf, lead_ndim, mode, frac, lk, dispatch))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def model_leaf_sizes(params, lead_ndim: int = 2) -> tuple:
+    """One model's wire-relevant leaf geometry from a stacked state pytree:
+    ``((elements, dtype_name), ...)`` with the ``lead_ndim`` replica axes
+    stripped. Works on abstract (ShapeDtypeStruct) leaves too."""
+    out = []
+    for leaf in jax.tree.leaves(params):
+        n = int(np.prod(leaf.shape[lead_ndim:], dtype=np.int64)) if \
+            len(leaf.shape) > lead_ndim else 1
+        out.append((n, jnp.dtype(leaf.dtype).name))
+    return tuple(out)
+
+
+def upload_bytes(leaf_sizes, mode: str, topk_frac: float = 0.01) -> float:
+    """Modeled wire bytes of ONE upload (one client or one group) under
+    ``mode``, from :func:`model_leaf_sizes` geometry."""
+    total = 0
+    for n, dtype_name in leaf_sizes:
+        if mode == "none":
+            total += n * jnp.dtype(dtype_name).itemsize
+        elif mode == "bf16":
+            total += 2 * n
+        elif mode == "int8_stochastic":
+            total += n + _SCALE_BYTES
+        elif mode == "topk":
+            total += _TOPK_ENTRY_BYTES * max(1, min(n, math.ceil(
+                topk_frac * n)))
+        else:
+            raise ValueError(f"unknown compression mode {mode!r}")
+    return float(total)
+
+
+def round_comm_bytes(params, plan, n_client_uploads, n_group_uploads,
+                     lead_ndim: int = 2):
+    """Total modeled upload bytes of one global round (f32 scalar).
+
+    ``n_client_uploads`` / ``n_group_uploads`` are the realized upload
+    counts across the whole round (traced scalars or python ints): every
+    active client that *sent* bytes counts -- including uploads the
+    defense later screens -- while crashed/unsampled clients and
+    timed-out groups count zero.
+    """
+    sizes = model_leaf_sizes(params, lead_ndim)
+    on = plan is not None and plan.enabled
+    cmode = plan.client_mode if on else "none"
+    gmode = plan.group_mode if on else "none"
+    frac = plan.topk_frac if on else 0.01
+    cb = upload_bytes(sizes, cmode, frac)
+    gb = upload_bytes(sizes, gmode, frac)
+    return (jnp.asarray(n_client_uploads, jnp.float32) * cb
+            + jnp.asarray(n_group_uploads, jnp.float32) * gb)

@@ -107,6 +107,13 @@ class HFLState(NamedTuple):
                          schedule (``hfl_init(..., fault_download=True)``),
                          where the static fresh cadence no longer predicts
                          downloads; None otherwise (no pytree leaves).
+    efc:    [G, K, ...]  client-link error-feedback residual -- only
+                         carried when a ``CompressionPlan`` with error
+                         feedback compresses the client->group uploads
+                         (``hfl_init(..., ef_client=True)``); None
+                         otherwise (no pytree leaves).
+    efg:    [G, ...]     group-link error-feedback residual, likewise
+                         (``hfl_init(..., ef_group=True)``).
     """
 
     params: PyTree
@@ -118,6 +125,8 @@ class HFLState(NamedTuple):
     snap: PyTree | None = None
     glob: PyTree | None = None
     dl: jax.Array | None = None
+    efc: PyTree | None = None
+    efg: PyTree | None = None
 
 
 class RoundMetrics(NamedTuple):
@@ -128,11 +137,13 @@ class RoundMetrics(NamedTuple):
     y_norm: jax.Array        # scalar mean ||y||^2 after the round
     participation: jax.Array  # scalar fraction of clients active this round
     screened: jax.Array      # scalar count of screened contributions (0 undefended)
+    comm_bytes: jax.Array    # scalar modeled upload bytes on the wire this round
 
 
 def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None,
              *, staleness_snapshots: bool = False,
-             fault_download: bool = False) -> HFLState:
+             fault_download: bool = False, ef_client: bool = False,
+             ef_group: bool = False) -> HFLState:
     """Broadcast a single model to every client and zero the corrections.
 
     With ``cfg.use_flat_state`` the state leaves are contiguous flat
@@ -148,6 +159,11 @@ def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None,
     group-timeout faults under an async schedule need (core/faults.py);
     every group starts fresh (all ones -- matching the static
     ``fresh_mask`` at t=0).
+
+    ``ef_client`` / ``ef_group`` carry the zero-initialized per-link
+    error-feedback residuals (``efc`` [G, K, ...] / ``efg`` [G, ...])
+    that a ``CompressionPlan`` with ``error_feedback=True`` accumulates
+    (core/compression.py).
     """
     G, K = cfg.num_groups, cfg.clients_per_group
     rng = jax.random.PRNGKey(0) if rng is None else rng
@@ -177,6 +193,8 @@ def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None,
             snap=snap,
             glob=glob,
             dl=dl,
+            efc=packer.zeros((G, K)) if ef_client else None,
+            efg=packer.zeros((G,)) if ef_group else None,
         )
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0
@@ -199,6 +217,8 @@ def hfl_init(params0: PyTree, cfg: HFLConfig, rng: jax.Array | None = None,
         snap=snap,
         glob=glob,
         dl=dl,
+        efc=tu.tree_zeros_like(stacked) if ef_client else None,
+        efg=tu.tree_zeros_like(y0) if ef_group else None,
     )
 
 
@@ -247,6 +267,7 @@ def _build_global_round(
     plan=None,
     faults=None,
     defense=None,
+    compression=None,
 ) -> Callable[[HFLState, PyTree], tuple[HFLState, RoundMetrics]]:
     """The real round builder behind ``repro.api``'s simulator adapter.
 
@@ -266,6 +287,14 @@ def _build_global_round(
     ``defense`` (a ``core.faults.DefensePlan``) screens/clips uploads
     before any aggregate or correction update sees them. A disabled (or
     None) plan traces the legacy program, bit for bit.
+
+    ``compression`` (a ``core.compression.CompressionPlan``) compresses
+    the client->group and/or group->global uploads at the same seam the
+    corruption faults and the defense use -- compression first, so
+    faults corrupt and the defense screens the *dequantized* upload --
+    with optional per-link error-feedback residuals carried in the state
+    (``efc``/``efg``). A disabled (or None) plan traces the legacy
+    program, bit for bit, and consumes no rng keys.
     """
     cfg.validate()
     faults = faults if (faults is not None and faults.enabled) else None
@@ -292,6 +321,31 @@ def _build_global_round(
                 "fault injection / screened aggregation require "
                 "server_lr=1.0")
         from repro.core import faults as _flt
+    comp = compression if (compression is not None
+                           and compression.enabled) else None
+    comp_mode = comp is not None
+    if comp_mode:
+        comp.validate()
+        if plan is not None:
+            raise ValueError(
+                "compressed uploads under an async schedule are not "
+                "supported yet (the staleness merge would need per-window "
+                "residual bookkeeping; see ROADMAP)")
+        if cfg.correction_init != "zero":
+            raise ValueError(
+                "compressed uploads require correction_init='zero' (the "
+                "gradient init has no compressed analogue)")
+        if cfg.server_lr != 1.0:
+            raise ValueError("compressed uploads require server_lr=1.0")
+    # Imported unconditionally: the comm_bytes metric is reported (at the
+    # uncompressed wire size) whether or not a plan is active.
+    from repro.core import compression as _cmp
+    comp_c = comp_mode and comp.client_mode != "none"
+    comp_g = comp_mode and comp.group_mode != "none"
+    ef_c = comp_mode and comp.ef_client
+    ef_g = comp_mode and comp.ef_group
+    comp_stoch = comp_mode and comp.stochastic
+    c_noise = comp_c and comp.client_mode == "int8_stochastic"
     algo = cfg.algorithm
     use_z = algo in ("mtgc", "local_corr")
     use_y = algo in ("mtgc", "group_corr")
@@ -332,6 +386,11 @@ def _build_global_round(
     if use_fused:
         from repro.kernels import ops as kops
         fused_mode = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    # Compression rides the same fusion knob: a fused spec runs the batched
+    # quantize kernels (interpret off-TPU, so the pallas_call contract is
+    # auditable on CPU), an unfused spec the bit-identical jnp reference.
+    comp_dispatch = (("pallas" if jax.default_backend() == "tpu"
+                      else "interpret") if use_fused else "ref")
 
     def global_round(state: HFLState, batches: PyTree) -> tuple[HFLState, RoundMetrics]:
         x, z, y, dyn = state.params, state.z, state.y, state.dyn
@@ -356,6 +415,13 @@ def _build_global_round(
                 cmask = alive if cmask is None else cmask * alive
             if f_timeout:
                 tm_keep = 1.0 - fm.timeout                    # [G]
+        if comp_stoch:
+            # Compression-noise draw AFTER the participation and fault
+            # draws, off the same carried stream; deterministic modes
+            # (bf16/topk) consume no keys, so their rng stream -- and
+            # trajectory -- matches the uncompressed run's exactly.
+            ckey, rng = jax.random.split(rng)
+            kc, kg = jax.random.split(ckey)
         if (fault_mode or defended) and cmask is None:
             # Force the masked machinery on so screens/faults have a mask
             # to compose with even under full participation.
@@ -506,7 +572,7 @@ def _build_global_round(
 
         def group_round(carry, inp):
             """One group round e: local phase + group aggregation (lines 5-9)."""
-            x, z, y, dyn, anchor = carry
+            x, z, y, dyn, anchor, efc = carry
             if async_mode:
                 # Iteration liveness joins the participation mask: a
                 # straggler past its E_g rounds this window is frozen
@@ -518,19 +584,33 @@ def _build_global_round(
                       else jnp.broadcast_to(em[:, None], (G, K)))
                 n_act = jnp.maximum(jnp.sum(am), 1.0)
             else:
-                batches_eh = inp
+                if c_noise:
+                    batches_eh, ek = inp
+                else:
+                    batches_eh = inp
+                    ek = None
                 am = cmask if masked else None
                 n_act = n_active if masked else None
             x_end, losses = local_phase(x, z, y, dyn, anchor, batches_eh,
                                         am, n_act)
 
-            # Upload view: corruption faults rewrite the faulted clients'
-            # deltas at the upload boundary; the defense then screens/clips
-            # what actually enters the aggregate (clean uploads keep their
-            # exact bits either way -- where-selects, never arithmetic).
+            # Upload view: compression first -- the wire carries the
+            # dequantized delta, so corruption faults then rewrite (and
+            # the defense screens) exactly what the group server would
+            # reconstruct; clean/frozen clients keep their exact bits
+            # either way (where-selects, never arithmetic).
             x_up = x_end
+            if comp_c:
+                delta = tu.tree_sub(x_end, x)
+                u = tu.tree_add(delta, efc) if ef_c else delta
+                deq = _cmp.roundtrip(
+                    u, mode=comp.client_mode, lead_ndim=2,
+                    frac=comp.topk_frac, key=ek, dispatch=comp_dispatch)
+                x_cmp = tu.tree_add(x, deq)
+                x_up = (tu.tree_select(am, x_cmp, x_end)
+                        if am is not None else x_cmp)
             if f_corrupt:
-                x_up = _flt.corrupt_uploads(x, x_end, fm.corrupt * am, faults)
+                x_up = _flt.corrupt_uploads(x, x_up, fm.corrupt * am, faults)
             if defended:
                 x_up, ok = _flt.screen_and_clip(x, x_up, defense)
                 smask = am * ok
@@ -539,6 +619,26 @@ def _build_global_round(
             else:
                 smask = am
                 n_srv = n_act
+            # Correction-state view: z is client-side state -- the client
+            # updates it from its *own* local model plus the broadcast it
+            # receives -- so the error-feedback residual re-applied on the
+            # wire must never enter z (feeding released residual mass back
+            # through the correction destabilizes EF). Uncompressed, the
+            # wire view is the local model and the legacy program is
+            # untouched, screening and clipping included.
+            x_loc = x_up
+            if comp_c:
+                x_loc = x_end
+                if f_corrupt:
+                    x_loc = _flt.corrupt_uploads(x, x_loc, fm.corrupt * am,
+                                                 faults)
+            if ef_c:
+                # Residual carries forward only for contributions that
+                # entered the aggregate: a screened or inactive client
+                # leaves its error-feedback state untouched.
+                err = tu.tree_sub(u, deq)
+                efc = (tu.tree_select(smask, err, efc)
+                       if smask is not None else err)
 
             # Group aggregation (line 8): xbar_j = mean over (active,
             # surviving) clients (realized-count or expected-count
@@ -562,7 +662,7 @@ def _build_global_round(
             # integrates into the correction state.
             if use_z:
                 z_new = jax.tree.map(
-                    lambda zi, xe, xb: zi + (xe - xb) / (H * lr), z, x_up, xbar_b
+                    lambda zi, xe, xb: zi + (xe - xb) / (H * lr), z, x_loc, xbar_b
                 )
                 z = tu.tree_select(smask, z_new, z) if smask is not None else z_new
             # Model dissemination: every active client restarts from the
@@ -584,7 +684,7 @@ def _build_global_round(
             else:
                 x = tu.tree_select(am, xbar_b, x_up)
             out = (losses, drift, scr) if defended else (losses, drift)
-            return (x, z, y, dyn, anchor), out
+            return (x, z, y, dyn, anchor, efc), out
 
         # --- Round initialization (lines 2-4) ---------------------------
         # Group model init is implicit: params enter equal across clients.
@@ -651,26 +751,42 @@ def _build_global_round(
 
         anchor = x  # group-round-start model (FedProx / FedDyn reference)
 
+        # Error-feedback residuals ride the scan carry; disabled links
+        # carry None (zero pytree leaves -- the traced program is the
+        # legacy one, bit for bit).
+        efc = state.efc if ef_c else None
+        if ef_c and efc is None:
+            raise ValueError(
+                "client-link error feedback carries per-client residuals "
+                "in the state: build it with hfl_init(..., ef_client=True) "
+                "(repro.api.build does this for you)")
+
         # --- E group rounds (lines 5-9) ---------------------------------
         # Async windows scan the padded e_pad = max(E_g) iterations and
-        # feed the static per-group iteration mask alongside the batches.
-        scan_xs = (batches, em_all) if async_mode else batches
+        # feed the static per-group iteration mask alongside the batches;
+        # stochastic client compression feeds one noise key per group round.
+        if async_mode:
+            scan_xs = (batches, em_all)
+        elif c_noise:
+            scan_xs = (batches, jax.random.split(kc, E))
+        else:
+            scan_xs = batches
         if flat:
             # y, dyn and anchor are constant across the E group rounds:
             # close over them instead of threading parameter-sized flat
             # buffers through the scan carry (loop-invariant constants
             # instead of per-iteration carry traffic).
             def group_round_flat(carry, inp):
-                xc, zc = carry
-                (xc, zc, _, _, _), out = group_round(
-                    (xc, zc, y, dyn, anchor), inp)
-                return (xc, zc), out
+                xc, zc, ec = carry
+                (xc, zc, _, _, _, ec), out = group_round(
+                    (xc, zc, y, dyn, anchor, ec), inp)
+                return (xc, zc, ec), out
 
-            (x, z), scan_out = jax.lax.scan(
-                group_round_flat, (x, z), scan_xs)
+            (x, z, efc), scan_out = jax.lax.scan(
+                group_round_flat, (x, z, efc), scan_xs)
         else:
-            (x, z, y, dyn, _), scan_out = jax.lax.scan(
-                group_round, (x, z, y, dyn, anchor), scan_xs
+            (x, z, y, dyn, _, efc), scan_out = jax.lax.scan(
+                group_round, (x, z, y, dyn, anchor, efc), scan_xs
             )
         if defended:
             losses, drifts, scrs = scan_out
@@ -680,6 +796,30 @@ def _build_global_round(
             screened = jnp.zeros((), jnp.float32)
 
         # --- Global aggregation (line 10) --------------------------------
+        efg = state.efg if ef_g else None
+        if ef_g and efg is None:
+            raise ValueError(
+                "group-link error feedback carries per-group residuals in "
+                "the state: build it with hfl_init(..., ef_group=True) "
+                "(repro.api.build does this for you)")
+
+        def compress_group(xbar_j, gref, gact):
+            """Compress each group's report delta against its round-start
+            model -- the reference both ends of the link share -- and
+            where-select so non-reporting groups' recovered means keep
+            their exact bits. Returns (xbar_j', u, deq) for the EF carry.
+            """
+            gdelta = tu.tree_sub(xbar_j, gref)
+            ug = tu.tree_add(gdelta, efg) if ef_g else gdelta
+            deqg = _cmp.roundtrip(
+                ug, mode=comp.group_mode, lead_ndim=1,
+                frac=comp.topk_frac, key=kg if comp_stoch else None,
+                dispatch=comp_dispatch)
+            xbar_c = tu.tree_add(gref, deqg)
+            if gact is not None:
+                xbar_c = tu.tree_select(gact, xbar_c, xbar_j)
+            return xbar_c, ug, deqg
+
         if async_mode:
             # Staleness-aware merge of the groups reporting this window:
             # reports enter a weighted mean -- report cadence (rep) x policy
@@ -687,6 +827,7 @@ def _build_global_round(
             # groups neither upload nor download (see core/staleness.py).
             if masked:
                 gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
+                gup = jnp.sum(rep * gact)  # reports actually sent (pre-screen)
                 # Recovery, not estimation: active replicas of group j all
                 # hold the disseminated xbar_j from its last live iteration.
                 xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
@@ -702,6 +843,7 @@ def _build_global_round(
             else:
                 xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)
                 obs = rep
+                gup = jnp.sum(rep)
             if plan.needs_snapshots:
                 if state.snap is None or state.glob is None:
                     raise ValueError(
@@ -749,17 +891,27 @@ def _build_global_round(
             gdrift = tu.tree_masked_sq_norm(
                 tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G)), obs
             ) / jnp.maximum(jnp.sum(obs), 1.0)
-        elif masked and (fault_mode or defended):
+        elif masked and (fault_mode or defended or comp_g):
             # The legacy recovery/estimation split of tree_group_global_mean,
-            # opened up so group-timeout faults and the group-level finite
-            # screen can compose into the estimation mask between the two
-            # stages (recovery over active replicas is unchanged).
+            # opened up so group-timeout faults, the group-level finite
+            # screen and group-link compression can compose into the
+            # estimation mask between the two stages (recovery over active
+            # replicas is unchanged).
             xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
             gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
             if f_timeout:
                 # A timed-out group misses the global exchange entirely:
                 # no upload, no y update, no download -- frozen this round.
                 gact = gact * tm_keep
+            gup = jnp.sum(gact)  # reports actually sent (pre-screen)
+            if comp_g:
+                # Compression happens at the upload, i.e. after the
+                # timeout composition (a timed-out group never sent bytes,
+                # so its residual must not advance) and before the finite
+                # screen (the backstop screens the dequantized report).
+                gref = tu.tree_masked_mean(state.params, cmask, axis=1)
+                xbar_srv = xbar_j  # group server's own (pre-wire) aggregate
+                xbar_j, ug, deqg = compress_group(xbar_j, gref, gact)
             if defended and defense.screen_nonfinite:
                 gfin = _flt.all_finite_mask(xbar_j, 1)
                 screened = screened + jnp.sum(
@@ -785,15 +937,28 @@ def _build_global_round(
             # see tree_group_global_mean for the recovery/estimation split.
             xbar_j, xbar, gact = tu.tree_group_global_mean(
                 x, cmask, gmask if ht else None, gdenom)
+            gup = jnp.sum(gact)
             gdrift = tu.tree_masked_sq_norm(
                 tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G)), gact
             ) / jnp.maximum(jnp.sum(gact), 1.0)
         else:
             xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)   # [G, ...] (clients equal)
+            gup = jnp.float32(G)
+            if comp_g:
+                gref = jax.tree.map(lambda xi: xi[:, 0], state.params)
+                xbar_srv = xbar_j  # group server's own (pre-wire) aggregate
+                xbar_j, ug, deqg = compress_group(xbar_j, gref, None)
             xbar = tu.tree_mean(xbar_j, axis=0)             # [...]
             gdrift = tu.tree_sq_norm(
                 tu.tree_sub(xbar_j, tu.tree_broadcast_to_axis(xbar, 0, G))
             ) / G
+
+        if ef_g:
+            # Gated on the FINAL estimation mask (post-timeout, post-
+            # screen): only a report that entered the merge advances the
+            # group's residual.
+            errg = tu.tree_sub(ug, deqg)
+            efg = tu.tree_select(gact, errg, efg) if masked else errg
 
         # Group-global correction update (line 11):
         #   y_j += (xbar_j^{t,E} - xbar^{t+1}) / (H * E * lr)
@@ -812,8 +977,12 @@ def _build_global_round(
                     y, xbar_used, xbar_g)
                 y = tu.tree_select(obs, y_new, y)
             else:
+                # Like z above, y is group-server-side state: it updates
+                # from the group's own aggregate (pre-wire), never from
+                # the dequantized view carrying the EF residual.
+                y_src = xbar_srv if comp_g else xbar_j
                 y_new = jax.tree.map(
-                    lambda yj, xj, xg: yj + (xj - xg) / (H * E * lr), y, xbar_j, xbar
+                    lambda yj, xj, xg: yj + (xj - xg) / (H * E * lr), y, y_src, xbar
                 )
                 y = tu.tree_select(gact, y_new, y) if masked else y_new
 
@@ -885,6 +1054,17 @@ def _build_global_round(
             # groups): next round's freshness for the z re-init.
             dl = rep * any_obs
 
+        # Bytes on the wire: every upload actually sent this round counts
+        # (screened uploads spent their bytes; crashed/unsampled clients
+        # and timed-out groups sent none).
+        if async_mode:
+            n_up_c = (jnp.sum(em_all[:, :, None] * cmask[None])
+                      if masked else jnp.sum(em_all) * K)
+        else:
+            n_up_c = (E * jnp.sum(cmask) if masked
+                      else jnp.float32(E * G * K))
+        comm = _cmp.round_comm_bytes(state.params, comp, n_up_c, gup)
+
         metrics = RoundMetrics(
             loss=losses,
             client_drift=drifts,
@@ -894,10 +1074,13 @@ def _build_global_round(
             participation=(jnp.sum(cmask) / (G * K)) if masked
             else jnp.ones((), jnp.float32),
             screened=screened,
+            comm_bytes=comm,
         )
         new_state = HFLState(
             params=x, z=z, y=y, dyn=dyn, rng=rng, round=state.round + 1,
             snap=snap, glob=glob, dl=dl,
+            efc=efc if ef_c else state.efc,
+            efg=efg if ef_g else state.efg,
         )
         return new_state, metrics
 

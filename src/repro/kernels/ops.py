@@ -12,6 +12,7 @@ import jax
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import mtgc_update as mu
+from repro.kernels import quantize as qz
 from repro.kernels import ref
 from repro.kernels import rwkv6_scan as rs
 
@@ -38,6 +39,23 @@ def mtgc_update_flat(x, g, z, y, mask=None, *, lr, g_scale=1.0,
         return ref.mtgc_update_flat_ref(x, g, z, y, mask, lr, g_scale)
     return mu.mtgc_update_flat(x, g, z, y, mask, lr=lr, g_scale=g_scale,
                                interpret=(m == "interpret"), **kw)
+
+
+def int8_roundtrip(u, scale, noise, *, mode: str = "auto", **kw):
+    """Stochastic int8 quantize+dequantize of upload rows (see quantize.py)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.int8_roundtrip_ref(u, scale, noise)
+    return qz.int8_roundtrip(u, scale, noise, interpret=(m == "interpret"),
+                             **kw)
+
+
+def topk_mask(u, thresh, *, mode: str = "auto", **kw):
+    """Per-row magnitude sparsification of upload rows (see quantize.py)."""
+    m = _resolve(mode)
+    if m == "ref":
+        return ref.topk_mask_ref(u, thresh)
+    return qz.topk_mask(u, thresh, interpret=(m == "interpret"), **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, mode: str = "auto", **kw):

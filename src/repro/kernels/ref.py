@@ -28,6 +28,25 @@ def mtgc_update_flat_ref(x, g, z, y, mask=None, lr=0.1, g_scale=1.0):
     return jnp.where(mask[..., None] != 0, x_new, x)
 
 
+def int8_roundtrip_ref(u, scale, noise):
+    """Stochastic int8 quantize + dequantize. u/noise: [R, N]; scale: [R].
+
+    ``q = clip(floor(u / scale + noise), -127, 127)``, ``deq = q * scale``
+    -- same op order and f32 arithmetic as the Pallas kernel, so the two
+    are bit-exact. ``noise ~ U[0, 1)`` makes the rounding unbiased.
+    """
+    s = scale.astype(jnp.float32)[:, None]
+    q = jnp.floor(u.astype(jnp.float32) / s + noise.astype(jnp.float32))
+    q = jnp.clip(q, -127.0, 127.0)
+    return (q * s).astype(u.dtype)
+
+
+def topk_mask_ref(u, thresh):
+    """Keep entries with |u| >= per-row thresh, zero the rest. u: [R, N]."""
+    return jnp.where(jnp.abs(u) >= thresh.astype(u.dtype)[:, None], u,
+                     jnp.zeros_like(u))
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
     """Naive attention with GQA expansion. q: [B,T,H,Dh]; k/v: [B,S,Kv,Dh]."""
     B, T, H, Dh = q.shape

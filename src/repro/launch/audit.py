@@ -49,6 +49,36 @@ def _lint_roots() -> list[Path]:
     return roots
 
 
+def _check_comm_model(case, params):
+    """Modeled per-upload wire bytes of every active compressed link; an
+    error finding for any link that fails to shrink below uncompressed."""
+    import jax
+
+    from repro.analysis.invariants import Finding
+    from repro.core import compression as cmp
+
+    plan = case.spec.compression
+    stacked = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(tuple(case.spec.levels) + p.shape,
+                                       p.dtype), params)
+    sizes = cmp.model_leaf_sizes(stacked)
+    base = cmp.upload_bytes(sizes, "none")
+    model = {"uncompressed_upload_bytes": base}
+    findings = []
+    for link, mode in (("client", plan.client_mode),
+                       ("group", plan.group_mode)):
+        if mode == "none":
+            continue
+        got = cmp.upload_bytes(sizes, mode, plan.topk_frac)
+        model[f"{link}_upload_bytes"] = got
+        if got >= base:
+            findings.append(Finding(
+                case.name, "comm-budget",
+                f"{link} link mode {mode!r} models {got:.0f} bytes per "
+                f"upload, not smaller than uncompressed {base:.0f}"))
+    return model, findings
+
+
 def run_audit(fast: bool = False, case_names: list[str] | None = None,
               update: bool = False, strict_budgets: bool | None = None,
               budget_path: Path | None = None, verbose: bool = True) -> dict:
@@ -86,6 +116,14 @@ def run_audit(fast: bool = False, case_names: list[str] | None = None,
             "aliased_params": sorted(invariants.aliased_parameters(lc.hlo)),
             **measure,
         }
+        if case.spec.compressed:
+            # Modeled comm budget: every compressed link must shrink the
+            # per-upload wire bytes vs uncompressed (collective-bytes
+            # measurements are all zero on the single-device CPU CI
+            # container, so the wire model is the auditable quantity).
+            model, comm_findings = _check_comm_model(case, params)
+            programs[case.name]["comm_model"] = model
+            findings += comm_findings
 
     # -- key-discipline lint over the source tree
     roots = _lint_roots()

@@ -94,6 +94,8 @@ class ShardedHFLState(NamedTuple):
     snap: PyTree | None = None   # [G, ...] last-downloaded global per group
     glob: PyTree | None = None   # [...]    last global model (delay comp.)
     dl: jax.Array | None = None  # [G] realized downloads (timeout faults + async)
+    efc: PyTree | None = None    # [G, K, ...] client-link error-feedback residuals
+    efg: PyTree | None = None    # [G, ...]    group-link error-feedback residuals
 
 
 class ShardedMetrics(NamedTuple):
@@ -103,6 +105,7 @@ class ShardedMetrics(NamedTuple):
     y_norm: jax.Array
     participation: jax.Array  # fraction of clients active this round
     screened: jax.Array      # count of screened contributions (0 undefended)
+    comm_bytes: jax.Array    # scalar modeled upload bytes on the wire this round
 
 
 def sharded_init(params0: PyTree, G: int, K: int,
@@ -111,7 +114,9 @@ def sharded_init(params0: PyTree, G: int, K: int,
                  rng: jax.Array | None = None,
                  round_counter: bool = False,
                  staleness_snapshots: bool = False,
-                 fault_download: bool = False) -> ShardedHFLState:
+                 fault_download: bool = False,
+                 ef_client: bool = False,
+                 ef_group: bool = False) -> ShardedHFLState:
     """Stacked per-client state. ``correction_dtype`` stores z/y in a
     narrower dtype (bf16) -- a beyond-paper memory optimization; the update
     math still runs in the params' dtype. Incompatible with flat states
@@ -124,7 +129,11 @@ def sharded_init(params0: PyTree, G: int, K: int,
     snapshots (``snap``/``glob``) delay-compensated async rounds need (see
     core/staleness.py); ``fault_download`` carries the realized-download
     mask group-timeout faults under an async schedule need
-    (core/faults.py). All default off: the sync state is unchanged."""
+    (core/faults.py); ``ef_client`` / ``ef_group`` carry the per-link
+    error-feedback residuals compressed uploads accumulate
+    (core/compression.py) -- always in the params' dtype, since they
+    store upload-delta error, not corrections. All default off: the sync
+    state is unchanged."""
     rnd = jnp.zeros((), jnp.int32) if round_counter else None
     dl = jnp.ones((G,), jnp.float32) if fault_download else None
     if use_flat_state:
@@ -149,6 +158,8 @@ def sharded_init(params0: PyTree, G: int, K: int,
         return ShardedHFLState(
             params=stacked, z=packer.zeros((G, K)), y=packer.zeros((G,)),
             rng=rng, round=rnd, snap=snap, glob=glob, dl=dl,
+            efc=packer.zeros((G, K)) if ef_client else None,
+            efg=packer.zeros((G,)) if ef_group else None,
         )
     stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (G, K) + x.shape), params0)
     cdt = correction_dtype
@@ -161,8 +172,13 @@ def sharded_init(params0: PyTree, G: int, K: int,
         glob = jax.tree.map(jnp.array, params0)
         snap = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (G,) + x.shape), params0)
+    efc0 = (jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), stacked)
+            if ef_client else None)
+    efg0 = (jax.tree.map(lambda x: jnp.zeros((G,) + x.shape, x.dtype), params0)
+            if ef_group else None)
     return ShardedHFLState(params=stacked, z=z0, y=y0, rng=rng,
-                           round=rnd, snap=snap, glob=glob, dl=dl)
+                           round=rnd, snap=snap, glob=glob, dl=dl,
+                           efc=efc0, efg=efg0)
 
 
 def make_sharded_round(
@@ -242,6 +258,7 @@ def _build_sharded_round(
     plan=None,
     faults=None,
     defense=None,
+    compression=None,
 ) -> Callable[[ShardedHFLState, PyTree], tuple[ShardedHFLState, ShardedMetrics]]:
     """The real production-round builder behind ``repro.api``'s adapter.
 
@@ -263,6 +280,15 @@ def _build_sharded_round(
     faults and screen/clip uploads before aggregation -- identical
     semantics to the simulator engine's fault path (see core/faults.py).
     Disabled (or None) plans trace the legacy program, bit for bit.
+
+    ``compression`` (``core.compression.CompressionPlan``) quantizes /
+    sparsifies the upload deltas at both aggregation links, with
+    per-link error-feedback residuals carried in the state
+    (``sharded_init(..., ef_client=..., ef_group=...)``) and the modeled
+    ``comm_bytes`` metric -- identical semantics to the simulator
+    engine's compression seam (see core/compression.py): compress ->
+    corrupt -> screen, so the defense sees the dequantized bytes and a
+    screened contribution never pollutes a residual.
     """
     use_corr = algorithm == "mtgc"
     if algorithm not in ("mtgc", "hfedavg"):
@@ -299,6 +325,27 @@ def _build_sharded_round(
         defense.validate()
     if fault_mode or defended:
         from repro.core import faults as _flt
+    comp = compression if (compression is not None
+                           and compression.enabled) else None
+    comp_mode = comp is not None
+    if comp_mode:
+        comp.validate()
+        if plan is not None:
+            raise ValueError(
+                "compressed uploads under an async schedule are not "
+                "supported yet: stale reports would need their own "
+                "residual timeline (see ROADMAP)")
+    # Imported unconditionally: the comm_bytes metric is reported whether
+    # or not a plan is active.
+    from repro.core import compression as _cmp
+    comp_c = comp_mode and comp.client_mode != "none"
+    comp_g = comp_mode and comp.group_mode != "none"
+    ef_c = comp_mode and comp.ef_client
+    ef_g = comp_mode and comp.ef_group
+    comp_stoch = comp_mode and comp.stochastic
+    c_noise = comp_mode and comp.client_mode == "int8_stochastic"
+    # Compression kernels ride the same dispatch knob as the fused update.
+    comp_dispatch = fmode if use_fused_update else "ref"
     vg = jax.vmap(jax.vmap(jax.value_and_grad(loss_fn)))  # over [G, K]
     async_mode = plan is not None
     if async_mode:
@@ -349,6 +396,16 @@ def _build_sharded_round(
                 cmask = alive if cmask is None else cmask * alive
             if f_timeout:
                 tm_keep = 1.0 - fm.timeout                 # [G]
+        if comp_stoch:
+            if rng is None:
+                raise ValueError(
+                    "stochastic compression draws rounding noise from the "
+                    "state: build it with sharded_init(..., rng=key)")
+            # Compression draw AFTER the participation and fault draws,
+            # off the same carried stream: deterministic plans leave the
+            # stream untouched.
+            ckey, rng = jax.random.split(rng)
+            kc, kg = jax.random.split(ckey)
         if (fault_mode or defended) and cmask is None:
             cmask = jnp.ones((G, K), jnp.float32)
         masked = cmask is not None
@@ -515,7 +572,7 @@ def _build_sharded_round(
 
         def group_round(carry, inp):
             # batch_e leaves: [H, A, G, K, chunk, ...]
-            x, z, y = carry
+            x, z, y, efc = carry
             if async_mode:
                 # Iteration liveness joins the participation mask: a
                 # straggler past its E_g rounds this window is frozen
@@ -526,7 +583,11 @@ def _build_sharded_round(
                       else jnp.broadcast_to(em[:, None], (G, K)))
                 n_act = jnp.maximum(jnp.sum(am), 1.0)
             else:
-                batch_e = inp
+                if c_noise:
+                    batch_e, ek = inp
+                else:
+                    batch_e = inp
+                    ek = None
                 am = cmask if masked else None
                 n_act = n_active if masked else None
             x_start = x  # phase-start model: upload deltas are vs this
@@ -537,9 +598,20 @@ def _build_sharded_round(
                 (x, z, y), (losses, gnorm) = jax.lax.scan(
                     lambda c, b: local_step(c, b, am, n_act), (x, z, y),
                     batch_e)
-            # Upload view: corruption faults rewrite faulted clients'
-            # deltas at the upload boundary; the defense screens/clips what
-            # enters the aggregate (clean uploads keep their exact bits).
+            # Upload view: compression first -- the wire carries the
+            # dequantized delta, so corruption faults rewrite (and the
+            # defense screens) exactly what the group server would
+            # reconstruct; clean/frozen clients keep their exact bits
+            # either way (where-selects, never arithmetic).
+            x_end = x
+            if comp_c:
+                delta = tu.tree_sub(x, x_start)
+                u = tu.tree_add(delta, efc) if ef_c else delta
+                deq = _cmp.roundtrip(
+                    u, mode=comp.client_mode, lead_ndim=2,
+                    frac=comp.topk_frac, key=ek, dispatch=comp_dispatch)
+                x_cmp = tu.tree_add(x_start, deq)
+                x = tu.tree_select(am, x_cmp, x) if am is not None else x_cmp
             if f_corrupt:
                 x = _flt.corrupt_uploads(x_start, x, fm.corrupt * am, faults)
             if defended:
@@ -548,6 +620,25 @@ def _build_sharded_round(
                 scr = jnp.sum(am) - jnp.sum(smask)
             else:
                 smask = am
+            # Correction-state view: z is client-side state, updated from
+            # the client's *own* local model plus the received broadcast --
+            # the error-feedback residual re-applied on the wire must never
+            # enter z (released residual mass fed back through the
+            # correction destabilizes EF). Uncompressed, the wire view is
+            # the local model and the legacy program is untouched.
+            x_loc = x
+            if comp_c:
+                x_loc = x_end
+                if f_corrupt:
+                    x_loc = _flt.corrupt_uploads(x_start, x_loc,
+                                                 fm.corrupt * am, faults)
+            if ef_c:
+                # Residual carries forward only for contributions that
+                # entered the aggregate: a screened or inactive client
+                # leaves its error-feedback state untouched.
+                err = tu.tree_sub(u, deq)
+                efc = (tu.tree_select(smask, err, efc)
+                       if smask is not None else err)
             with jax.named_scope("group_agg"):
                 # Group aggregation: mean over (active, surviving) clients;
                 # under inverse_prob the masked sum divides by the expected
@@ -563,7 +654,7 @@ def _build_sharded_round(
                         zi.astype(jnp.float32)
                         + (xe.astype(jnp.float32) - xb[:, None].astype(jnp.float32)) / (H * lr)
                     ).astype(zi.dtype),
-                    z, x, xbar,
+                    z, x_loc, xbar,
                 )
                 z = tu.tree_select(smask, z_new, z) if smask is not None else z_new
             # dissemination: every active client restarts from its group
@@ -584,11 +675,26 @@ def _build_sharded_round(
             else:
                 x = tu.tree_select(am, xbar_b, x)
             out = (losses, gnorm, scr) if defended else (losses, gnorm)
-            return (x, z, y), out
+            return (x, z, y, efc), out
 
-        (x, z, y), scan_out = jax.lax.scan(
-            group_round, (x, z, y),
-            (batches, em_all) if async_mode else batches)
+        if ef_c:
+            if state.efc is None:
+                raise ValueError(
+                    "client-link error feedback carries per-client "
+                    "residuals in the state: build it with "
+                    "sharded_init(..., ef_client=True) (repro.api.build "
+                    "does this for you)")
+            efc = state.efc
+        else:
+            efc = None
+        if async_mode:
+            scan_xs = (batches, em_all)
+        elif c_noise:
+            scan_xs = (batches, jax.random.split(kc, E))
+        else:
+            scan_xs = batches
+        (x, z, y, efc), scan_out = jax.lax.scan(
+            group_round, (x, z, y, efc), scan_xs)
         if defended:
             losses, gnorms, scrs = scan_out
             screened = jnp.sum(scrs)
@@ -597,6 +703,31 @@ def _build_sharded_round(
             screened = jnp.zeros((), jnp.float32)
 
         # --- global aggregation + y update (Alg. 1 lines 10-11) ----------
+        if ef_g:
+            if state.efg is None:
+                raise ValueError(
+                    "group-link error feedback carries per-group residuals "
+                    "in the state: build it with sharded_init(..., "
+                    "ef_group=True) (repro.api.build does this for you)")
+            efg = state.efg
+        else:
+            efg = None
+
+        def compress_group(xbar_j, gref, gact):
+            """Group -> global link: compress each group's aggregate delta
+            vs its round-start reference; inactive groups keep their exact
+            (unused) report bits."""
+            gdelta = tu.tree_sub(xbar_j, gref)
+            ug = tu.tree_add(gdelta, efg) if ef_g else gdelta
+            deqg = _cmp.roundtrip(ug, mode=comp.group_mode, lead_ndim=1,
+                                  frac=comp.topk_frac,
+                                  key=kg if comp_stoch else None,
+                                  dispatch=comp_dispatch)
+            xbar_c = tu.tree_add(gref, deqg)
+            if gact is not None:
+                xbar_c = tu.tree_select(gact, xbar_c, xbar_j)
+            return xbar_c, ug, deqg
+
         if async_mode:
             # Staleness-aware merge of the groups reporting this window:
             # same semantics as the simulator engine's async path (see
@@ -604,6 +735,7 @@ def _build_sharded_round(
             # correction dtypes.
             if masked:
                 gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
+                gup = jnp.sum(rep * gact)   # reports actually sent
                 with jax.named_scope("global_agg"):
                     xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
                 if defended and defense.screen_nonfinite:
@@ -616,6 +748,7 @@ def _build_sharded_round(
             else:
                 xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)
                 obs = rep
+                gup = jnp.sum(rep)
             if plan.needs_snapshots:
                 if state.snap is None or state.glob is None:
                     raise ValueError(
@@ -652,15 +785,23 @@ def _build_sharded_round(
 
             with jax.named_scope("global_agg"):
                 xbar = jax.tree.map(_stale_merge, xbar_used)
-        elif masked and (fault_mode or defended):
-            # The recovery/estimation split opened up so timeouts and the
-            # group-level finite screen compose into the estimation mask
-            # (identical to the simulator engine's fault path).
+        elif masked and (fault_mode or defended or comp_g):
+            # The recovery/estimation split opened up so timeouts, the
+            # group-level finite screen and the compressed report compose
+            # into the estimation path (identical to the simulator
+            # engine's fault path).
             with jax.named_scope("global_agg"):
                 xbar_j = tu.tree_masked_mean(x, cmask, axis=1)
                 gact = (jnp.sum(cmask, axis=1) > 0).astype(jnp.float32)
                 if f_timeout:
                     gact = gact * tm_keep
+                gup = jnp.sum(gact)   # reports actually sent (pre-screen)
+                if comp_g:
+                    # Reference the group server and the global server
+                    # share: the participating replicas' round-start mean.
+                    gref = tu.tree_masked_mean(state.params, cmask, axis=1)
+                    xbar_srv = xbar_j  # group's own (pre-wire) aggregate
+                    xbar_j, ug, deqg = compress_group(xbar_j, gref, gact)
                 if defended and defense.screen_nonfinite:
                     gfin = _flt.all_finite_mask(xbar_j, 1)
                     screened = screened + jnp.sum(
@@ -681,10 +822,21 @@ def _build_sharded_round(
                 # builders in lockstep for the parity gates.
                 xbar_j, xbar, gact = tu.tree_group_global_mean(
                     x, cmask, gmask if ht else None, gdenom)
+            gup = jnp.sum(gact)
         else:
             xbar_j = jax.tree.map(lambda xi: xi[:, 0], x)    # clients equal
+            gup = jnp.float32(G)
+            if comp_g:
+                gref = jax.tree.map(lambda xi: xi[:, 0], state.params)
+                xbar_srv = xbar_j  # group's own (pre-wire) aggregate
+                xbar_j, ug, deqg = compress_group(xbar_j, gref, None)
             with jax.named_scope("global_agg"):
                 xbar = tu.tree_mean(xbar_j, axis=0)
+        if ef_g:
+            # Gated on the FINAL estimation mask (post timeout + screen):
+            # a screened or timed-out report never pollutes the residual.
+            errg = tu.tree_sub(ug, deqg)
+            efg = tu.tree_select(gact, errg, efg) if masked else errg
         if use_corr:
             if async_mode:
                 # y_j += (report_j - xbar) / (H * E_j * r_j * lr): a
@@ -704,12 +856,16 @@ def _build_sharded_round(
                 )
                 y = tu.tree_select(obs, y_new, y)
             else:
+                # Like z above, y is group-server-side state: it updates
+                # from the group's own aggregate (pre-wire), never from
+                # the dequantized view carrying the EF residual.
+                y_src = xbar_srv if comp_g else xbar_j
                 y_new = jax.tree.map(
                     lambda yj, xj, xg: (
                         yj.astype(jnp.float32)
                         + (xj.astype(jnp.float32) - xg.astype(jnp.float32)) / (H * E * lr)
                     ).astype(yj.dtype),
-                    y, xbar_j, xbar,
+                    y, y_src, xbar,
                 )
                 y = tu.tree_select(gact, y_new, y) if masked else y_new
         x_glob = jax.tree.map(
@@ -757,6 +913,16 @@ def _build_sharded_round(
             # groups): next round's freshness for the z re-init.
             dl = rep * any_obs
         new_round = None if state.round is None else state.round + 1
+        # Bytes on the wire: uploads *sent* this round (screened uploads
+        # were transmitted; crashed/unsampled clients and timed-out groups
+        # sent nothing), priced by core/compression.py's wire model.
+        if async_mode:
+            n_up_c = (jnp.sum(em_all[:, :, None] * cmask[None]) if masked
+                      else jnp.sum(em_all) * K)
+        else:
+            n_up_c = (E * jnp.sum(cmask) if masked
+                      else jnp.float32(E * G * K))
+        comm = _cmp.round_comm_bytes(state.params, comp, n_up_c, gup)
         metrics = ShardedMetrics(
             loss=losses,
             grad_norm=gnorms[-1, -1],
@@ -765,9 +931,12 @@ def _build_sharded_round(
             participation=(jnp.sum(cmask) / (G * K)) if masked
             else jnp.ones((), jnp.float32),
             screened=screened,
+            comm_bytes=comm,
         )
         return ShardedHFLState(params=x, z=z, y=y, rng=rng, round=new_round,
-                               snap=snap, glob=glob, dl=dl), metrics
+                               snap=snap, glob=glob, dl=dl,
+                               efc=efc if ef_c else state.efc,
+                               efg=efg if ef_g else state.efg), metrics
 
     return round_fn
 

@@ -174,15 +174,6 @@ def with_lead(params_shape: PyTree, lead_shape: tuple) -> PyTree:
     )
 
 
-def _with_lead(params_shape: PyTree, lead_shape: tuple) -> PyTree:
-    """Deprecated alias of :func:`with_lead` (kept for old callers)."""
-    import warnings
-
-    warnings.warn("sharding.specs._with_lead is deprecated; use with_lead",
-                  DeprecationWarning, stacklevel=2)
-    return with_lead(params_shape, lead_shape)
-
-
 def train_state_specs(params_shape: PyTree, axis_sizes: dict,
                       cfg: ArchConfig | None = None) -> dict:
     """PartitionSpecs for HFLTrainState(params, z, y) stacked trees."""

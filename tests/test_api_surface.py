@@ -21,7 +21,9 @@ EXPECTED_ALL = [
     "BACKEND_ALGORITHMS",
     "CLIENT_STATES",
     "CLI_FLAGS",
+    "COMPRESSION_MODES",
     "CliFlag",
+    "CompressionPlan",
     "DefensePlan",
     "Engine",
     "ExperimentSpec",
@@ -74,6 +76,7 @@ EXPECTED_SPEC_FIELDS = {
     "client_state": "stateful",
     "faults": None,
     "defense": None,
+    "compression": None,
 }
 
 EXPECTED_SCHEDULE_FIELDS = {
@@ -110,6 +113,8 @@ def test_cli_table_covers_spec_and_round_trips():
         "schedule": {f.name for f in dataclasses.fields(api.RoundSchedule)},
         "faults": {f.name for f in dataclasses.fields(api.FaultPlan)},
         "defense": {f.name for f in dataclasses.fields(api.DefensePlan)},
+        "compression": {
+            f.name for f in dataclasses.fields(api.CompressionPlan)},
     }
     for row in api.CLI_FLAGS:
         target, _, sub = row.field.partition(".")
@@ -179,6 +184,18 @@ def test_cli_table_covers_spec_and_round_trips():
         crash_rate=0.05, corrupt_rate=0.1, corrupt_kind="explode")
     assert spec_flt.defense == api.DefensePlan(screen_norm=4.0, clip_norm=2.0)
     spec_flt.validate()
+
+    # Compression flags construct the nested plan on demand; unset it
+    # stays None (the uncompressed legacy program).
+    assert spec.compression is None
+    args_cmp = ap.parse_args([
+        "--compress-client", "int8_stochastic", "--compress-group", "topk",
+        "--topk-frac", "0.05", "--error-feedback", "1"])
+    spec_cmp = api.spec_from_args(args_cmp)
+    assert spec_cmp.compression == api.CompressionPlan(
+        client_mode="int8_stochastic", group_mode="topk",
+        error_feedback=1, topk_frac=0.05)
+    spec_cmp.validate()
 
     # Overrides (entry-point pins) win over parsed values.
     pinned = api.spec_from_args(args, backend="sharded", microbatches=1,
